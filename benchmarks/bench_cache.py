@@ -1,0 +1,25 @@
+"""Figs 2/3 (§2.3 motivation): model keep-alive times under LRU host-memory
+caching and the resulting cache-miss (SSD-load) ratio."""
+from __future__ import annotations
+
+from repro.serving.tiers import LRUCache
+from repro.serving.workload import multi_model_trace
+
+
+def run(report) -> None:
+    reqs = multi_model_trace(12, per_model_rpm=1.0, duration=3 * 3600,
+                             seed=0, periodic=True)
+    cache = LRUCache(capacity=3)
+    hits = misses = 0
+    for r in reqs:
+        if r.model in cache:
+            hits += 1
+        else:
+            misses += 1
+        cache.touch(r.model, r.t_arrive)
+    lifetimes = sorted(t_out - t_in for _, t_in, t_out in cache.evictions)
+    frac15 = sum(1 for x in lifetimes if x <= 15.01) / len(lifetimes)
+    report("fig2/keepalive_p50_s", lifetimes[len(lifetimes) // 2], "")
+    report("fig2/frac_evicted_within_15s", frac15, "paper: >95%")
+    report("fig3/ssd_load_ratio", misses / (hits + misses),
+           "paper: 36-64% across traces")

@@ -1,0 +1,44 @@
+"""Live JAX micro-benchmarks (CPU wall-clock, XLA path): decode step,
+prefill, and the λScale tensor-packing path — the `us_per_call` numbers
+the harness contract asks for."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.core.blocks import pack_model
+from repro.models import init_params, make_batch
+from repro.serving import InferenceEngine
+
+
+def _time(fn, n=5) -> float:
+    fn()                      # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6   # us
+
+
+def run(report) -> None:
+    cfg = reduced(get_config("qwen2.5-3b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = InferenceEngine(cfg, params, max_len=256)
+    batch = make_batch(cfg, 4, 64)
+
+    logits, cache = eng.prefill(batch)
+    report("engine/prefill_us",
+           _time(lambda: jax.block_until_ready(eng.prefill(batch))),
+           "B=4 S=64 reduced qwen2.5")
+    tok = logits.argmax(-1).astype("int32")
+
+    def step():
+        out = eng._step(eng.params, cache, tok, cache["pos"])
+        jax.block_until_ready(out[0])
+
+    report("engine/decode_step_us", _time(step), "one token, B=4")
+    report("engine/tensor_pack_us",
+           _time(lambda: jax.block_until_ready(
+               pack_model(cfg, params, 8)[0])),
+           "pack 8 blocks (contiguous buffers)")

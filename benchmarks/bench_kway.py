@@ -1,0 +1,42 @@
+"""Fig 16: impact of k-way transmission on throughput ramp-up.
+
+λScale-Net (k=4) > λScale-Half-Reorder (k=2) > λScale-Non-Reorder (k=1);
+time-to-first-pipeline roughly halves per doubling of k (Algorithm 1)."""
+from __future__ import annotations
+
+import math
+
+from repro.core.ewl import plan_scale
+from repro.core.multicast import LinkModel
+from repro.configs import get_config
+from repro.serving.baselines import LambdaScalePolicy
+from repro.serving.simulator import Simulator
+from repro.serving.tiers import HardwareProfile
+from repro.serving.workload import constant_stress
+
+HW = HardwareProfile()
+LINK = LinkModel(bandwidth=HW.link_bw, step_overhead=HW.step_overhead)
+B = 16
+
+
+def run(report) -> None:
+    model = "llama2-13b"
+    mb = 2.0 * get_config(model).param_count()
+    # schedule-level: step at which the first execution pipeline is ready
+    for k in (1, 2, 4):
+        plan = plan_scale(16 + k, B, k)
+        ready = [r for r in plan.pipeline_ready if r >= 0]
+        t_first = min(ready) * LINK.step_time(mb / B)
+        report(f"fig16/first_pipeline_s/k{k}", t_first,
+               f"steps={min(ready)} (b/k={math.ceil(B/k)})")
+    # end-to-end: simulator ramp-up with k preloaded sources
+    reqs = constant_stress(120.0, 4.0, model=model, out_tokens=16, seed=7)
+    ts = {}
+    for k in (1, 2, 4):
+        sim = Simulator(LambdaScalePolicy(HW, max_k=k), 16, HW)
+        for i in range(k):
+            sim.cluster.occupy(i, model, 0.0)
+        ts[k] = sim.run(reqs).time_to_throughput(0.8)
+        report(f"fig16/rampup_s/k{k}", ts[k], "")
+    report("fig16/rampup_ratio_k1_over_k4", ts[1] / max(ts[4], 1e-9),
+           "paper: k=4 starts ~5x earlier (1.2s vs 0.25s)")

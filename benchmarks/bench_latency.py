@@ -1,0 +1,40 @@
+"""Figs 12/13: TTFT under load, scaling via GDR and via local cache."""
+from __future__ import annotations
+
+from repro.serving.baselines import POLICIES
+from repro.serving.simulator import Simulator
+from repro.serving.tiers import HardwareProfile
+from repro.serving.workload import constant_stress
+
+HW = HardwareProfile()
+N = 12
+
+
+def run(report) -> None:
+    model = "llama2-13b"
+    reqs = constant_stress(50.0, 5.0, model=model, out_tokens=16, seed=6)
+    res = {}
+    for name in ("lambdascale", "faasnet", "nccl", "serverlessllm"):
+        sim = Simulator(POLICIES[name](HW), N, HW)
+        sim.cluster.occupy(0, model, 0.0)     # one hot GPU replica
+        res[name] = sim.run(reqs)
+    for name, r in res.items():
+        report(f"fig12/ttft_p50_s/{name}", r.ttft_percentile(50), "")
+        report(f"fig12/ttft_p90_s/{name}", r.ttft_percentile(90), "")
+        report(f"fig12/ttft_p99_s/{name}", r.ttft_percentile(99), "")
+    lam = res["lambdascale"].ttft_percentile(90)
+    for base in ("faasnet", "nccl", "serverlessllm"):
+        report(f"fig12/p90_speedup_vs_{base}",
+               res[base].ttft_percentile(90) / lam, "")
+    # Fig 13: warm local cache on every node
+    res = {}
+    for name in ("lambdascale", "serverlessllm"):
+        sim = Simulator(POLICIES[name](HW), N, HW)
+        for nd in sim.cluster.nodes:
+            nd.host_cache.touch(model, 0.0)
+        res[name] = sim.run(reqs)
+    lam = res["lambdascale"].ttft_percentile(90)
+    sllm = res["serverlessllm"].ttft_percentile(90)
+    report("fig13/warm_ttft_p90_s/lambdascale", lam,
+           f"speedup={sllm/lam:.2f}x (paper: 1.63x)")
+    report("fig13/warm_ttft_p90_s/serverlessllm", sllm, "")

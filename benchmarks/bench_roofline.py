@@ -1,0 +1,68 @@
+"""§Roofline: per (arch × shape × mesh) roofline table from the dry-run
+JSON artifacts (results/dryrun/*.json).
+
+Prints compute/memory/collective terms (seconds/device), the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS (useful-compute ratio), and emits the
+markdown table consumed by EXPERIMENTS.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def load_records(dirname: str = DRYRUN_DIR) -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def markdown_table(recs: List[Dict]) -> str:
+    rows = ["| arch | shape | mesh | compute s | memory s | collective s |"
+            " bottleneck | MODEL/HLO flops | temp GiB/dev |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("status") == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | "
+                        f"— | — | skipped: {r['reason'][:40]} | — | — |")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"ERROR | | | | | |")
+            continue
+        ratio = (r.get("model_flops", 0.0) / r.get("n_chips", 1)
+                 / max(r["hlo_flops"], 1.0))
+        temp = r["memory"]["temp_size_in_bytes"] / 2 ** 30
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute']:.4f} | {r['t_memory']:.4f} "
+            f"| {r['t_collective']:.4f} | **{r.get('bottleneck', '?')}** "
+            f"| {ratio:.2f} | {temp:.2f} |")
+    return "\n".join(rows)
+
+
+def run(report) -> None:
+    recs = load_records()
+    if not recs:
+        report("roofline/records", 0.0,
+               "run `python -m repro.launch.dryrun --all` first")
+        return
+    ok = [r for r in recs if r.get("status") == "ok"]
+    for r in ok:
+        tag = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        report(f"roofline/{tag}/t_compute_s", r["t_compute"], "")
+        report(f"roofline/{tag}/t_memory_s", r["t_memory"], "")
+        report(f"roofline/{tag}/t_collective_s", r["t_collective"],
+               f"bottleneck={r.get('bottleneck', '?')}")
+    from collections import Counter
+    bn = Counter(r.get("bottleneck", "?") for r in ok)
+    for k, v in bn.items():
+        report(f"roofline/bottleneck_count/{k}", float(v), "")
+    report("roofline/records", float(len(recs)),
+           f"ok={len(ok)} skipped="
+           f"{sum(r.get('status') == 'skipped' for r in recs)}")

@@ -1,0 +1,67 @@
+"""Figs 9/10/11: throughput scaling during a load spike.
+
+Fig 9  — scaling via GDR with k ∈ {1,2,4} vs baselines.
+Fig 10 — scaling via local host-memory cache vs ServerlessLLM.
+Fig 11 — cold start (model only in one node's host memory), k = 1.
+
+Metric: ramp-up time — when sustained token throughput first reaches 80 %
+of its steady-state peak (the paper reads the same off its Fig 9 curves).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.serving.baselines import (FaaSNetPolicy, LambdaScalePolicy,
+                                     NCCLPolicy, ServerlessLLMPolicy)
+from repro.serving.simulator import Simulator
+from repro.serving.tiers import HardwareProfile
+from repro.serving.workload import constant_stress
+
+HW = HardwareProfile()
+N_NODES = 12
+
+
+def _spike(model: str, rps: float = 120.0, dur: float = 4.0):
+    return constant_stress(rps, dur, model=model, out_tokens=16, seed=5)
+
+
+def ramp(policy, reqs, **kw) -> float:
+    sim = Simulator(policy, N_NODES, HW, **kw)
+    res = sim.run(reqs)
+    return res.time_to_throughput(0.8)
+
+
+def run(report) -> None:
+    for model in ("llama2-7b", "llama2-13b", "llama2-70b"):
+        reqs = _spike(model)
+        # ---- Fig 9: GDR scaling with k sources preloaded in GPUs -------
+        for k in (1, 2, 4):
+            pol = LambdaScalePolicy(HW, max_k=k)
+            sim = Simulator(pol, N_NODES, HW)
+            # seed k GPU-resident replicas
+            for i in range(k):
+                sim.cluster.occupy(i, model, 0.0)
+            t = sim.run(reqs).time_to_throughput(0.8)
+            report(f"fig9/rampup_s/{model}/lambdascale_k{k}", t, "")
+        for name, pol in (("faasnet", FaaSNetPolicy(HW)),
+                          ("nccl", NCCLPolicy(HW)),
+                          ("serverlessllm", ServerlessLLMPolicy(HW))):
+            report(f"fig9/rampup_s/{model}/{name}", ramp(pol, reqs), "")
+        # ---- Fig 11: cold start (host-mem replica on ONE node) ---------
+        lam_cold = ramp(LambdaScalePolicy(HW, max_k=1), reqs)
+        sllm_cold = ramp(ServerlessLLMPolicy(HW), reqs)
+        report(f"fig11/coldstart_rampup_s/{model}/lambdascale", lam_cold,
+               f"speedup_vs_serverlessllm="
+               f"{sllm_cold/max(lam_cold,1e-9):.2f}x")
+        report(f"fig11/coldstart_rampup_s/{model}/serverlessllm",
+               sllm_cold, "")
+    # ---- Fig 10: scaling via local cache (warm host memory) -----------
+    model = "llama2-13b"
+    reqs = _spike(model)
+    for name, pol_cls in (("lambdascale", LambdaScalePolicy),
+                          ("serverlessllm", ServerlessLLMPolicy)):
+        sim = Simulator(pol_cls(HW), N_NODES, HW)
+        for nd in sim.cluster.nodes:        # model warm everywhere
+            nd.host_cache.touch(model, 0.0)
+        t = sim.run(reqs).time_to_throughput(0.8)
+        report(f"fig10/warm_rampup_s/{model}/{name}", t, "")

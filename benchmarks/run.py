@@ -1,0 +1,58 @@
+"""Benchmark harness: one module per paper table/figure + roofline.
+
+Prints ``name,value,derived`` CSV lines.  Modules:
+  fig2/3   bench_cache          (§2.3 motivation: keep-alive, miss ratio)
+  fig7/8   bench_multicast      (multicast latency, block-arrival CDF)
+  fig9-11  bench_throughput     (ramp-up via GDR / local cache / cold)
+  fig12/13 bench_latency        (TTFT under stress)
+  fig14/15 bench_trace          (BurstGPT: GPU cost + TTFT CDF)
+  fig16    bench_kway           (k-way transmission)
+  fig17    bench_optimizations  (pre-alloc / tensor-pack / host-mem RDMA)
+  fig18    bench_num_blocks     (block-count elbow)
+  roofline bench_roofline       (dry-run derived roofline table)
+  engine   bench_engine         (live JAX us_per_call micro-benches)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (bench_cache, bench_engine, bench_kway,
+                        bench_latency, bench_multicast, bench_num_blocks,
+                        bench_optimizations, bench_roofline, bench_trace,
+                        bench_throughput)
+
+MODULES = {
+    "cache": bench_cache, "multicast": bench_multicast,
+    "throughput": bench_throughput, "latency": bench_latency,
+    "trace": bench_trace, "kway": bench_kway,
+    "optimizations": bench_optimizations, "num_blocks": bench_num_blocks,
+    "roofline": bench_roofline, "engine": bench_engine,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmarks")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(MODULES)
+
+    print("name,value,derived")
+
+    def report(name: str, value: float, derived: str = "") -> None:
+        print(f"{name},{value:.6g},{derived}")
+        sys.stdout.flush()
+
+    t0 = time.time()
+    for name in names:
+        mod = MODULES[name]
+        t1 = time.time()
+        mod.run(report)
+        report(f"_meta/{name}/seconds", time.time() - t1, "")
+    report("_meta/total_seconds", time.time() - t0, "")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Live execute-while-load timeline (paper Fig 4/9 in miniature).
+
+A 2→8 scale-out of a reduced model with REAL serving at every multicast
+step: watch capability evolve from "sources only" through λPipe execution
+pipelines to mode-switched local replicas — every response's logits
+checked against the source model.
+
+Run:  PYTHONPATH=src python examples/execute_while_load_live.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.models import forward, init_params, make_batch
+from repro.serving.cluster import LiveCluster
+
+cfg = dataclasses.replace(reduced(get_config("qwen2.5-3b")), n_layers=8)
+params = init_params(cfg, jax.random.PRNGKey(0))
+batch = make_batch(cfg, 2, 32)
+ref = forward(cfg, params, batch, moe_cf=None)["logits"]
+
+lc = LiveCluster(cfg, params, n_nodes=8, n_blocks=8, k=2)
+print(f"2→8 scale-out, {lc.n_blocks} blocks, "
+      f"{lc.plan.total_steps} multicast steps "
+      f"({lc.step_time*1e3:.1f} ms/step at 50 GB/s)\n")
+
+while True:
+    r = lc.serve(batch["tokens"])
+    ready = len(lc.ready_pipelines())
+    done = len(lc.complete_nodes)
+    if r is None:
+        status = "queueing (no capacity)"
+    else:
+        err = float(jnp.max(jnp.abs(r["logits"] - ref)))
+        where = (f"node {r['node']}" if r["mode"] == "local"
+                 else f"nodes {r['nodes']}")
+        status = f"served via {r['mode']:<8s} on {where}  |Δ|={err:.1e}"
+    print(f"step {lc.step_idx:2d}  t={lc.clock*1e3:6.1f}ms  "
+          f"pipelines={ready}  complete={done}  {status}")
+    if not lc.step():
+        break
+
+r = lc.serve(batch["tokens"])
+print(f"\nafter completion: all 8 nodes serve locally "
+      f"(mode switch §4.4); final check "
+      f"|Δ|={float(jnp.max(jnp.abs(r['logits'] - ref))):.1e}")

@@ -1,0 +1,22 @@
+# λScale's primary contribution: λPipe — adaptive model multicast
+# (binomial pipeline + k-way transmission), dynamically constructed
+# execution pipelines, execute-while-load, and mode switching.
+from repro.core.blocks import (block_assignment, flatten_params, pack_block,
+                               pack_model, unflatten_params, unpack_block,
+                               unpack_model)
+from repro.core.ewl import ScalePlan, plan_scale
+from repro.core.mode_switch import recompute_cache, redistribute
+from repro.core.multicast import (LinkModel, Schedule, binomial_schedule,
+                                  kway_block_orders, kway_schedule,
+                                  optimal_steps)
+from repro.core.pipeline import (ExecutionPipeline, Stage,
+                                 generate_pipelines, pipeline_ready_step)
+
+__all__ = [
+    "Schedule", "binomial_schedule", "kway_schedule", "kway_block_orders",
+    "optimal_steps", "LinkModel", "ExecutionPipeline", "Stage",
+    "generate_pipelines", "pipeline_ready_step", "ScalePlan", "plan_scale",
+    "pack_block", "unpack_block", "pack_model", "unpack_model",
+    "flatten_params", "unflatten_params", "block_assignment",
+    "recompute_cache", "redistribute",
+]

@@ -1,0 +1,248 @@
+"""Model block partitioning + tensor packing (λScale §5).
+
+A *model block* is a contiguous range of transferable units — encoder
+layers, trunk layers, with the embedding absorbed into the first block and
+the head/final-norm into the last.  ``pack_block`` consolidates every tensor
+of a block into ONE contiguous byte buffer (the paper's "tensor packing"
+optimization: a block becomes a single multicast payload instead of
+per-tensor sends); ``unpack_block`` restores the tensors bit-exactly.
+
+Layout helpers convert between the model's scan-stacked parameter pytree
+(``repro.models.model``) and a flat per-layer dict keyed by unit path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+PAD_ALIGN = 128     # pad packed buffers to multiples (TPU-friendly lanes)
+
+
+# ---------------------------------------------------------------- flatten
+def _tree_items(prefix: str, tree) -> List[Tuple[str, jnp.ndarray]]:
+    out = []
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in flat:
+        key = prefix + jax.tree_util.keystr(path)
+        out.append((key, leaf))
+    return out
+
+
+def flatten_params(cfg: ModelConfig, params) -> Dict[str, jnp.ndarray]:
+    """Flatten into unit-major dict: globals, enc layers, trunk layers."""
+    flat: Dict[str, jnp.ndarray] = {}
+    for name in ("embed", "pos_embed", "patch_proj", "head"):
+        if name in params:
+            flat[f"@embed/{name}"] = params[name] if name != "head" else \
+                params[name]
+    if "head" in params:
+        flat["@head/head"] = flat.pop("@embed/head")
+    for k, v in _tree_items("@head/final_norm", params["final_norm"]):
+        flat[k] = v
+    if "enc" in params:
+        flat["@embed/enc_pos"] = params["enc"]["pos"]
+        for k, v in _tree_items("@head/enc_final_norm",
+                                params["enc"]["final_norm"]):
+            flat[k] = v
+        n_enc = jax.tree.leaves(params["enc"]["layers"])[0].shape[0]
+        for i in range(n_enc):
+            sub = jax.tree.map(lambda t: t[i], params["enc"]["layers"])
+            for k, v in _tree_items(f"@enclayer{i:04d}/", sub):
+                flat[k] = v
+    reps, plen = cfg.n_pattern_reps, cfg.pattern_len
+    for li in range(cfg.n_layers):
+        if li < reps * plen:
+            r, p = divmod(li, plen)
+            sub = jax.tree.map(lambda t: t[r], params["trunk"][p])
+        else:
+            sub = params["rem"][li - reps * plen]
+        for k, v in _tree_items(f"@layer{li:04d}/", sub):
+            flat[k] = v
+    return flat
+
+
+def unflatten_params(cfg: ModelConfig, flat: Dict[str, jnp.ndarray]):
+    """Inverse of flatten_params (stacks trunk layers back)."""
+    params: Dict = {}
+    for name in ("embed", "pos_embed", "patch_proj"):
+        if f"@embed/{name}" in flat:
+            params[name] = flat[f"@embed/{name}"]
+    if "@head/head" in flat:
+        params["head"] = flat["@head/head"]
+
+    def collect(prefix: str) -> Dict[str, jnp.ndarray]:
+        return {k[len(prefix):]: v for k, v in flat.items()
+                if k.startswith(prefix)}
+
+    def build(sub: Dict[str, jnp.ndarray]):
+        """Rebuild nested dict from keystr paths like ['attn']['wq']."""
+        tree: Dict = {}
+        for k, v in sub.items():
+            keys = re.findall(r"\['([^']+)'\]", k)
+            cur = tree
+            for kk in keys[:-1]:
+                cur = cur.setdefault(kk, {})
+            cur[keys[-1]] = v
+        return tree
+
+    params["final_norm"] = build(collect("@head/final_norm"))
+    reps, plen = cfg.n_pattern_reps, cfg.pattern_len
+    trunk = []
+    for p in range(plen):
+        per_rep = [build(collect(f"@layer{r * plen + p:04d}/"))
+                   for r in range(reps)]
+        trunk.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep))
+    params["trunk"] = tuple(trunk)
+    params["rem"] = tuple(build(collect(f"@layer{li:04d}/"))
+                          for li in range(reps * plen, cfg.n_layers))
+    if "@embed/enc_pos" in flat:
+        n_enc = cfg.n_enc_layers
+        per = [build(collect(f"@enclayer{i:04d}/")) for i in range(n_enc)]
+        params["enc"] = {
+            "pos": flat["@embed/enc_pos"],
+            "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *per),
+            "final_norm": build(collect("@head/enc_final_norm")),
+        }
+    return params
+
+
+# ----------------------------------------------------------- block ranges
+def _unit_of(key: str) -> str:
+    return key.split("/")[0]
+
+
+def unit_order(cfg: ModelConfig) -> List[str]:
+    units = ["@embed"]
+    units += [f"@enclayer{i:04d}" for i in range(
+        cfg.n_enc_layers if cfg.family == "encdec" else 0)]
+    units += [f"@layer{i:04d}" for i in range(cfg.n_layers)]
+    units += ["@head"]
+    return units
+
+
+def block_assignment(cfg: ModelConfig, n_blocks: int) -> List[List[str]]:
+    """Contiguous unit ranges; @embed merges into block 0, @head into the
+    last block."""
+    units = unit_order(cfg)
+    inner = units[1:-1]
+    n_blocks = min(n_blocks, max(1, len(inner)))
+    per = len(inner) / n_blocks
+    blocks = []
+    for i in range(n_blocks):
+        lo, hi = round(i * per), round((i + 1) * per)
+        blocks.append(inner[lo:hi])
+    blocks[0] = [units[0]] + blocks[0]
+    blocks[-1] = blocks[-1] + [units[-1]]
+    return blocks
+
+
+# ------------------------------------------------------------ pack/unpack
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    key: str
+    shape: tuple
+    dtype: str
+    offset: int      # byte offset in the packed buffer
+    nbytes: int
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    block_id: int
+    tensors: tuple          # of TensorSpec
+    nbytes: int             # payload bytes (unpadded)
+
+
+def _to_bytes(x: jnp.ndarray) -> jnp.ndarray:
+    u8 = jax.lax.bitcast_convert_type(x, jnp.uint8)
+    return u8.reshape(-1)
+
+
+def _from_bytes(buf: jnp.ndarray, spec: TensorSpec) -> jnp.ndarray:
+    dt = jnp.dtype(spec.dtype)
+    raw = jax.lax.dynamic_slice(buf, (spec.offset,), (spec.nbytes,))
+    itemsize = dt.itemsize
+    arr = raw.reshape(spec.shape + ((itemsize,) if itemsize > 1 else ()))
+    if itemsize > 1:
+        arr = jax.lax.bitcast_convert_type(arr, dt)
+    else:
+        arr = jax.lax.bitcast_convert_type(arr.reshape(spec.shape), dt)
+    return arr.reshape(spec.shape)
+
+
+def pack_block(flat: Dict[str, jnp.ndarray], keys: Sequence[str],
+               block_id: int = 0) -> Tuple[jnp.ndarray, BlockSpec]:
+    """Pack the named tensors into one contiguous uint8 buffer."""
+    specs, parts, off = [], [], 0
+    for k in sorted(keys):
+        b = _to_bytes(flat[k])
+        n = b.shape[0]
+        specs.append(TensorSpec(k, tuple(flat[k].shape), str(flat[k].dtype),
+                                off, n))
+        parts.append(b)
+        off += n
+    pad = (-off) % PAD_ALIGN
+    if pad:
+        parts.append(jnp.zeros((pad,), jnp.uint8))
+    buf = jnp.concatenate(parts) if parts else jnp.zeros((0,), jnp.uint8)
+    return buf, BlockSpec(block_id, tuple(specs), off)
+
+
+def unpack_block(buf: jnp.ndarray, spec: BlockSpec) -> Dict[str, jnp.ndarray]:
+    return {ts.key: _from_bytes(buf, ts) for ts in spec.tensors}
+
+
+def pack_model(cfg: ModelConfig, params, n_blocks: int
+               ) -> Tuple[jnp.ndarray, List[BlockSpec]]:
+    """Pack a whole model into a (n_blocks, P) uint8 array (P = max padded
+    block size) + per-block specs.  This is the multicast payload."""
+    flat = flatten_params(cfg, params)
+    assign = block_assignment(cfg, n_blocks)
+    bufs, specs = [], []
+    for bi, units in enumerate(assign):
+        keys = [k for k in flat if _unit_of(k) in set(units)]
+        buf, spec = pack_block(flat, keys, bi)
+        bufs.append(buf)
+        specs.append(spec)
+    P = max(b.shape[0] for b in bufs)
+    P += (-P) % PAD_ALIGN
+    stacked = jnp.stack([jnp.pad(b, (0, P - b.shape[0])) for b in bufs])
+    return stacked, specs
+
+
+def unpack_model(cfg: ModelConfig, stacked: jnp.ndarray,
+                 specs: Sequence[BlockSpec]):
+    flat: Dict[str, jnp.ndarray] = {}
+    for bi, spec in enumerate(specs):
+        flat.update(unpack_block(stacked[bi], spec))
+    return unflatten_params(cfg, flat)
+
+
+def block_bytes(cfg: ModelConfig, n_blocks: int, bytes_per_param: int = 2
+                ) -> float:
+    """Analytic per-block payload size (simulator)."""
+    return cfg.param_count() * bytes_per_param / n_blocks
+
+
+def elbow_block_count(model_bytes: float, n_nodes: int, link,
+                      candidates: Sequence[int] = (4, 8, 12, 16, 24, 32, 48),
+                      tolerance: float = 0.03) -> int:
+    """Paper §4.2 'selective block sizes': pick the elbow of T(b) —
+    the smallest b whose end-to-end time is within `tolerance` of the
+    best candidate (Fig 18 finds 16 for Llama-13B on 8 nodes)."""
+    from repro.core.multicast import optimal_steps
+    times = {b: optimal_steps(n_nodes, b) * link.step_time(model_bytes / b)
+             for b in candidates}
+    best = min(times.values())
+    for b in sorted(candidates):
+        if times[b] <= best * (1 + tolerance):
+            return b
+    return max(candidates)

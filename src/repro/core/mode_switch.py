@@ -1,0 +1,61 @@
+"""λPipe mode switching (§4.4).
+
+Once multicast completes, every node holds a full replica and switches from
+pipelined (cross-node) execution to local execution.  In-flight requests of
+an execution pipeline are redistributed evenly across its member nodes and
+each node *recomputes* the KV/recurrent cache for its assigned requests
+from the tokens generated so far — the paper argues recomputation beats the
+all-to-all transfer of live KV caches.
+
+For recurrent families (SSM/hybrid) "KV recomputation" generalizes to
+state recomputation: replaying prompt+generated tokens through the scan —
+same code path (``forward(build_cache=True)``).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import forward
+
+
+def redistribute(request_ids: Sequence, nodes: Sequence[int]
+                 ) -> Dict[int, List]:
+    """Evenly assign in-flight requests to nodes (round-robin)."""
+    out: Dict[int, List] = {n: [] for n in nodes}
+    for i, rid in enumerate(request_ids):
+        out[nodes[i % len(nodes)]].append(rid)
+    return out
+
+
+def recompute_cache(cfg: ModelConfig, params, batch: Dict, *,
+                    cache_len: int):
+    """Rebuild the decode cache from prompt + generated tokens.
+
+    batch["tokens"]: (B, S_so_far) — everything processed so far.  Returns
+    a cache positioned to continue decoding at S_so_far, bit-compatible
+    with having decoded with a live cache all along (tested)."""
+    out = forward(cfg, params, batch, build_cache=True, cache_len=cache_len,
+                  moe_cf=None)
+    return out["cache"]
+
+
+def recompute_cost(cfg: ModelConfig, tokens_so_far: int,
+                   batch: int, peak_flops: float) -> float:
+    """Seconds of recompute per node (prefill FLOPs over the generated
+    prefix), used by the simulator to price a mode switch."""
+    flops = 2.0 * cfg.active_param_count() * tokens_so_far * batch
+    return flops / peak_flops
+
+
+def kv_transfer_cost(cfg: ModelConfig, tokens_so_far: int, batch: int,
+                     n_nodes: int, link_bandwidth: float) -> float:
+    """Alternative the paper rejects: all-to-all of live KV caches."""
+    n_attn = sum(1 for i in range(cfg.n_layers)
+                 if cfg.mixer_of(i).startswith("attn"))
+    kv_bytes = (2 * n_attn * cfg.n_kv_heads * cfg.d_head *
+                tokens_so_far * batch * 2)
+    # each node must fetch the shards of the other n-1 nodes
+    return kv_bytes * (n_nodes - 1) / n_nodes / link_bandwidth

@@ -1,0 +1,80 @@
+"""Partial model execution over block-resident parameters.
+
+During execute-while-load a node holds only SOME model blocks (unpacked
+from their wire buffers).  These helpers run the embedding, a contiguous
+layer range, or the head directly from the flat unit-keyed dict that
+``core.blocks`` produces — the execution primitive behind λPipe's
+execution-pipeline stages (§4.3): stage i runs
+``apply_layer_range(flat_i, x, lo_i, hi_i)`` and hands the activation to
+the next stage.
+
+Decoder-only families (dense / moe / hybrid / ssm / vlm-text); the enc-dec
+family pipelines through the same trunk helpers but is not exposed in the
+live-cluster demo.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as mm
+
+
+def _build(sub: Dict[str, jnp.ndarray]):
+    tree: Dict = {}
+    for k, v in sub.items():
+        keys = re.findall(r"\['([^']+)'\]", k)
+        cur = tree
+        for kk in keys[:-1]:
+            cur = cur.setdefault(kk, {})
+        cur[keys[-1]] = v
+    return tree
+
+
+def _unit(flat: Dict[str, jnp.ndarray], prefix: str
+          ) -> Dict[str, jnp.ndarray]:
+    return {k[len(prefix):]: v for k, v in flat.items()
+            if k.startswith(prefix)}
+
+
+def embed_from_flat(cfg: ModelConfig, flat, tokens, positions):
+    """Requires the '@embed' unit. tokens: (B,S)."""
+    emb = flat["@embed/embed"]
+    params = {"embed": emb}
+    if "@embed/pos_embed" in flat:
+        params["pos_embed"] = flat["@embed/pos_embed"]
+    if "@embed/patch_proj" in flat:
+        params["patch_proj"] = flat["@embed/patch_proj"]
+    return mm._embed_tokens(cfg, params, tokens, positions)
+
+
+def apply_layer_range(cfg: ModelConfig, flat, x, lo: int, hi: int,
+                      positions):
+    """Apply trunk layers [lo, hi). Requires '@layerNNNN' units."""
+    for li in range(lo, hi):
+        sub = _unit(flat, f"@layer{li:04d}/")
+        assert sub, f"layer {li} not resident"
+        lp = _build(sub)
+        entry = cfg.layer_pattern[li % cfg.pattern_len]
+        x, _, _ = mm._apply_layer_full(lp, x, cfg, entry, positions,
+                                       moe_cf=None)
+    return x
+
+
+def head_from_flat(cfg: ModelConfig, flat, x):
+    """Requires the '@head' unit (+ '@embed' if embeddings are tied)."""
+    params = {"final_norm": _build(_unit(flat, "@head/final_norm"))}
+    if cfg.tie_embeddings:
+        params["embed"] = flat["@embed/embed"]
+    else:
+        params["head"] = flat["@head/head"]
+    return mm._unembed(cfg, params, x)
+
+
+def layer_range_of_units(units) -> tuple:
+    """(lo, hi) trunk-layer range covered by a block's unit list."""
+    ls = [int(u[6:]) for u in units if u.startswith("@layer")]
+    return (min(ls), max(ls) + 1) if ls else (0, 0)

@@ -1,0 +1,76 @@
+"""TPU-native execution of λPipe multicast schedules.
+
+The paper moves model blocks between GPU nodes with one-sided RDMA/GDR; the
+TPU-idiomatic equivalent is a sequence of ``jax.lax.ppermute``
+(collective-permute over ICI) steps inside ``shard_map`` along a ``node``
+mesh axis.  Each schedule step becomes exactly one ppermute whose
+(source, target) pairs are the step's transfers; because the schedule is
+static, every node knows at trace time which block index it sends and which
+it stores — no block ids travel on the wire.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.multicast import Schedule
+
+
+def _step_tables(schedule: Schedule):
+    """Per step: (send_blk[node], recv_blk[node], perm pairs)."""
+    N = schedule.n_nodes
+    tables = []
+    for step in schedule.steps:
+        send = np.full((N,), -1, np.int32)
+        recv = np.full((N,), -1, np.int32)
+        perm = []
+        for src, dst, blk in step:
+            send[src] = blk
+            recv[dst] = blk
+            perm.append((src, dst))
+        tables.append((jnp.asarray(send), jnp.asarray(recv), perm))
+    return tables
+
+
+def multicast(blocks: jnp.ndarray, schedule: Schedule, mesh,
+              initial: Dict[int, Sequence[int]], axis: str = "node"
+              ) -> jnp.ndarray:
+    """Execute a multicast schedule with real data movement.
+
+    blocks: (N, n_blocks, P) per-node block buffers — source rows hold real
+    data, destination rows are scratch (e.g. zeros).  Returns the post-
+    multicast (N, n_blocks, P) array in which every node holds every block.
+    """
+    N, n_blocks, _ = blocks.shape
+    assert N == schedule.n_nodes
+    tables = _step_tables(schedule)
+
+    def spmd(local):                      # local: (1, n_blocks, P)
+        buf = local[0]
+        for send, recv, perm in tables:
+            idx = jax.lax.axis_index(axis)
+            sblk = send[idx]
+            payload = buf[jnp.maximum(sblk, 0)]
+            got = jax.lax.ppermute(payload, axis, perm)
+            rblk = recv[idx]
+            safe = jnp.maximum(rblk, 0)
+            new = jnp.where(rblk >= 0, got, buf[safe])
+            buf = buf.at[safe].set(new)
+        return buf[None]
+
+    fn = jax.shard_map(spmd, mesh=mesh, in_specs=P(axis), out_specs=P(axis))
+    return fn(blocks)
+
+
+def multicast_reference(blocks: np.ndarray, schedule: Schedule) -> np.ndarray:
+    """Pure-numpy oracle with identical semantics (for tests)."""
+    out = np.array(blocks)
+    for step in schedule.steps:
+        staged = [(dst, blk, out[src, blk].copy()) for src, dst, blk in step]
+        for dst, blk, data in staged:
+            out[dst, blk] = data
+    return out

@@ -1,0 +1,87 @@
+"""GPipe-style pipelined forward over a ``node`` mesh axis — the JAX
+realization of λPipe's 2-D execution pipelines (§4.3).
+
+Dimension 1 of the paper's 2-D pipelining is the stage (block) axis: each
+node applies its contiguous range of trunk layers and hands the activation
+to the next stage with ``lax.ppermute``.  Dimension 2 is the in-flight
+microbatch axis: while stage s works on microbatch m, stage s-1 already
+works on m+1.  Embedding and head are replicated (multicast first in
+λScale; see DESIGN.md) so every stage runs an identical program — SPMD.
+
+Used by the execute-while-load demo, the mode-switch tests, and the
+pipeline-parallel dry-run configuration.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import model as mm
+
+
+def stage_params_from_trunk(cfg: ModelConfig, params, n_stages: int):
+    """Reshape the scan-stacked trunk into (n_stages, layers_per_stage, ...).
+
+    Requires pattern_len == 1, no remainder, and n_layers % n_stages == 0
+    (λScale uses equal-size blocks; the paper's models are uniform)."""
+    assert cfg.pattern_len == 1 and cfg.n_remainder_layers == 0, \
+        "pipelined runner requires a uniform trunk"
+    assert cfg.n_layers % n_stages == 0
+    per = cfg.n_layers // n_stages
+    return jax.tree.map(
+        lambda t: t.reshape((n_stages, per) + t.shape[1:]),
+        params["trunk"][0])
+
+
+def pipelined_forward(cfg: ModelConfig, params, batch: Dict, mesh,
+                      n_microbatches: int, axis: str = "node"):
+    """Forward pass with the trunk pipelined across ``axis``.
+
+    batch["tokens"]: (B, S) with B % n_microbatches == 0.
+    Returns logits (B, S, vocab), numerically equal to
+    ``repro.models.forward`` (property-tested on forced host devices)."""
+    n_stages = mesh.shape[axis]
+    stage_trunk = stage_params_from_trunk(cfg, params, n_stages)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    M = n_microbatches
+    assert B % M == 0
+    mb = B // M
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (mb, S))
+    embeds = (params["embed"][tokens]).reshape(M, mb, S, cfg.d_model)
+    entry = cfg.layer_pattern[0]
+
+    def apply_stage(stage_layers, x):
+        def body(xc, lp):
+            xc, _, _ = mm._apply_layer_full(lp, xc, cfg, entry, positions,
+                                            moe_cf=None)
+            return xc, None
+        x, _ = jax.lax.scan(body, x, stage_layers)
+        return x
+
+    def spmd(stage_layers, embeds):
+        # stage_layers leaves: (1, per, ...) — this node's block
+        local = jax.tree.map(lambda t: t[0], stage_layers)
+        idx = jax.lax.axis_index(axis)
+        buf = jnp.zeros((mb, S, cfg.d_model), embeds.dtype)
+        outs = jnp.zeros((M, mb, S, cfg.d_model), embeds.dtype)
+        fwd = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+        for t in range(M + n_stages - 1):
+            if t < M:
+                buf = jnp.where(idx == 0, embeds[t], buf)
+            y = apply_stage(local, buf)
+            if t >= n_stages - 1:
+                keep = jnp.where(idx == n_stages - 1, y, jnp.zeros_like(y))
+                outs = outs.at[t - (n_stages - 1)].set(keep)
+            buf = jax.lax.ppermute(y, axis, fwd)
+        # only the last stage wrote non-zeros; make the result replicated
+        return jax.lax.psum(outs, axis)
+
+    fn = jax.shard_map(spmd, mesh=mesh,
+                       in_specs=(P(axis), P()), out_specs=P())
+    hidden = fn(stage_trunk, embeds).reshape(B, S, cfg.d_model)
+    return mm._unembed(cfg, params, hidden)

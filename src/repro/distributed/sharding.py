@@ -1,0 +1,184 @@
+"""Divisibility-guarded sharding rules for params, optimizer state, batches
+and decode caches on the ("data", "model") / ("pod", "data", "model")
+production meshes.
+
+Weights: the last dimension divisible by the model-axis size is
+tensor-parallel ("model"); one further divisible dimension is
+FSDP/ZeRO-sharded over "data" (this is what lets 400B-param optimizer state
+fit 16 GB/chip — see EXPERIMENTS.md §Dry-run).  Dimensions that don't
+divide (whisper's 51866 vocab, qwen2-moe's 60 experts, starcoder2's 24
+heads) fall back to the next dimension or replication — never a crash.
+
+Scan-stacked trunk leaves carry a leading (reps,) dimension that is always
+replicated; per-layer rules apply to the trailing dims.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _weight_spec(shape, mesh, *, skip_leading: int = 0,
+                 fsdp: bool = True) -> P:
+    model_n = mesh.shape["model"]
+    data_n = mesh.shape["data"]
+    spec = [None] * len(shape)
+    dims = [d for d in range(len(shape) - 1, skip_leading - 1, -1)]
+    model_dim: Optional[int] = None
+    for d in dims:
+        if shape[d] % model_n == 0 and shape[d] >= model_n:
+            spec[d] = "model"
+            model_dim = d
+            break
+    if fsdp:
+        for d in dims:
+            if d == model_dim:
+                continue
+            if shape[d] % data_n == 0 and shape[d] >= data_n:
+                spec[d] = "data"
+                break
+    return P(*spec)
+
+
+def _is_stacked_path(path) -> bool:
+    """Trunk/enc-layer leaves have a leading stacking dim."""
+    keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+    return ("trunk" in keys) or ("layers" in keys and "enc" in keys)
+
+
+# second-of-pair projection matrices: Megatron row-parallel (model axis on
+# the CONTRACTION dim) so the producing column-parallel matmul's output
+# feeds them without an activation all-gather — only one all-reduce of the
+# (B,S,d) result per pair.  "wo" (attention out-proj) joins the set only
+# when the head count divides the model axis — otherwise the q/k/v
+# activations are dh-sharded and pairing wo triggers GSPMD reshard
+# cascades (measured on llama4, EXPERIMENTS.md §Perf iteration 1.4).
+_ROW_PARALLEL = {"w_out", "w_down"}
+
+
+def param_shardings(cfg: ModelConfig, mesh, params_shapes, *,
+                    fsdp: bool = True, moe_expert_parallel: bool = False,
+                    tp_pairs: bool = False, pure_fsdp: bool = False):
+    """PartitionSpec tree matching a params (or grads / opt-moment) tree.
+
+    moe_expert_parallel (§Perf): place the EXPERT dim of MoE banks on the
+    "model" axis (8 experts/chip for llama4) so dispatch becomes an
+    all-to-all of token activations instead of cross-model gathers of the
+    (E, C, d) buffers.
+    tp_pairs (§Perf): Megatron column/row pairing — wo/w_out/w_down shard
+    "model" on their input (contraction) dim."""
+    model_n = mesh.shape["model"]
+    data_n = mesh.shape["data"]
+    all_axes = tuple(a for a in mesh.axis_names)
+    all_n = 1
+    for a in all_axes:
+        all_n *= mesh.shape[a]
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        if len(shape) <= 1:
+            return P()                       # norms, biases, 1-d gates
+        skip = 1 if _is_stacked_path(path) else 0
+        if len(shape) - skip <= 1:
+            return P()
+        if pure_fsdp:
+            # ZeRO-3: no tensor parallelism — every weight sharded over
+            # ALL mesh axes on its first divisible dim; gathered whole per
+            # layer, gradients reduce-scattered.
+            spec = [None] * len(shape)
+            for d in range(skip, len(shape)):
+                if shape[d] % all_n == 0 and shape[d] >= all_n:
+                    spec[d] = all_axes
+                    return P(*spec)
+            for d in range(skip, len(shape)):
+                if shape[d] % data_n == 0 and shape[d] >= data_n:
+                    spec[d] = "data"
+                    return P(*spec)
+            return P(*spec)
+        keys = [str(getattr(k, "key", "")) for k in path]
+        is_moe_bank = any(k in ("w_in", "w_gate", "w_out") for k in keys) \
+            and "moe" in keys and len(shape) - skip == 3
+        if (moe_expert_parallel and is_moe_bank
+                and shape[skip] % model_n == 0):
+            spec = [None] * len(shape)
+            spec[skip] = "model"             # experts on model axis
+            for d in range(len(shape) - 1, skip, -1):
+                if shape[d] % data_n == 0 and shape[d] >= data_n:
+                    spec[d] = "data"         # FSDP within expert
+                    break
+            return P(*spec)
+        if (tp_pairs and keys and any(k in _ROW_PARALLEL for k in keys)
+                and len(shape) - skip == 2):
+            in_dim, out_dim = len(shape) - 2, len(shape) - 1
+            spec = [None] * len(shape)
+            if shape[in_dim] % model_n == 0 and shape[in_dim] >= model_n:
+                spec[in_dim] = "model"
+                if fsdp and shape[out_dim] % data_n == 0:
+                    spec[out_dim] = "data"
+                return P(*spec)
+        return _weight_spec(shape, mesh, skip_leading=skip, fsdp=fsdp)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shapes)
+
+
+def batch_shardings(mesh, batch_shapes):
+    """Shard the batch dimension over ("pod","data") when divisible."""
+    daxes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dsize = int(np.prod([mesh.shape[a] for a in daxes]))
+
+    def rule(leaf):
+        if leaf.ndim == 0 or leaf.shape[0] % dsize != 0:
+            return P()
+        return P(daxes, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(rule, batch_shapes)
+
+
+def cache_shardings(cfg: ModelConfig, mesh, cache_shapes,
+                    mode: str = "dh"):
+    """Decode caches: batch over data axes; model-axis placement per
+    ``mode``:
+      "dh"  — baseline: last divisible trailing dim (usually head_dim)
+      "seq" — §Perf: shard the KV *sequence* dim (dim 2 of
+              (reps, B, W, kv, dh)) over "model"; cache-update scatters
+              stay local (no involuntary resharding) and attention does a
+              cheap cross-shard softmax reduction instead.
+    Trunk cache leaves are (reps, B, ...)."""
+    daxes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dsize = int(np.prod([mesh.shape[a] for a in daxes]))
+    model_n = mesh.shape["model"]
+
+    def rule(path, leaf):
+        keys = [getattr(k, "key", None) for k in path]
+        stacked = "trunk" in keys
+        b_dim = 1 if stacked else 0
+        if leaf.ndim <= b_dim:
+            return P()
+        spec = [None] * leaf.ndim
+        if leaf.shape[b_dim] % dsize == 0:
+            spec[b_dim] = daxes
+        if mode == "seq":
+            # (…, B, W, kv, dh) / xk (…, B, Se, kv, dh) / pos (…, B, W)
+            d = b_dim + 1
+            if (leaf.ndim > d
+                    and leaf.shape[d] % model_n == 0
+                    and leaf.shape[d] >= model_n):
+                spec[d] = "model"
+                return P(*spec)
+        for d in range(leaf.ndim - 1, b_dim, -1):
+            if leaf.shape[d] % model_n == 0 and leaf.shape[d] >= model_n:
+                spec[d] = "model"
+                break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shapes)
+
+
+def to_named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

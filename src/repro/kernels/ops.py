@@ -1,0 +1,14 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True because this container is CPU-only; on a
+real TPU pass interpret=False (the kernels are written against TPU tiling
+constraints: 128-lane blocks, MXU-aligned matmul dims, VMEM scratch
+accumulators).
+"""
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mlstm_chunk import mlstm_chunkwise
+from repro.kernels.rglru_scan import rglru_scan
+
+__all__ = ["flash_attention", "decode_attention", "rglru_scan",
+           "mlstm_chunkwise"]

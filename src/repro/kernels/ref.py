@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window=None):
+    """q: (B,H,S,dh), k/v: (B,KVH,S,dh) -> (B,H,S,dh)."""
+    B, H, S, dh = q.shape
+    KVH = k.shape[1]
+    g = H // KVH
+    qg = q.reshape(B, KVH, g, S, dh).astype(jnp.float32) / math.sqrt(dh)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k.astype(jnp.float32))
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, S, dh).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, spos, pos, *, window=None):
+    """Single-token decode against a (ring) KV cache.
+
+    q: (B,H,dh); k/v: (B,W,KVH,dh); spos: (B,W) stored positions (-1 empty);
+    pos: (B,) current positions.  Returns (B,H,dh)."""
+    B, H, dh = q.shape
+    KVH = k.shape[2]
+    g = H // KVH
+    qg = q.reshape(B, KVH, g, dh).astype(jnp.float32) / math.sqrt(dh)
+    s = jnp.einsum("bkgd,bwkd->bkgw", qg, k.astype(jnp.float32))
+    valid = (spos >= 0) & (spos <= pos[:, None])
+    if window is not None:
+        valid &= pos[:, None] - spos < window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgw,bwkd->bkgd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, dh).astype(q.dtype)
+
+
+def rglru_scan_ref(a, b, h0):
+    """Linear recurrence h_t = a_t * h_{t-1} + b_t (all (B,S,d), h0 (B,d))."""
+    B, S, d = a.shape
+    a0 = jnp.concatenate([jnp.ones((B, 1, d), a.dtype), a], 1)
+    b0 = jnp.concatenate([h0[:, None, :], b], 1)
+
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(op, (a0, b0), axis=1)
+    return h[:, 1:]
+
+
+def mlstm_chunkwise_ref(q, k, v, i_pre, f_pre, *, chunk: int = 128):
+    """Chunk-scan oracle built on the model's own _mlstm_chunk
+    (repro.models.xlstm), which is itself validated against stepwise
+    decode in tests/test_decode_equivalence.py."""
+    from repro.models.xlstm import _mlstm_chunk
+    B, H, S, dh = q.shape
+    L = min(chunk, S)
+    state = (jnp.zeros((B, H, dh, dh)), jnp.zeros((B, H, dh)),
+             jnp.full((B, H), -1e30))
+    hs = []
+    for c in range(S // L):
+        sl = slice(c * L, (c + 1) * L)
+        h, state = _mlstm_chunk(q[:, :, sl], k[:, :, sl], v[:, :, sl],
+                                i_pre[:, :, sl], f_pre[:, :, sl], state)
+        hs.append(h)
+    return jnp.concatenate(hs, axis=2)

@@ -1,0 +1,5 @@
+# Launchers. NOTE: do not import repro.launch.dryrun from library code —
+# importing it sets XLA_FLAGS for 512 host devices (dry-run only).
+from repro.launch.mesh import make_production_mesh, make_test_mesh
+
+__all__ = ["make_production_mesh", "make_test_mesh"]

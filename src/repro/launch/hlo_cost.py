@@ -1,0 +1,221 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so any
+scan-over-layers model under-reports FLOPs/bytes/collectives by ~n_layers×.
+This walker parses ``compiled.as_text()``, builds the computation call
+graph, and multiplies per-computation costs by the loops'
+``known_trip_count`` (nested loops multiply).
+
+Per traversed op it accumulates:
+  * flops      — dot ops: 2 · |output| · |contracted dims| (from the lhs
+                 shape + lhs_contracting_dims); convolutions are absent in
+                 these models.
+  * bytes      — output bytes of every materializing op (parameters,
+                 tuples, GTEs, constants and control-flow ops excluded):
+                 a "bytes touched" proxy for the HBM roofline term.
+  * collective bytes/counts — by op type (all-gather, all-reduce,
+                 reduce-scatter, all-to-all, collective-permute), critical
+                 because GSPMD puts most collectives INSIDE the scan body.
+
+Costs are per device: the module text is the per-device SPMD program.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+                "c64": 8, "c128": 16}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\(")
+_DOT_OPERANDS_RE = re.compile(r"dot\(\s*%?([\w.\-]+),\s*%?([\w.\-]+)")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$")
+_CALLEE_RE = re.compile(r"(?:body|condition|to_apply|branch_computations|"
+                        r"called_computations)=\{?%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_LHS_B_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+
+_SKIP_BYTES_OPS = {"parameter", "tuple", "get-tuple-element", "constant",
+                   "while", "conditional", "call", "bitcast", "iota",
+                   "after-all", "partition-id", "replica-id"}
+
+# Outputs at least this big that have a same-shaped operand are treated as
+# in-place updates (XLA aliases dynamic-update-slice fusions into the
+# destination buffer): we charge only the non-aliased operands (the update
+# slice) for reads+writes instead of the whole buffer.  Without this, a
+# scan-carried KV cache counts its FULL size once per layer.
+_ALIAS_THRESHOLD = 1 << 26      # 64 MiB
+
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+_REF_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shapes(shape_str: str) -> List[Tuple[str, List[int]]]:
+    return [(dt, [int(x) for x in dims.split(",") if x])
+            for dt, dims in _SHAPE_RE.findall(shape_str)]
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _shapes(shape_str):
+        if dt in _DTYPE_BYTES:
+            total += math.prod(dims) * _DTYPE_BYTES[dt] if dims else \
+                _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        m = _COMP_RE.match(line)
+        if m and not line.startswith(" "):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _dot_flops(line: str, out_shape: str, symtab: Dict[str, str]) -> float:
+    """2 · |out| · K, K = product of contracted dims of the lhs operand.
+
+    Operands are references (%name); their shapes come from the
+    computation-local symbol table of defining lines."""
+    out = _shapes(out_shape)
+    mC = _LHS_C_RE.search(line)
+    mOps = _DOT_OPERANDS_RE.search(line)
+    if not out or mC is None or mOps is None:
+        return 0.0
+    lhs_shape_str = symtab.get(mOps.group(1))
+    if lhs_shape_str is None:
+        return 0.0
+    lhs = _shapes(lhs_shape_str)
+    if not lhs:
+        return 0.0
+    contract = [int(x) for x in mC.group(1).split(",") if x]
+    K = math.prod(lhs[0][1][d] for d in contract) if contract else 1
+    n_out = math.prod(out[0][1]) if out[0][1] else 1
+    return 2.0 * n_out * K
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps = _split_computations(text)
+        self._memo: Dict[str, dict] = {}
+        entry = None
+        for line in text.splitlines():
+            if line.startswith("ENTRY"):
+                m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+                entry = m.group(1) if m else None
+        if entry is None:   # fall back: last computation
+            entry = list(self.comps)[-1]
+        self.entry = entry
+        self.totals = self._walk(entry)
+
+    def _local_cost(self, name: str) -> dict:
+        flops = 0.0
+        bytes_ = 0.0
+        coll = {c: 0.0 for c in COLLECTIVES}
+        coll_n = {c: 0 for c in COLLECTIVES}
+        children: List[Tuple[str, float]] = []
+        lines = self.comps.get(name, ())
+        symtab: Dict[str, str] = {}
+        for line in lines:
+            m = _OP_RE.match(line)
+            if m:
+                symtab[m.group(1)] = m.group(2)
+        for line in lines:
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            out_shape, op = m.group(2), m.group(3)
+            base = op.replace("-start", "")
+            if op == "while":
+                mt = _TRIP_RE.search(line)
+                trips = float(mt.group(1)) if mt else 1.0
+                mc = re.search(r"body=%?([\w.\-]+)", line)
+                if mc:
+                    children.append((mc.group(1), trips))
+                mcond = re.search(r"condition=%?([\w.\-]+)", line)
+                if mcond:
+                    children.append((mcond.group(1), trips))
+                continue
+            if op in ("call", "conditional"):
+                for mc in _CALLEE_RE.finditer(line):
+                    children.append((mc.group(1), 1.0))
+                continue
+            if op == "dot":
+                flops += _dot_flops(line, out_shape, symtab)
+            if base in COLLECTIVES and not op.endswith("-done"):
+                coll[base] += _shape_bytes(out_shape)
+                coll_n[base] += 1
+            if op not in _SKIP_BYTES_OPS and not op.endswith("-done"):
+                ob = _shape_bytes(out_shape)
+                if ob >= _ALIAS_THRESHOLD and op in ("fusion", "copy",
+                                                     "dynamic-update-slice",
+                                                     "scatter", "select"):
+                    mops = _OPERANDS_RE.search(line[line.find(op + "("):])
+                    names = _REF_RE.findall(mops.group(1)) if mops else []
+                    shapes = [symtab.get(n) for n in names]
+                    if any(sh is not None and _shape_bytes(sh) == ob
+                           for sh in shapes):
+                        small = sum(_shape_bytes(sh) for sh in shapes
+                                    if sh is not None
+                                    and _shape_bytes(sh) != ob)
+                        bytes_ += 2 * small          # read + write of slice
+                        continue
+                bytes_ += ob
+        return {"flops": flops, "bytes": bytes_, "coll": coll,
+                "coll_n": coll_n, "children": children}
+
+    def _walk(self, name: str, depth: int = 0) -> dict:
+        if depth > 50:
+            return {"flops": 0.0, "bytes": 0.0,
+                    "coll": {c: 0.0 for c in COLLECTIVES},
+                    "coll_n": {c: 0 for c in COLLECTIVES}}
+        if name in self._memo:
+            loc = self._memo[name]
+        else:
+            loc = self._local_cost(name)
+            self._memo[name] = loc
+        out = {"flops": loc["flops"], "bytes": loc["bytes"],
+               "coll": dict(loc["coll"]), "coll_n": dict(loc["coll_n"])}
+        for child, mult in loc["children"]:
+            sub = self._walk(child, depth + 1)
+            out["flops"] += mult * sub["flops"]
+            out["bytes"] += mult * sub["bytes"]
+            for c in COLLECTIVES:
+                out["coll"][c] += mult * sub["coll"][c]
+                out["coll_n"][c] += int(mult * sub["coll_n"][c])
+        return out
+
+    # ------------------------------------------------------------ access
+    @property
+    def flops(self) -> float:
+        return self.totals["flops"]
+
+    @property
+    def bytes(self) -> float:
+        return self.totals["bytes"]
+
+    @property
+    def collective_bytes(self) -> Dict[str, float]:
+        return self.totals["coll"]
+
+    @property
+    def collective_counts(self) -> Dict[str, int]:
+        return self.totals["coll_n"]

@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state.  The single-pod mesh is 16×16 = 256 chips (("data", "model"));
+multi-pod adds a leading "pod" axis: 2×16×16 = 512 chips.  The dry-run
+launcher force-creates 512 host devices BEFORE importing jax (see
+dryrun.py); everything else in the repo sees the real single device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(n_nodes: int = 8, axis: str = "node"):
+    """1-D mesh for λPipe multicast / pipeline tests on forced host
+    devices."""
+    return jax.make_mesh(
+        (n_nodes,), (axis,),
+        axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

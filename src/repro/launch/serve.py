@@ -1,0 +1,77 @@
+"""Serving driver: bring up a reduced model behind the inference engine and
+replay a batched request stream, reporting TTFT / throughput — optionally
+comparing λScale's execute-while-load scaling against the baselines on the
+calibrated simulator.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --requests 32
+  PYTHONPATH=src python -m repro.launch.serve --sim --model llama2-13b \
+      --nodes 12 --rps 50
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import init_params, make_batch
+from repro.serving import InferenceEngine
+from repro.serving.baselines import POLICIES
+from repro.serving.simulator import Simulator
+from repro.serving.tiers import HardwareProfile
+from repro.serving.workload import constant_stress
+
+
+def run_engine(args) -> None:
+    cfg = reduced(get_config(args.arch), d_model=args.d_model, vocab=2048)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = InferenceEngine(cfg, params, max_len=args.prompt + args.tokens)
+    batch = make_batch(cfg, args.requests, args.prompt,
+                       jax.random.PRNGKey(1))
+    t0 = time.time()
+    out = eng.generate(batch, args.tokens)
+    out.block_until_ready()
+    dt = time.time() - t0
+    total = args.requests * args.tokens
+    print(f"arch={cfg.arch_id}: served {args.requests} requests × "
+          f"{args.tokens} tokens in {dt:.2f}s "
+          f"({total/dt:.1f} tok/s on CPU); output shape {out.shape}")
+
+
+def run_sim(args) -> None:
+    hw = HardwareProfile()
+    reqs = constant_stress(args.rps, args.duration, model=args.model,
+                           out_tokens=16, seed=0)
+    print(f"simulating {len(reqs)} requests on {args.nodes} nodes "
+          f"({hw.name} profile)")
+    for name in ("lambdascale", "serverlessllm", "faasnet", "nccl", "ideal"):
+        res = Simulator(POLICIES[name](hw), args.nodes, hw).run(reqs)
+        print(f"  {name:14s} p50={res.ttft_percentile(50):6.3f}s "
+              f"p90={res.ttft_percentile(90):6.3f}s "
+              f"gpu_time={res.gpu_seconds:8.1f}s")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sim", action="store_true",
+                    help="simulator comparison instead of the live engine")
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt", type=int, default=64)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--model", default="llama2-13b")
+    ap.add_argument("--nodes", type=int, default=12)
+    ap.add_argument("--rps", type=float, default=50.0)
+    ap.add_argument("--duration", type=float, default=5.0)
+    args = ap.parse_args()
+    if args.sim:
+        run_sim(args)
+    else:
+        run_engine(args)
+
+
+if __name__ == "__main__":
+    main()

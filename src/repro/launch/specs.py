@@ -1,0 +1,157 @@
+"""ShapeDtypeStruct input specs for every (architecture × input shape)
+combination — weak-type-correct, shardable, zero allocation.
+
+``build_dryrun(cfg, shape, mesh)`` returns (fn, args, in_shardings) ready
+for ``jax.jit(fn, in_shardings=...).lower(*args)``:
+
+  train_4k     → train_step(params, opt_state, batch)   (loss+grad+AdamW)
+  prefill_32k  → prefill(params, batch) -> logits + built cache
+  decode_32k   → serve_step(params, cache, tokens, positions)  (ONE token)
+  long_500k    → serve_step with windowed/recurrent caches only
+                 (sub-quadratic gate: see supports_long / DESIGN.md)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.distributed.sharding import (batch_shardings, cache_shardings,
+                                        param_shardings, to_named)
+from jax.sharding import PartitionSpec
+from repro.models import decode_step, forward, init_cache, init_params
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.train_loop import make_train_step
+
+
+def supports_long(cfg: ModelConfig) -> bool:
+    """True iff 524k-token decode keeps bounded state: recurrent mixers
+    and/or windowed attention (incl. the llama4 global-layer fallback,
+    DESIGN.md §8)."""
+    if cfg.family == "encdec":
+        return False
+    for ent in cfg.layer_pattern:
+        mixer = ent.split(":")[0]
+        if mixer in ("attn", "attn_full") and cfg.window is None:
+            return False
+    return True
+
+
+def applicable(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and not supports_long(cfg):
+        return False, "full-attention arch: 524k decode is quadratic (skip)"
+    return True, ""
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq_len: int,
+                dtype=jnp.bfloat16):
+    s_text = seq_len - (cfg.n_patches or 0)
+    b = {"tokens": jax.ShapeDtypeStruct((batch, s_text), jnp.int32)}
+    if cfg.n_patches:
+        b["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_patches, cfg.d_model), dtype)
+    if cfg.family == "encdec":
+        b["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.enc_seq, cfg.d_model), dtype)
+    return b
+
+
+def build_dryrun(cfg: ModelConfig, shape: InputShape, mesh, *,
+                 dtype=jnp.bfloat16, fsdp: bool = True,
+                 opts: dict | None = None):
+    """Returns (fn, args, in_shardings) for jit/lower.
+
+    opts — §Perf hillclimbing knobs (see EXPERIMENTS.md §Perf):
+      prefill_moe_cf: float|None   capacity factor for prefill MoE dispatch
+                                   (None = drop-free; baseline)
+      cache_shard:    "dh"|"seq"   decode-cache model-axis placement
+      decode_argmax:  bool         serve_step returns sampled token ids
+                                   instead of full (B, vocab) logits
+      moe_ep:         bool         expert-parallel MoE bank sharding
+      pad_heads:      bool         pad n_heads / n_kv_heads up to the next
+                                   multiple of the model-axis size (zero-
+                                   padded wq/wo rows — output-preserving;
+                                   standard Megatron practice). Kills the
+                                   partial-score all-reduce for archs whose
+                                   head count doesn't divide the mesh.
+    """
+    opts = opts or {}
+    if opts.get("pad_heads"):
+        m = mesh.shape["model"]
+        def _up(x):
+            return ((x + m - 1) // m) * m
+        cfg = dataclasses.replace(
+            cfg, n_heads=_up(cfg.n_heads),
+            n_kv_heads=cfg.n_kv_heads if cfg.n_kv_heads == cfg.n_heads
+            else _up(cfg.n_kv_heads))
+    params_sh = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0), dtype))
+    pure = opts.get("pure_fsdp", False)
+    p_spec = to_named(mesh, param_shardings(
+        cfg, mesh, params_sh, fsdp=fsdp,
+        moe_expert_parallel=opts.get("moe_ep", False),
+        tp_pairs=opts.get("tp_pairs", False), pure_fsdp=pure))
+
+    if shape.kind == "train":
+        opt_sh = jax.eval_shape(init_opt_state, params_sh)
+        o_spec = to_named(mesh, param_shardings(
+            cfg, mesh, opt_sh, fsdp=fsdp,
+            moe_expert_parallel=opts.get("moe_ep", False),
+            tp_pairs=opts.get("tp_pairs", False), pure_fsdp=pure))
+        batch = batch_specs(cfg, shape.global_batch, shape.seq_len, dtype)
+        if pure:
+            axes = tuple(mesh.axis_names)
+            b_spec = to_named(mesh, jax.tree.map(
+                lambda leaf: PartitionSpec(axes, *([None] * (leaf.ndim - 1))),
+                batch))
+        else:
+            b_spec = to_named(mesh, batch_shardings(mesh, batch))
+        opt_cfg = AdamWConfig()
+        fn = make_train_step(
+            cfg, opt_cfg,
+            grad_shardings=p_spec if opts.get("grad_constraint") else None)
+        return fn, (params_sh, opt_sh, batch), (p_spec, o_spec, b_spec)
+
+    if shape.kind == "prefill":
+        batch = batch_specs(cfg, shape.global_batch, shape.seq_len, dtype)
+        b_spec = to_named(mesh, batch_shardings(mesh, batch))
+
+        moe_cf = opts.get("prefill_moe_cf", None)
+
+        def prefill(params, b):
+            return forward(cfg, params, b, build_cache=True,
+                           cache_len=shape.seq_len, moe_cf=moe_cf)
+
+        return prefill, (params_sh, batch), (p_spec, b_spec)
+
+    # decode: ONE new token against a seq_len cache
+    B = shape.global_batch
+    cache_sh = jax.eval_shape(
+        lambda: init_cache(cfg, B, shape.seq_len, dtype))
+    c_spec = to_named(mesh, cache_shardings(
+        cfg, mesh, cache_sh, mode=opts.get("cache_shard", "dh")))
+    toks = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+    daxes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dsize = 1
+    for a in daxes:
+        dsize *= mesh.shape[a]
+    tp_spec = to_named(
+        mesh, P(daxes) if B % dsize == 0 else P())
+
+    argmax = opts.get("decode_argmax", False)
+
+    def serve_step(params, cache, tokens, positions):
+        logits, new_cache = decode_step(cfg, params, cache, tokens,
+                                        positions)
+        if argmax:
+            return jnp.argmax(logits, -1).astype(jnp.int32), new_cache
+        return logits, new_cache
+
+    return serve_step, (params_sh, cache_sh, toks, pos), \
+        (p_spec, c_spec, tp_spec, tp_spec)

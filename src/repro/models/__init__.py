@@ -1,0 +1,5 @@
+from repro.models.model import (decode_step, forward, init_cache,
+                                init_params, make_batch)
+
+__all__ = ["init_params", "forward", "decode_step", "init_cache",
+           "make_batch"]

@@ -1,0 +1,285 @@
+"""Shared neural-net layers: norms, RoPE, attention (full / sliding-window /
+cross / decode-with-cache), dense & gated FFNs.
+
+All functions are pure; parameters are plain pytrees of jnp arrays. Attention
+over long sequences is query-chunked (lax.scan over query blocks) so the
+materialized score tensor stays at (chunk × kv_span) — the XLA-level analogue
+of the Pallas flash kernel in ``repro.kernels.flash_attention`` (which is the
+TPU-target implementation of the same computation).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- init utils
+def dense_init(key, d_in, d_out, dtype):
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------- norms
+def init_norm(cfg, dtype):
+    p = {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm == "ln":
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def apply_norm(p, x, cfg):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rms":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + cfg.norm_eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope_dim(cfg) -> int:
+    d = int(cfg.d_head * cfg.rope_pct)
+    return d - d % 2
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, cfg) -> jnp.ndarray:
+    """x: (B, S, H, dh); positions: (B, S) int32."""
+    rd = rope_dim(cfg)
+    if rd == 0:
+        return x
+    half = rd // 2
+    freqs = cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs          # (B,S,half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    xr, xp = x[..., :rd], x[..., rd:]
+    x1, x2 = xr[..., :half], xr[..., half:]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return jnp.concatenate([rot.astype(x.dtype), xp], -1)
+
+
+# ----------------------------------------------------------------- attention
+def init_attention(cfg, key, dtype) -> Params:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, h * dh, dtype),
+        "wk": dense_init(ks[1], d, kv * dh, dtype),
+        "wv": dense_init(ks[2], d, kv * dh, dtype),
+        "wo": dense_init(ks[3], h * dh, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dtype)
+        p["bk"] = jnp.zeros((kv * dh,), dtype)
+        p["bv"] = jnp.zeros((kv * dh,), dtype)
+    if cfg.out_bias:
+        p["bo"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def _qkv(p, x, cfg, positions, rope: bool):
+    B, S, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, h, dh)
+    k = k.reshape(B, S, kv, dh)
+    v = v.reshape(B, S, kv, dh)
+    if rope:
+        q = apply_rope(q, positions, cfg)
+        k = apply_rope(k, positions, cfg)
+    return q, k, v
+
+
+def _gqa_scores(q, k):
+    """q: (B,Sq,kv,g,dh), k: (B,Sk,kv,dh) -> (B,kv,g,Sq,Sk) fp32."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _sdpa(q, k, v, mask, cfg):
+    """Masked softmax attention. q:(B,Sq,H,dh) k/v:(B,Sk,kv,dh),
+    mask:(B,Sq,Sk) bool (True = attend). Returns (B,Sq,H,dh)."""
+    B, Sq, H, dh = q.shape
+    kv = k.shape[2]
+    g = H // kv
+    qg = q.reshape(B, Sq, kv, g, dh) / math.sqrt(dh)
+    s = _gqa_scores(qg, k)                              # (B,kv,g,Sq,Sk)
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v)
+    return o.reshape(B, Sq, H, dh)
+
+
+def full_attention(p, x, cfg, positions, *, causal=True, rope=True,
+                   q_chunk: int = 1024, window: Optional[int] = None,
+                   kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None):
+    """Full (or cross) attention over a whole sequence, query-chunked.
+
+    Returns (out, (k, v)) where k/v are the full-sequence keys/values
+    (for building decode caches)."""
+    B, S, _ = x.shape
+    if kv_override is not None:
+        h, dh = cfg.n_heads, cfg.d_head
+        q = x @ p["wq"]
+        if cfg.qkv_bias:
+            q = q + p["bq"]
+        q = q.reshape(B, S, h, dh)
+        k, v = kv_override
+        causal = False
+    else:
+        q, k, v = _qkv(p, x, cfg, positions, rope)
+    Sk = k.shape[1]
+    nchunk = max(1, S // q_chunk) if S % q_chunk == 0 else 1
+    if nchunk <= 1:
+        kpos = positions if kv_override is None else \
+            jnp.broadcast_to(jnp.arange(Sk)[None], (B, Sk))
+        mask = (positions[:, :, None] >= kpos[:, None, :]) if causal else \
+            jnp.ones((B, S, Sk), bool)
+        if causal and window is not None:
+            mask &= positions[:, :, None] - kpos[:, None, :] < window
+        o = _sdpa(q, k, v, mask, cfg)
+    else:
+        qc = q.reshape(B, nchunk, q_chunk, cfg.n_heads, cfg.d_head)
+        pc = positions.reshape(B, nchunk, q_chunk)
+
+        def body(_, xs):
+            qi, pi = xs                                   # (B,C,H,dh),(B,C)
+            kpos = jnp.broadcast_to(jnp.arange(Sk)[None], (B, Sk))
+            if causal:
+                m = pi[:, :, None] >= kpos[:, None, :]
+                if window is not None:
+                    m &= pi[:, :, None] - kpos[:, None, :] < window
+            else:
+                m = jnp.ones((B, qi.shape[1], Sk), bool)
+            return None, _sdpa(qi, k, v, m, cfg)
+
+        _, oc = jax.lax.scan(body, None, (qc.swapaxes(0, 1), pc.swapaxes(0, 1)))
+        o = oc.swapaxes(0, 1).reshape(B, S, cfg.n_heads, cfg.d_head)
+    out = o.reshape(B, S, cfg.n_heads * cfg.d_head) @ p["wo"]
+    if cfg.out_bias:
+        out = out + p["bo"]
+    return out, (k, v)
+
+
+# ------------------------------------------------------------- decode caches
+def init_kv_cache(cfg, batch, max_len, dtype, *, window=None):
+    """Ring-buffer (windowed) or linear KV cache for ONE attention layer."""
+    W = window if window is not None else max_len
+    kv, dh = cfg.n_kv_heads, cfg.d_head
+    return {
+        "k": jnp.zeros((batch, W, kv, dh), dtype),
+        "v": jnp.zeros((batch, W, kv, dh), dtype),
+        "pos": jnp.full((batch, W), -1, jnp.int32),   # position stored per slot
+    }
+
+
+def decode_attention(p, x, cache, cfg, positions, *, rope=True,
+                     window: Optional[int] = None, cross_kv=None):
+    """Single-token decode. x: (B,1,d); positions: (B,) int32.
+    Returns (out (B,1,d), new_cache)."""
+    B = x.shape[0]
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    pos2 = positions[:, None]                              # (B,1)
+    if cross_kv is not None:
+        q = x @ p["wq"]
+        if cfg.qkv_bias:
+            q = q + p["bq"]
+        q = q.reshape(B, 1, h, dh)
+        k, v = cross_kv
+        Sk = k.shape[1]
+        mask = jnp.ones((B, 1, Sk), bool)
+        o = _sdpa(q, k, v, mask, cfg)
+        out = o.reshape(B, 1, h * dh) @ p["wo"]
+        if cfg.out_bias:
+            out = out + p["bo"]
+        return out, cache
+    q, k_new, v_new = _qkv(p, x, cfg, pos2, rope)          # (B,1,·,dh)
+    W = cache["k"].shape[1]
+    slot = positions % W                                   # (B,)
+    bidx = jnp.arange(B)
+    k = cache["k"].at[bidx, slot].set(k_new[:, 0])
+    v = cache["v"].at[bidx, slot].set(v_new[:, 0])
+    spos = cache["pos"].at[bidx, slot].set(positions)
+    valid = (spos >= 0) & (spos <= pos2)                   # (B,W)
+    if window is not None:
+        valid &= pos2 - spos < window
+    o = _sdpa(q, k, v, valid[:, None, :], cfg)
+    out = o.reshape(B, 1, h * dh) @ p["wo"]
+    if cfg.out_bias:
+        out = out + p["bo"]
+    return out, {"k": k, "v": v, "pos": spos}
+
+
+def kv_cache_from_prefill(cfg, k, v, positions, max_len, *, window=None):
+    """Convert full-sequence prefill K/V (B,S,kv,dh) into a decode cache."""
+    B, S = k.shape[0], k.shape[1]
+    W = window if window is not None else max_len
+    cache = init_kv_cache(cfg, B, max_len, k.dtype, window=window)
+    if W >= S:
+        cache = {
+            "k": cache["k"].at[:, :S].set(k),
+            "v": cache["v"].at[:, :S].set(v),
+            "pos": cache["pos"].at[:, :S].set(positions),
+        }
+    else:
+        # keep the last W entries, placed at their ring slots
+        kt, vt, pt = k[:, -W:], v[:, -W:], positions[:, -W:]
+        slot = pt % W
+        bidx = jnp.arange(B)[:, None]
+        cache = {
+            "k": cache["k"].at[bidx, slot].set(kt),
+            "v": cache["v"].at[bidx, slot].set(vt),
+            "pos": cache["pos"].at[bidx, slot].set(pt),
+        }
+    return cache
+
+
+# ----------------------------------------------------------------------- FFN
+def gated_mlp(cfg) -> bool:
+    # SwiGLU-style for silu archs and for RecurrentGemma's GeGLU
+    return cfg.act == "silu" or cfg.family == "hybrid"
+
+
+def init_ffn(cfg, key, dtype, d_ff=None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], cfg.d_model, d_ff, dtype),
+         "w_out": dense_init(ks[1], d_ff, cfg.d_model, dtype)}
+    if gated_mlp(cfg):
+        p["w_gate"] = dense_init(ks[2], cfg.d_model, d_ff, dtype)
+    if cfg.mlp_bias:
+        p["b_in"] = jnp.zeros((d_ff,), dtype)
+        p["b_out"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def apply_ffn(p, x, cfg):
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = x @ p["w_in"]
+    if cfg.mlp_bias:
+        h = h + p["b_in"]
+    if "w_gate" in p:
+        h = act(x @ p["w_gate"]) * h
+    else:
+        h = act(h)
+    out = h @ p["w_out"]
+    if cfg.mlp_bias:
+        out = out + p["b_out"]
+    return out

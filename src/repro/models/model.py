@@ -1,0 +1,405 @@
+"""Model builder: init / forward / decode for all six assigned families.
+
+The trunk is expressed as ``cfg.layer_pattern`` repeated ``n_pattern_reps``
+times (scanned — one stacked parameter pytree per pattern position) plus an
+unrolled remainder.  This layout is what λScale's block partitioning slices:
+a *model block* is a contiguous range of trunk layers (see
+``repro.core.blocks``).
+
+API:
+  init_params(cfg, key, dtype)                      -> params
+  forward(cfg, params, batch, build_cache=..., cache_len=...)
+        -> {"logits": (B,S,V), "aux": scalar, "cache": ...?}
+  decode_step(cfg, params, cache, tokens (B,), positions (B,))
+        -> (logits (B,V), new_cache)
+  init_cache(cfg, batch_size, max_len, dtype)       -> zeroed decode cache
+  make_batch(cfg, shape_or_dims, key)               -> concrete sample batch
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import recurrent as R
+from repro.models import xlstm as X
+
+Params = Dict[str, Any]
+
+# Beyond max_len for a decode request, "global" (attn_full) layers fall back
+# to a windowed cache so 524k-token decode stays bounded (DESIGN.md §8).
+LONG_CONTEXT_THRESHOLD = 100_000
+POS_TABLE = 4096  # learned-position table size (whisper)
+
+
+def _mixer_window(cfg: ModelConfig, mixer: str,
+                  max_len: Optional[int] = None) -> Optional[int]:
+    """Effective attention window for masking/cache sizing."""
+    if mixer == "attn_full":
+        if (max_len is not None and max_len > LONG_CONTEXT_THRESHOLD
+                and cfg.window is not None):
+            return cfg.window
+        return None
+    return cfg.window
+
+
+# ===================================================================== init
+def _init_layer(cfg: ModelConfig, entry: str, key, dtype) -> Params:
+    mixer, ffn = entry.split(":")
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": L.init_norm(cfg, dtype)}
+    if mixer in ("attn", "attn_full"):
+        p["attn"] = L.init_attention(cfg, ks[0], dtype)
+    elif mixer == "rec":
+        p["rec"] = R.init_rec(cfg, ks[0], dtype)
+    elif mixer == "mlstm":
+        p["mlstm"] = X.init_mlstm(cfg, ks[0], dtype)
+    elif mixer == "slstm":
+        p["slstm"] = X.init_slstm(cfg, ks[0], dtype)
+    else:
+        raise ValueError(f"unknown mixer {mixer}")
+    if cfg.family == "encdec" and mixer in ("attn", "attn_full"):
+        p["norm_x"] = L.init_norm(cfg, dtype)
+        p["xattn"] = L.init_attention(cfg, ks[1], dtype)
+    if ffn == "dense":
+        p["norm2"] = L.init_norm(cfg, dtype)
+        p["ffn"] = L.init_ffn(cfg, ks[2], dtype)
+    elif ffn == "moe":
+        p["norm2"] = L.init_norm(cfg, dtype)
+        p["moe"] = M.init_moe(cfg, ks[2], dtype)
+    return p
+
+
+def _init_enc_layer(cfg: ModelConfig, key, dtype) -> Params:
+    ks = jax.random.split(key, 2)
+    return {"norm1": L.init_norm(cfg, dtype),
+            "attn": L.init_attention(cfg, ks[0], dtype),
+            "norm2": L.init_norm(cfg, dtype),
+            "ffn": L.init_ffn(cfg, ks[1], dtype)}
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, 8)
+    p: Params = {"embed": L.embed_init(keys[0], cfg.vocab_size, cfg.d_model,
+                                       dtype)}
+    if cfg.rope_pct == 0.0:
+        p["pos_embed"] = (jax.random.normal(
+            keys[1], (POS_TABLE, cfg.d_model), jnp.float32) * 0.02
+        ).astype(dtype)
+    if cfg.n_patches:
+        p["patch_proj"] = L.dense_init(keys[2], cfg.d_model, cfg.d_model,
+                                       dtype)
+    # trunk: one stacked pytree per pattern position
+    reps = cfg.n_pattern_reps
+    trunk = []
+    for pi, entry in enumerate(cfg.layer_pattern):
+        ks = jax.random.split(jax.random.fold_in(keys[3], pi), reps)
+        stacked = jax.vmap(lambda k: _init_layer(cfg, entry, k, dtype))(ks)
+        trunk.append(stacked)
+    p["trunk"] = tuple(trunk)
+    rem = []
+    for ri in range(cfg.n_remainder_layers):
+        entry = cfg.layer_pattern[ri % cfg.pattern_len]
+        rem.append(_init_layer(cfg, entry,
+                               jax.random.fold_in(keys[4], ri), dtype))
+    p["rem"] = tuple(rem)
+    p["final_norm"] = L.init_norm(cfg, dtype)
+    if not cfg.tie_embeddings:
+        p["head"] = L.dense_init(keys[5], cfg.d_model, cfg.vocab_size, dtype)
+    if cfg.family == "encdec":
+        eks = jax.random.split(keys[6], cfg.n_enc_layers)
+        p["enc"] = {
+            "pos": (jax.random.normal(keys[7], (cfg.enc_seq, cfg.d_model),
+                                      jnp.float32) * 0.02).astype(dtype),
+            "layers": jax.vmap(lambda k: _init_enc_layer(cfg, k, dtype))(eks),
+            "final_norm": L.init_norm(cfg, dtype),
+        }
+    return p
+
+
+# ============================================================ layer (full)
+def _apply_layer_full(p: Params, x, cfg: ModelConfig, entry: str, positions,
+                      *, enc_out=None, build_cache=False, cache_len=None,
+                      moe_cf=1.25):
+    """Full-sequence layer application.  Returns (x, cache_or_zero, aux)."""
+    mixer, ffn = entry.split(":")
+    aux = jnp.zeros((), jnp.float32)
+    cache: Any = jnp.zeros(())
+    B, S, _ = x.shape
+    rope = cfg.rope_pct > 0.0
+    h = L.apply_norm(p["norm1"], x, cfg)
+    if mixer in ("attn", "attn_full"):
+        win = _mixer_window(cfg, mixer, cache_len)
+        a, (k, v) = L.full_attention(p["attn"], h, cfg, positions,
+                                     causal=True, rope=rope, window=win)
+        x = x + a
+        if build_cache:
+            cache = L.kv_cache_from_prefill(
+                cfg, k, v, positions, cache_len,
+                window=win if win is not None else None)
+        if cfg.family == "encdec":
+            hx = L.apply_norm(p["norm_x"], x, cfg)
+            xk = (enc_out @ p["xattn"]["wk"])
+            xv = (enc_out @ p["xattn"]["wv"])
+            if cfg.qkv_bias:
+                xk, xv = xk + p["xattn"]["bk"], xv + p["xattn"]["bv"]
+            Se = enc_out.shape[1]
+            xk = xk.reshape(B, Se, cfg.n_kv_heads, cfg.d_head)
+            xv = xv.reshape(B, Se, cfg.n_kv_heads, cfg.d_head)
+            ca, _ = L.full_attention(p["xattn"], hx, cfg, positions,
+                                     causal=False, rope=False,
+                                     kv_override=(xk, xv))
+            x = x + ca
+            if build_cache:
+                cache = {"self": cache, "xk": xk, "xv": xv}
+    elif mixer == "rec":
+        out, st = R.apply_rec(p["rec"], h, cfg)
+        x = x + out
+        if build_cache:
+            cache = st
+    elif mixer == "mlstm":
+        out, st = X.apply_mlstm(p["mlstm"], h, cfg)
+        x = x + out
+        if build_cache:
+            cache = st
+    elif mixer == "slstm":
+        out, st = X.apply_slstm(p["slstm"], h, cfg)
+        x = x + out
+        if build_cache:
+            cache = st
+    if ffn == "dense":
+        x = x + L.apply_ffn(p["ffn"], L.apply_norm(p["norm2"], x, cfg), cfg)
+    elif ffn == "moe":
+        mo, a = M.apply_moe(p["moe"], L.apply_norm(p["norm2"], x, cfg), cfg,
+                            capacity_factor=moe_cf)
+        x = x + mo
+        aux = aux + a
+    return x, cache, aux
+
+
+# ========================================================== layer (decode)
+def _apply_layer_decode(p: Params, x, cfg: ModelConfig, entry: str,
+                        positions, cache):
+    """Single-token layer application. x: (B,1,d); positions (B,)."""
+    mixer, ffn = entry.split(":")
+    rope = cfg.rope_pct > 0.0
+    h = L.apply_norm(p["norm1"], x, cfg)
+    if mixer in ("attn", "attn_full"):
+        self_cache = cache["self"] if cfg.family == "encdec" else cache
+        win = _mixer_window(cfg, mixer)
+        # ring caches smaller than max_len imply the windowed fallback
+        a, new_self = L.decode_attention(p["attn"], h, self_cache, cfg,
+                                         positions, rope=rope, window=win)
+        x = x + a
+        if cfg.family == "encdec":
+            hx = L.apply_norm(p["norm_x"], x, cfg)
+            ca, _ = L.decode_attention(p["xattn"], hx, None, cfg, positions,
+                                       rope=False,
+                                       cross_kv=(cache["xk"], cache["xv"]))
+            x = x + ca
+            new_cache: Any = {"self": new_self, "xk": cache["xk"],
+                              "xv": cache["xv"]}
+        else:
+            new_cache = new_self
+    elif mixer == "rec":
+        out, new_cache = R.apply_rec_step(p["rec"], h, cfg, cache)
+        x = x + out
+    elif mixer == "mlstm":
+        out, new_cache = X.apply_mlstm_step(p["mlstm"], h, cfg, cache)
+        x = x + out
+    elif mixer == "slstm":
+        out, new_cache = X.apply_slstm_step(p["slstm"], h, cfg, cache)
+        x = x + out
+    if ffn == "dense":
+        x = x + L.apply_ffn(p["ffn"], L.apply_norm(p["norm2"], x, cfg), cfg)
+    elif ffn == "moe":
+        mo, _ = M.apply_moe(p["moe"], L.apply_norm(p["norm2"], x, cfg), cfg,
+                            capacity_factor=None)
+        x = x + mo
+    return x, new_cache
+
+
+# ================================================================= encoder
+def _encode(cfg: ModelConfig, enc_p: Params, frames) -> jnp.ndarray:
+    """frames: (B, enc_seq, d) stubbed frontend embeddings."""
+    x = frames + enc_p["pos"][None]
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(xc, lp):
+        h = L.apply_norm(lp["norm1"], xc, cfg)
+        a, _ = L.full_attention(lp["attn"], h, cfg, positions,
+                                causal=False, rope=False)
+        xc = xc + a
+        xc = xc + L.apply_ffn(lp["ffn"],
+                              L.apply_norm(lp["norm2"], xc, cfg), cfg)
+        return xc, None
+
+    x, _ = jax.lax.scan(body, x, enc_p["layers"])
+    return L.apply_norm(enc_p["final_norm"], x, cfg)
+
+
+# ================================================================== embed
+def _embed_tokens(cfg: ModelConfig, params: Params, tokens, positions,
+                  patches=None):
+    x = params["embed"][tokens]
+    if cfg.family == "hybrid":          # gemma-style embedding scale
+        x = x * math.sqrt(cfg.d_model)
+    if patches is not None:
+        pe = patches.astype(x.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+    if "pos_embed" in params:
+        x = x + params["pos_embed"][jnp.minimum(positions, POS_TABLE - 1)]
+    return x
+
+
+def _unembed(cfg: ModelConfig, params: Params, x):
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    if cfg.tie_embeddings:
+        return x @ params["embed"].T
+    return x @ params["head"]
+
+
+# ================================================================= forward
+def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray],
+            *, build_cache: bool = False, cache_len: Optional[int] = None,
+            moe_cf=1.25) -> Dict[str, Any]:
+    """Train / prefill forward.
+
+    batch: {"tokens": (B, S_text)} plus "patches" (vlm) / "frames" (encdec).
+    """
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    patches = batch.get("patches") if cfg.n_patches else None
+    S_total = tokens.shape[1] + (patches.shape[1] if patches is not None else 0)
+    positions = jnp.broadcast_to(jnp.arange(S_total)[None], (B, S_total))
+    if cache_len is None:
+        cache_len = S_total
+    x = _embed_tokens(cfg, params, tokens, positions, patches)
+    enc_out = _encode(cfg, params["enc"], batch["frames"]) \
+        if cfg.family == "encdec" else None
+
+    def rep_body(carry, lp_tuple):
+        xc, auxc = carry
+        caches = []
+        for pi, entry in enumerate(cfg.layer_pattern):
+            xc, c, a = _apply_layer_full(
+                lp_tuple[pi], xc, cfg, entry, positions, enc_out=enc_out,
+                build_cache=build_cache, cache_len=cache_len, moe_cf=moe_cf)
+            caches.append(c)
+            auxc = auxc + a
+        return (xc, auxc), tuple(caches)
+
+    rep_body_ck = jax.checkpoint(rep_body)
+    (x, aux), trunk_caches = jax.lax.scan(
+        rep_body_ck, (x, jnp.zeros((), jnp.float32)), params["trunk"])
+
+    rem_caches = []
+    for ri, lp in enumerate(params["rem"]):
+        entry = cfg.layer_pattern[ri % cfg.pattern_len]
+        x, c, a = _apply_layer_full(lp, x, cfg, entry, positions,
+                                    enc_out=enc_out, build_cache=build_cache,
+                                    cache_len=cache_len, moe_cf=moe_cf)
+        rem_caches.append(c)
+        aux = aux + a
+
+    out: Dict[str, Any] = {"logits": _unembed(cfg, params, x), "aux": aux}
+    if build_cache:
+        out["cache"] = {"trunk": trunk_caches, "rem": tuple(rem_caches),
+                        "pos": positions[:, -1] + 1}
+    return out
+
+
+# ============================================================== decode step
+def decode_step(cfg: ModelConfig, params: Params, cache, tokens, positions
+                ) -> Tuple[jnp.ndarray, Any]:
+    """tokens: (B,) int32 — last generated token; positions: (B,) int32.
+    Returns (logits (B, V), new_cache)."""
+    B = tokens.shape[0]
+    pos2 = positions[:, None]
+    x = _embed_tokens(cfg, params, tokens[:, None], pos2)
+
+    def rep_body(xc, xs):
+        lp_tuple, c_tuple = xs
+        new_caches = []
+        for pi, entry in enumerate(cfg.layer_pattern):
+            xc, nc = _apply_layer_decode(lp_tuple[pi], xc, cfg, entry,
+                                         positions, c_tuple[pi])
+            new_caches.append(nc)
+        return xc, tuple(new_caches)
+
+    x, new_trunk = jax.lax.scan(rep_body, x,
+                                (params["trunk"], cache["trunk"]))
+    new_rem = []
+    for ri, lp in enumerate(params["rem"]):
+        entry = cfg.layer_pattern[ri % cfg.pattern_len]
+        x, nc = _apply_layer_decode(lp, x, cfg, entry, positions,
+                                    cache["rem"][ri])
+        new_rem.append(nc)
+    logits = _unembed(cfg, params, x)[:, 0]
+    return logits, {"trunk": new_trunk, "rem": tuple(new_rem),
+                    "pos": positions + 1}
+
+
+# ================================================================== caches
+def _init_layer_cache(cfg: ModelConfig, entry: str, batch: int, max_len: int,
+                      dtype):
+    mixer, _ = entry.split(":")
+    if mixer in ("attn", "attn_full"):
+        win = _mixer_window(cfg, mixer, max_len)
+        W = min(win, max_len) if win is not None else max_len
+        c: Any = L.init_kv_cache(cfg, batch, max_len, dtype, window=W)
+        if cfg.family == "encdec":
+            kv, dh = cfg.n_kv_heads, cfg.d_head
+            c = {"self": c,
+                 "xk": jnp.zeros((batch, cfg.enc_seq, kv, dh), dtype),
+                 "xv": jnp.zeros((batch, cfg.enc_seq, kv, dh), dtype)}
+        return c
+    if mixer == "rec":
+        return R.init_rec_state(cfg, batch, dtype)
+    if mixer == "mlstm":
+        return X.init_mlstm_state(cfg, batch, dtype)
+    if mixer == "slstm":
+        return X.init_slstm_state(cfg, batch, dtype)
+    raise ValueError(mixer)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32):
+    """Zeroed decode cache (used by serving engine and dry-run specs)."""
+    reps = cfg.n_pattern_reps
+    trunk = []
+    for entry in cfg.layer_pattern:
+        one = _init_layer_cache(cfg, entry, batch, max_len, dtype)
+        trunk.append(jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None], (reps,) + t.shape), one))
+    rem = tuple(
+        _init_layer_cache(cfg, cfg.layer_pattern[ri % cfg.pattern_len],
+                          batch, max_len, dtype)
+        for ri in range(cfg.n_remainder_layers))
+    return {"trunk": tuple(trunk), "rem": rem,
+            "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+# ============================================================== batch maker
+def make_batch(cfg: ModelConfig, batch: int, seq_len: int, key=None,
+               dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    """Concrete random batch matching ``input_specs`` (for smoke tests)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    s_text = seq_len
+    out: Dict[str, jnp.ndarray] = {}
+    if cfg.n_patches:
+        s_text = seq_len - cfg.n_patches
+        out["patches"] = jax.random.normal(
+            k2, (batch, cfg.n_patches, cfg.d_model), dtype)
+    if cfg.family == "encdec":
+        out["frames"] = jax.random.normal(
+            k2, (batch, cfg.enc_seq, cfg.d_model), dtype)
+    out["tokens"] = jax.random.randint(k1, (batch, s_text), 0,
+                                       cfg.vocab_size, jnp.int32)
+    return out

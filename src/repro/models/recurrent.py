@@ -1,0 +1,97 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) [arXiv:2402.19427].
+
+h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ u_t),
+a_t = exp(-c · softplus(Λ) · r_t),  r/i = input-dependent sigmoid gates,
+u = causal depthwise conv(x W_x).  Full-sequence mode uses an associative
+scan (log-depth linear recurrence); decode is a single-step update.
+
+State: {"h": (B, d), "conv": (B, cw-1, d)}.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+_C = 8.0
+
+
+def init_rec(cfg, key, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "w_y": dense_init(ks[0], d, d, dtype),
+        "w_x": dense_init(ks[1], d, d, dtype),
+        "conv": (jax.random.normal(ks[2], (cfg.conv_width, d), jnp.float32)
+                 * 0.1).astype(dtype),
+        "w_i": dense_init(ks[3], d, d, dtype),
+        "w_a": dense_init(ks[4], d, d, dtype),
+        # Λ init so that a = exp(-c·softplus(Λ)) ∈ ~[0.9, 0.999] at r=1
+        "lam": jnp.linspace(-4.0, -1.0, d).astype(jnp.float32),
+        "w_out": dense_init(ks[5], d, d, dtype),
+    }
+
+
+def init_rec_state(cfg, batch, dtype):
+    d = cfg.d_model
+    return {"h": jnp.zeros((batch, d), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, d), dtype)}
+
+
+def _causal_conv(w, u, conv_state):
+    """Depthwise causal conv. u: (B,S,d); returns (out, new_state)."""
+    cw = w.shape[0]
+    hist = jnp.concatenate([conv_state, u], axis=1)     # (B, S+cw-1, d)
+    S = u.shape[1]
+    out = sum(hist[:, j:j + S] * w[j] for j in range(cw))
+    return out, hist[:, -(cw - 1):]
+
+
+def _gates(p, u_conv):
+    i = jax.nn.sigmoid((u_conv @ p["w_i"]).astype(jnp.float32))
+    r = jax.nn.sigmoid((u_conv @ p["w_a"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r          # (…, d), ≤ 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * i * u_conv.astype(jnp.float32)
+
+
+def apply_rec(p, x, cfg, state: Optional[dict] = None
+              ) -> Tuple[jnp.ndarray, dict]:
+    """Full-sequence mode. x: (B,S,d) -> (out, final_state)."""
+    B, S, d = x.shape
+    if state is None:
+        state = init_rec_state(cfg, B, x.dtype)
+    u = x @ p["w_x"]
+    u_conv, conv_state = _causal_conv(p["conv"], u, state["conv"])
+    a, b = _gates(p, u_conv)                             # (B,S,d) fp32 each
+    # prepend carry-in as step 0: h_t = a_t h_{t-1} + b_t
+    a0 = jnp.concatenate([jnp.ones((B, 1, d), jnp.float32), a], 1)
+    b0 = jnp.concatenate([state["h"][:, None, :], b], 1)
+
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h_all = jax.lax.associative_scan(op, (a0, b0), axis=1)
+    h = h_all[:, 1:]                                     # (B,S,d)
+    y = jax.nn.gelu((x @ p["w_y"]).astype(jnp.float32))
+    out = (y * h).astype(x.dtype) @ p["w_out"]
+    return out, {"h": h[:, -1], "conv": conv_state}
+
+
+def apply_rec_step(p, x, cfg, state) -> Tuple[jnp.ndarray, dict]:
+    """Decode mode. x: (B,1,d)."""
+    u = x @ p["w_x"]                                     # (B,1,d)
+    cw = p["conv"].shape[0]
+    hist = jnp.concatenate([state["conv"], u], axis=1)   # (B,cw,d)
+    u_conv = sum(hist[:, j] * p["conv"][j] for j in range(cw))[:, None]
+    a, b = _gates(p, u_conv)                             # (B,1,d)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    y = jax.nn.gelu((x @ p["w_y"]).astype(jnp.float32))
+    out = (y[:, 0] * h)[:, None].astype(x.dtype) @ p["w_out"]
+    return out, {"h": h, "conv": hist[:, -(cw - 1):]}

@@ -1,0 +1,255 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory)
+[arXiv:2405.04517].
+
+mLSTM uses the *chunkwise* formulation for train/prefill — within-chunk
+parallel (decay-masked attention-like) plus an exact cross-chunk recurrent
+carry (C, n, m) — and the same code with chunk length 1 is the recurrent
+decode step.  QKV projections are head-wise block-diagonal as in the
+reference implementation.  sLSTM is strictly sequential (lax.scan with
+chunked remat).
+
+States:
+  mlstm: {"C": (B,H,dh,dh) f32, "n": (B,H,dh) f32, "m": (B,H) f32,
+          "conv": (B,cw-1,di)}
+  slstm: {"c","n","h","m": (B,d) f32}
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.recurrent import _causal_conv
+
+NEG = -1e30
+
+
+# =============================================================== mLSTM block
+def init_mlstm(cfg, key, dtype):
+    d, di, H = cfg.d_model, cfg.d_inner, cfg.n_heads
+    dh = di // H
+    ks = jax.random.split(key, 8)
+
+    def headwise(k):
+        w = jax.random.normal(k, (H, dh, dh), jnp.float32) / math.sqrt(dh)
+        return w.astype(dtype)
+
+    return {
+        "w_up": dense_init(ks[0], d, 2 * di, dtype),
+        "conv": (jax.random.normal(ks[1], (cfg.conv_width, di), jnp.float32)
+                 * 0.1).astype(dtype),
+        "wq": headwise(ks[2]), "wk": headwise(ks[3]), "wv": headwise(ks[4]),
+        "w_i": dense_init(ks[5], di, H, jnp.float32),
+        "w_f": dense_init(ks[6], di, H, jnp.float32),
+        "b_i": jnp.zeros((H,), jnp.float32),
+        # forget bias > 0 → remember by default
+        "b_f": jnp.linspace(3.0, 6.0, H).astype(jnp.float32),
+        "hnorm": jnp.ones((di,), dtype),
+        "w_down": dense_init(ks[7], di, d, dtype),
+    }
+
+
+def init_mlstm_state(cfg, batch, dtype):
+    di, H = cfg.d_inner, cfg.n_heads
+    dh = di // H
+    return {"C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, H, dh), jnp.float32),
+            "m": jnp.full((batch, H), NEG, jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, di), dtype)}
+
+
+def _mlstm_chunk(q, k, v, i_pre, f_pre, state):
+    """One chunk, vectorized over (B, H).
+
+    q,k,v: (B,H,L,dh) — k already scaled by 1/sqrt(dh);
+    i_pre,f_pre: (B,H,L) raw gate pre-activations.
+    Returns (h (B,H,L,dh), new_state)."""
+    C, n, m = state
+    B, H, L, dh = q.shape
+    logf = jax.nn.log_sigmoid(f_pre)                        # (B,H,L)
+    b = jnp.cumsum(logf, axis=-1)                           # inclusive
+    g = b[..., -1]                                          # (B,H)
+
+    # intra-chunk decay matrix D[j,s] = b_j - b_s + i_s  (s ≤ j)
+    D = b[..., :, None] - b[..., None, :] + i_pre[..., None, :]
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    D = jnp.where(causal, D, NEG)
+    m_intra = jnp.max(D, axis=-1)                           # (B,H,L)
+    m_inter = b + m[..., None]                              # (B,H,L)
+    m_j = jnp.maximum(m_intra, m_inter)
+
+    scores = jnp.einsum("bhld,bhsd->bhls", q.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    w_att = scores * jnp.exp(D - m_j[..., None])            # (B,H,L,L)
+    inter_scale = jnp.exp(m_inter - m_j)                    # (B,H,L)
+    qC = jnp.einsum("bhld,bhde->bhle", q.astype(jnp.float32), C)
+    numer = inter_scale[..., None] * qC + jnp.einsum(
+        "bhls,bhsd->bhld", w_att, v.astype(jnp.float32))
+    qn = jnp.einsum("bhld,bhd->bhl", q.astype(jnp.float32), n)
+    denom = inter_scale * qn + w_att.sum(-1)
+    h = numer / jnp.maximum(jnp.abs(denom), jnp.exp(-m_j))[..., None]
+
+    # state update
+    s_gate = g[..., None] - b + i_pre                       # (B,H,L)
+    m_new = jnp.maximum(g + m, jnp.max(s_gate, axis=-1))
+    carry_scale = jnp.exp(g + m - m_new)                    # (B,H)
+    kv_w = jnp.exp(s_gate - m_new[..., None])               # (B,H,L)
+    C_new = carry_scale[..., None, None] * C + jnp.einsum(
+        "bhl,bhld,bhle->bhde", kv_w, k.astype(jnp.float32),
+        v.astype(jnp.float32))
+    n_new = carry_scale[..., None] * n + jnp.einsum(
+        "bhl,bhld->bhd", kv_w, k.astype(jnp.float32))
+    return h.astype(q.dtype), (C_new, n_new, m_new)
+
+
+def _mlstm_qkvif(p, x, cfg, conv_state):
+    """Shared front end. x: (B,S,d). Returns q,k,v,(B,H,S,dh), i,f (B,H,S),
+    z (B,S,di), new conv state."""
+    B, S, _ = x.shape
+    di, H = cfg.d_inner, cfg.n_heads
+    dh = di // H
+    uz = x @ p["w_up"]
+    u, z = uz[..., :di], uz[..., di:]
+    c, conv_state = _causal_conv(p["conv"], u, conv_state)
+    c = jax.nn.silu(c)
+    ch = c.reshape(B, S, H, dh)
+    uh = u.reshape(B, S, H, dh)
+    q = jnp.einsum("bshd,hde->bhse", ch, p["wq"])
+    k = jnp.einsum("bshd,hde->bhse", ch, p["wk"]) / math.sqrt(dh)
+    v = jnp.einsum("bshd,hde->bhse", uh, p["wv"])
+    i_pre = (c.astype(jnp.float32) @ p["w_i"] + p["b_i"]).transpose(0, 2, 1)
+    f_pre = (c.astype(jnp.float32) @ p["w_f"] + p["b_f"]).transpose(0, 2, 1)
+    return q, k, v, i_pre, f_pre, z, conv_state
+
+
+def _headnorm(h, scale, H):
+    """Per-head RMS norm over dh. h: (B,S,di)."""
+    B, S, di = h.shape
+    hh = h.reshape(B, S, H, di // H).astype(jnp.float32)
+    hh = hh * jax.lax.rsqrt(jnp.mean(hh * hh, -1, keepdims=True) + 1e-6)
+    return (hh.reshape(B, S, di) * scale.astype(jnp.float32)).astype(h.dtype)
+
+
+def apply_mlstm(p, x, cfg, state: Optional[dict] = None, *,
+                chunk: int = 256) -> Tuple[jnp.ndarray, dict]:
+    """Full-sequence (chunkwise) mode. x: (B,S,d)."""
+    B, S, d = x.shape
+    if state is None:
+        state = init_mlstm_state(cfg, B, x.dtype)
+    q, k, v, i_pre, f_pre, z, conv_state = _mlstm_qkvif(
+        p, x, cfg, state["conv"])
+    L = chunk if S % chunk == 0 else S
+    nc = S // L
+    H, dh = cfg.n_heads, cfg.d_inner // cfg.n_heads
+
+    def body(carry, xs):
+        qc, kc, vc, ic, fc = xs
+        h, new = _mlstm_chunk(qc, kc, vc, ic, fc, carry)
+        return new, h
+
+    def split(t):  # (B,H,S,·) -> (nc,B,H,L,·)
+        return t.reshape(t.shape[0], t.shape[1], nc, L, *t.shape[3:]) \
+                .transpose(2, 0, 1, 3, *range(4, t.ndim + 1))
+
+    xs = (split(q), split(k), split(v), split(i_pre), split(f_pre))
+    (C, n, m), hs = jax.lax.scan(body, (state["C"], state["n"], state["m"]), xs)
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, dh)      # (B,H,S,dh)
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, cfg.d_inner)
+    out = (_headnorm(h, p["hnorm"], H) * jax.nn.silu(z)) @ p["w_down"]
+    return out, {"C": C, "n": n, "m": m, "conv": conv_state}
+
+
+def apply_mlstm_step(p, x, cfg, state) -> Tuple[jnp.ndarray, dict]:
+    """Decode mode. x: (B,1,d)."""
+    q, k, v, i_pre, f_pre, z, new_conv = _mlstm_qkvif(
+        p, x, cfg, state["conv"])
+    h, (C, n, m) = _mlstm_chunk(q, k, v, i_pre, f_pre,
+                                (state["C"], state["n"], state["m"]))
+    B = x.shape[0]
+    h = h.transpose(0, 2, 1, 3).reshape(B, 1, cfg.d_inner)
+    out = (_headnorm(h, p["hnorm"], cfg.n_heads) * jax.nn.silu(z)) @ p["w_down"]
+    return out, {"C": C, "n": n, "m": m, "conv": new_conv}
+
+
+# =============================================================== sLSTM block
+def init_slstm(cfg, key, dtype):
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 4)
+    w = jax.random.normal(ks[0], (4, d, d), jnp.float32) / math.sqrt(d)
+    r = jax.random.normal(ks[1], (4, H, dh, dh), jnp.float32) / math.sqrt(dh)
+    ff = int(d * 4 / 3)
+    b = jnp.zeros((4, d), jnp.float32)
+    b = b.at[2].set(3.0)          # forget-gate bias
+    return {
+        "w": w.astype(dtype), "r": r.astype(jnp.float32), "b": b,
+        "w_up": dense_init(ks[2], d, ff, dtype),
+        "w_down": dense_init(ks[3], ff, d, dtype),
+    }
+
+
+def init_slstm_state(cfg, batch, dtype):
+    d = cfg.d_model
+    z = lambda: jnp.zeros((batch, d), jnp.float32)  # noqa: E731
+    return {"c": z(), "n": z() + 1e-6, "h": z(),
+            "m": jnp.full((batch, d), NEG, jnp.float32)}
+
+
+def _slstm_step(p, pre_t, st, H):
+    """pre_t: (4,B,d) input pre-activations at step t."""
+    B, d = st["h"].shape
+    dh = d // H
+    hh = st["h"].reshape(B, H, dh)
+    rec = jnp.einsum("bhe,ghef->gbhf", hh, p["r"]).reshape(4, B, d)
+    az, ai, af, ao = pre_t + rec + p["b"][:, None, :]
+    z = jnp.tanh(az)
+    m_new = jnp.maximum(af + st["m"], ai)
+    i = jnp.exp(ai - m_new)
+    f = jnp.exp(af + st["m"] - m_new)
+    c = f * st["c"] + i * z
+    n = f * st["n"] + i
+    h = jax.nn.sigmoid(ao) * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def apply_slstm(p, x, cfg, state: Optional[dict] = None, *,
+                remat_chunk: int = 64) -> Tuple[jnp.ndarray, dict]:
+    """Full-sequence mode (sequential scan). x: (B,S,d)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    if state is None:
+        state = init_slstm_state(cfg, B, x.dtype)
+    pre = jnp.einsum("bsd,gde->gbse", x, p["w"]).astype(jnp.float32)
+
+    def step(st, pre_t):
+        new = _slstm_step(p, pre_t, st, H)
+        return new, new["h"]
+
+    if S % remat_chunk == 0 and S > remat_chunk:
+        nc = S // remat_chunk
+        prec = pre.reshape(4, B, nc, remat_chunk, d).transpose(2, 0, 1, 3, 4)
+
+        @jax.checkpoint
+        def chunk_body(st, pc):  # pc: (4,B,L,d)
+            return jax.lax.scan(step, st, pc.transpose(2, 0, 1, 3))
+
+        state, hs = jax.lax.scan(chunk_body, state, prec)
+        h = hs.reshape(S, B, d).transpose(1, 0, 2)
+    else:
+        state, hs = jax.lax.scan(step, state, pre.transpose(2, 0, 1, 3))
+        h = hs.transpose(1, 0, 2)
+    h = h.astype(x.dtype)
+    out = jax.nn.gelu(h @ p["w_up"]) @ p["w_down"]
+    return out, state
+
+
+def apply_slstm_step(p, x, cfg, state) -> Tuple[jnp.ndarray, dict]:
+    """Decode mode. x: (B,1,d)."""
+    pre = jnp.einsum("bsd,gde->gbse", x, p["w"]).astype(jnp.float32)[:, :, 0]
+    new = _slstm_step(p, pre, state, cfg.n_heads)
+    h = new["h"][:, None].astype(x.dtype)
+    out = jax.nn.gelu(h @ p["w_up"]) @ p["w_down"]
+    return out, new

@@ -1,0 +1,16 @@
+from repro.serving.baselines import (POLICIES, FaaSNetPolicy, IdealPolicy,
+                                     LambdaScalePolicy, NCCLPolicy,
+                                     ServerlessLLMPolicy)
+from repro.serving.engine import InferenceEngine
+from repro.serving.simulator import SimModel, SimResult, Simulator
+from repro.serving.tiers import H800, ClusterState, HardwareProfile
+from repro.serving.workload import (Request, burstgpt_like, constant_stress,
+                                    multi_model_trace)
+
+__all__ = [
+    "InferenceEngine", "Simulator", "SimResult", "SimModel",
+    "HardwareProfile", "H800", "ClusterState", "POLICIES",
+    "LambdaScalePolicy", "ServerlessLLMPolicy", "FaaSNetPolicy",
+    "NCCLPolicy", "IdealPolicy", "Request", "burstgpt_like",
+    "constant_stress", "multi_model_trace",
+]

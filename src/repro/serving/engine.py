@@ -1,0 +1,65 @@
+"""JAX inference engine: batched prefill + autoregressive decode.
+
+The single-replica ("local mode") execution path of λScale's model manager.
+Pipelined (execute-while-load) execution uses ``repro.distributed.pipeline``
+for the trunk; mode switching back to this engine is exercised in
+``tests/test_mode_switch.py`` via ``repro.core.mode_switch.recompute_cache``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, forward, init_cache
+
+
+class InferenceEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_len: int = 4096):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(functools.partial(self._prefill_impl, cfg),
+                                static_argnames=("cache_len",))
+        self._step = jax.jit(functools.partial(self._step_impl, cfg))
+
+    @staticmethod
+    def _prefill_impl(cfg, params, batch, *, cache_len):
+        out = forward(cfg, params, batch, build_cache=True,
+                      cache_len=cache_len, moe_cf=None)
+        last = out["logits"][:, -1]
+        return last, out["cache"]
+
+    @staticmethod
+    def _step_impl(cfg, params, cache, tokens, positions):
+        return decode_step(cfg, params, cache, tokens, positions)
+
+    def prefill(self, batch: Dict, cache_len: Optional[int] = None
+                ) -> Tuple[jnp.ndarray, dict]:
+        cache_len = cache_len or self.max_len
+        return self._prefill(self.params, batch, cache_len=cache_len)
+
+    def generate(self, batch: Dict, max_new_tokens: int,
+                 *, greedy: bool = True, key=None,
+                 temperature: float = 1.0) -> jnp.ndarray:
+        """Returns (B, max_new_tokens) generated token ids."""
+        logits, cache = self.prefill(
+            batch, cache_len=batch["tokens"].shape[1] + max_new_tokens)
+        toks = []
+        tok = self._sample(logits, greedy, key, temperature, 0)
+        toks.append(tok)
+        for i in range(1, max_new_tokens):
+            logits, cache = self._step(self.params, cache, tok, cache["pos"])
+            tok = self._sample(logits, greedy, key, temperature, i)
+            toks.append(tok)
+        return jnp.stack(toks, axis=1)
+
+    def _sample(self, logits, greedy, key, temperature, i):
+        if greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        k = jax.random.fold_in(key, i)
+        return jax.random.categorical(k, logits / temperature).astype(
+            jnp.int32)

@@ -1,0 +1,296 @@
+"""Discrete-event cluster simulator for serverless LLM scaling.
+
+Wall-clock on this container is CPU-only, so the paper's *timing* results
+(Figs 7–18) are reproduced through this calibrated simulator while the
+*correctness* of every mechanism (multicast schedule, pipelined execution,
+mode switching) is executed for real in JAX (see repro.distributed and the
+tests).  The simulator consumes the same ``ScalePlan`` objects produced by
+``repro.core`` — the schedules it prices are exactly the schedules the JAX
+collectives execute.
+
+Model: requests are served by *instances* (local replica or λPipe execution
+pipeline) with ``slots`` concurrent requests each.  Decode is HBM-bandwidth
+bound; prefill is FLOPs bound.  A scaling policy (see ``baselines.py``)
+decides how new instances are provisioned and when they become ready; for
+λScale, pipeline instances are created early (execute-while-load) and
+*drain* at mode-switch time while per-node local replicas take over.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.serving.tiers import ClusterState, HardwareProfile
+from repro.serving.workload import Request
+
+
+# ------------------------------------------------------------- model costs
+@dataclasses.dataclass(frozen=True)
+class SimModel:
+    name: str
+    bytes: float                 # bf16 weight bytes
+    active_bytes: float          # per-token touched bytes (MoE: active only)
+    active_params: float
+
+    @staticmethod
+    def from_config(cfg: ModelConfig) -> "SimModel":
+        return SimModel(cfg.arch_id, 2.0 * cfg.param_count(),
+                        2.0 * cfg.active_param_count(),
+                        float(cfg.active_param_count()))
+
+    def tok_time(self, hw: HardwareProfile, batch: int = 1) -> float:
+        """Per-decode-step time (whole batch): memory vs compute roofline."""
+        mem = self.active_bytes / hw.hbm_bw
+        comp = 2.0 * self.active_params * batch / hw.peak_flops
+        return max(mem, comp)
+
+    def prefill_time(self, hw: HardwareProfile, prompt_len: int) -> float:
+        return 2.0 * self.active_params * prompt_len / hw.peak_flops
+
+
+# --------------------------------------------------------------- instances
+PIPELINE_TOK_OVERHEAD = 1.10     # per-token inflation in pipelined mode
+HOP_LATENCY = 2e-4               # activation hand-off per stage per token
+
+
+@dataclasses.dataclass
+class Instance:
+    inst_id: int
+    model: str
+    nodes: Tuple[int, ...]
+    kind: str                    # "local" | "pipeline"
+    ready_time: float
+    slots: List[float]           # per-slot busy-until
+    owns_gpus: bool = True       # releases node GPUs on scale-in
+    draining: bool = False       # no new requests (mode switch)
+    last_active: float = 0.0
+
+    def free_slot(self, now: float) -> Optional[int]:
+        if self.draining:
+            return None
+        best, best_i = None, None
+        for i, end in enumerate(self.slots):
+            if end <= max(now, self.ready_time):
+                if best is None or end < best:
+                    best, best_i = end, i
+        return best_i
+
+
+# ----------------------------------------------------------------- results
+@dataclasses.dataclass
+class SimResult:
+    ttft: List[Tuple[float, float]]          # (arrival, ttft)
+    completions: List[Tuple[float, int]]     # (finish_time, tokens)
+    gpu_seconds: float
+    instance_events: List[Tuple[float, str, str]]
+    n_requests: int
+
+    def ttft_percentile(self, q: float) -> float:
+        xs = sorted(t for _, t in self.ttft)
+        if not xs:
+            return float("nan")
+        i = min(len(xs) - 1, max(0, int(math.ceil(q / 100 * len(xs))) - 1))
+        return xs[i]
+
+    def mean_ttft(self) -> float:
+        xs = [t for _, t in self.ttft]
+        return sum(xs) / max(len(xs), 1)
+
+    def throughput_timeline(self, dt: float = 0.1,
+                            horizon: Optional[float] = None
+                            ) -> List[Tuple[float, float]]:
+        if not self.completions:
+            return []
+        horizon = horizon or max(t for t, _ in self.completions) + dt
+        nb = int(horizon / dt) + 1
+        buckets = [0.0] * nb
+        for t, toks in self.completions:
+            if t < horizon:
+                buckets[int(t / dt)] += toks
+        return [(i * dt, b / dt) for i, b in enumerate(buckets)]
+
+    def time_to_throughput(self, frac: float, dt: float = 0.05) -> float:
+        """Ramp-up metric: first time sustained throughput ≥ frac·peak."""
+        tl = self.throughput_timeline(dt)
+        if not tl:
+            return float("nan")
+        peak = max(v for _, v in tl)
+        for t, v in tl:
+            if v >= frac * peak:
+                return t
+        return float("nan")
+
+
+# --------------------------------------------------------------- simulator
+class Simulator:
+    """Event-driven serving simulation under a scaling policy."""
+
+    def __init__(self, policy, n_nodes: int, hw: HardwareProfile, *,
+                 slots_per_instance: int = 8, keepalive: float = 5.0,
+                 autoscale_dt: float = 0.25, scale_headroom: int = 0,
+                 model_configs: Optional[Dict[str, ModelConfig]] = None):
+        self.policy = policy
+        self.hw = hw
+        self.cluster = ClusterState(n_nodes, hw)
+        self.slots = slots_per_instance
+        self.keepalive = keepalive
+        self.autoscale_dt = autoscale_dt
+        self.scale_headroom = scale_headroom
+        self.model_configs = model_configs or {}
+        self._models: Dict[str, SimModel] = {}
+        self._iid = itertools.count()
+
+    def _model(self, name: str) -> SimModel:
+        if name not in self._models:
+            cfg = self.model_configs.get(name) or get_config(name)
+            self._models[name] = SimModel.from_config(cfg)
+        return self._models[name]
+
+    # ------------------------------------------------------------------
+    def run(self, requests: Sequence[Request], *, warm_nodes: int = 1,
+            duration: Optional[float] = None) -> SimResult:
+        hw = self.hw
+        models = sorted({r.model for r in requests})
+        # seed: ≥1 replica of each model in host memory somewhere (paper
+        # footnote 2) — locality-driven startup picks it up.
+        for mi, m in enumerate(models):
+            for w in range(warm_nodes):
+                node = (mi + w) % len(self.cluster.nodes)
+                self.cluster.nodes[node].host_cache.touch(m, 0.0)
+
+        instances: Dict[int, Instance] = {}
+        active: Dict[int, int] = {}
+        queues: Dict[str, List[Request]] = {m: [] for m in models}
+        result = SimResult([], [], 0.0, [], len(requests))
+
+        evq: List[tuple] = []
+        seq = itertools.count()
+
+        def push(t, kind, payload=None):
+            heapq.heappush(evq, (t, next(seq), kind, payload))
+
+        for r in requests:
+            push(r.t_arrive, "arrival", r)
+        horizon = duration or (max(r.t_arrive for r in requests) + 180.0)
+        t = 0.0
+        while t < horizon:
+            push(t, "autoscale")
+            t += self.autoscale_dt
+
+        def dispatch(now: float):
+            for m, q in queues.items():
+                if not q:
+                    continue
+                sm = self._model(m)
+                remaining: List[Request] = []
+                for req in q:
+                    cand = None
+                    for inst in instances.values():
+                        if inst.model != m:
+                            continue
+                        si = inst.free_slot(now)
+                        if si is None:
+                            continue
+                        key = (max(inst.ready_time, now, inst.slots[si]),
+                               0 if inst.kind == "local" else 1)
+                        if cand is None or key < cand[0]:
+                            cand = (key, inst, si)
+                    if cand is None:
+                        remaining.append(req)
+                        continue
+                    _, inst, si = cand
+                    start = max(now, inst.ready_time, inst.slots[si])
+                    penalty = (len(inst.nodes) * HOP_LATENCY
+                               if inst.kind == "pipeline" else 0.0)
+                    tok = sm.tok_time(hw) * (
+                        PIPELINE_TOK_OVERHEAD if inst.kind == "pipeline"
+                        else 1.0)
+                    ttft = (start + sm.prefill_time(hw, req.prompt_len)
+                            + penalty + tok)
+                    done = ttft + (req.out_tokens - 1) * tok
+                    inst.slots[si] = done
+                    inst.last_active = done
+                    active[inst.inst_id] = active.get(inst.inst_id, 0) + 1
+                    result.ttft.append((req.t_arrive, ttft - req.t_arrive))
+                    push(done, "req_done", (inst.inst_id, req.out_tokens))
+                queues[m] = remaining
+
+        def provision(m: str, n_new: int, now: float):
+            sm = self._model(m)
+            for spec in self.policy.provision(self.cluster, m, sm, n_new,
+                                              now):
+                # 2-D pipelining (§4.3): a g-stage pipeline keeps all g
+                # nodes busy on different in-flight batches → g× slots.
+                n_slots = self.slots * (len(spec["nodes"])
+                                        if spec["kind"] == "pipeline" else 1)
+                iid = next(self._iid)
+                inst = Instance(iid, m, tuple(spec["nodes"]), spec["kind"],
+                                spec["ready"], [0.0] * n_slots,
+                                owns_gpus=spec.get("owns_gpus", True),
+                                last_active=spec["ready"])
+                instances[iid] = inst
+                result.instance_events.append(
+                    (spec["ready"], "up:" + spec["kind"], m))
+                push(spec["ready"], "inst_ready", iid)
+                if spec.get("drain_at") is not None:
+                    push(spec["drain_at"], "drain", iid)
+
+        while evq:
+            now, _, kind, payload = heapq.heappop(evq)
+            if kind == "arrival":
+                queues[payload.model].append(payload)
+                dispatch(now)
+            elif kind == "req_done":
+                iid, toks = payload
+                result.completions.append((now, toks))
+                if iid in active:
+                    active[iid] -= 1
+                dispatch(now)
+            elif kind == "inst_ready":
+                dispatch(now)
+            elif kind == "drain":
+                inst = instances.get(payload)
+                if inst is not None:
+                    inst.draining = True
+                    result.instance_events.append((now, "switch", inst.model))
+            elif kind == "autoscale":
+                for m, q in queues.items():
+                    if not q:
+                        continue
+                    # capacity = occupied nodes (a mid-load λPipe pipeline
+                    # counts its member nodes: they are provisioning
+                    # capacity, not available headroom)
+                    nodes_busy = {nd for i in instances.values()
+                                  if i.model == m and not i.draining
+                                  for nd in i.nodes}
+                    demand = math.ceil(len(q) / self.slots)
+                    n_new = demand + self.scale_headroom - len(nodes_busy)
+                    if n_new > 0:
+                        provision(m, n_new, now)
+                # scale-in + GC of drained pipelines
+                for iid in list(instances):
+                    inst = instances[iid]
+                    idle = (active.get(iid, 0) == 0
+                            and now > inst.ready_time)
+                    if inst.draining and idle:
+                        del instances[iid]      # pipeline fully switched
+                        continue
+                    if idle and now - inst.last_active > self.keepalive:
+                        if inst.owns_gpus:
+                            for nd in inst.nodes:
+                                if (self.cluster.nodes[nd].gpu_model
+                                        == inst.model):
+                                    self.cluster.release(nd, now)
+                        result.instance_events.append(
+                            (now, "down:" + inst.kind, inst.model))
+                        del instances[iid]
+                dispatch(now)
+
+        self.cluster.finalize(horizon)
+        result.gpu_seconds = self.cluster.gpu_seconds
+        return result

@@ -1,0 +1,109 @@
+"""Storage tiers and node/cluster state (λScale §5, locality-driven startup).
+
+Hardware constants default to the TPU-v5e-class target of this repo's
+dry-run (ICI links) for the network, and to the paper's measured testbed
+numbers for host-memory and SSD paths (Table 1: 64 GB/s host, 5 GB/s NVMe).
+A paper-faithful "H800" profile is provided for reproducing the paper's
+absolute latency figures (400 Gb/s IB ≈ 50 GB/s — numerically the same link
+bandwidth as one ICI link, which is why the paper's sub-second 13B×8 claim
+transfers directly).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Set
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareProfile:
+    name: str = "tpu-v5e"
+    link_bw: float = 50e9            # bytes/s inter-node (ICI / 400Gb IB)
+    step_overhead: float = 0.004     # s per multicast step (Fig 17/18)
+    hbm_bw: float = 819e9            # bytes/s
+    peak_flops: float = 197e12      # bf16
+    host_to_gpu_bw: float = 64e9     # bytes/s (paper Table 1)
+    ssd_bw: float = 5e9              # bytes/s (paper Table 1)
+    remote_bw: float = 1.25e9        # bytes/s (10 Gb/s registry path)
+    gpu_mem_models: int = 1          # full model replicas per node GPU
+    host_mem_models: int = 3         # paper §2.3 simulation setting
+    nccl_group_init: float = 0.30    # s (paper §7.2: 100s of ms)
+
+
+H800 = HardwareProfile(name="h800", hbm_bw=3350e9, peak_flops=990e12)
+
+
+@dataclasses.dataclass
+class NodeState:
+    node_id: int
+    gpu_model: Optional[str] = None          # model resident in GPU memory
+    gpu_busy_since: Optional[float] = None   # for GPU-time accounting
+    host_cache: "LRUCache" = None            # type: ignore
+
+    def __post_init__(self):
+        if self.host_cache is None:
+            self.host_cache = LRUCache(capacity=3)
+
+
+class LRUCache:
+    """LRU set of model ids cached in a node's host memory."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._d: "OrderedDict[str, float]" = OrderedDict()
+        self.evictions: List[tuple] = []     # (model, t_in, t_out)
+
+    def touch(self, model: str, now: float) -> None:
+        if model in self._d:
+            self._d.move_to_end(model)
+            return
+        self._d[model] = now
+        while len(self._d) > self.capacity:
+            old, t_in = self._d.popitem(last=False)
+            self.evictions.append((old, t_in, now))
+
+    def __contains__(self, model: str) -> bool:
+        return model in self._d
+
+    def models(self) -> Set[str]:
+        return set(self._d)
+
+
+class ClusterState:
+    def __init__(self, n_nodes: int, hw: HardwareProfile):
+        self.hw = hw
+        self.nodes = [NodeState(i, host_cache=LRUCache(hw.host_mem_models))
+                      for i in range(n_nodes)]
+        self.gpu_seconds = 0.0
+
+    # ---------------- locality-driven startup queries (§5) ----------------
+    def gpu_nodes(self, model: str) -> List[int]:
+        return [n.node_id for n in self.nodes if n.gpu_model == model]
+
+    def warm_nodes(self, model: str) -> List[int]:
+        return [n.node_id for n in self.nodes
+                if model in n.host_cache and n.gpu_model is None]
+
+    def free_nodes(self) -> List[int]:
+        return [n.node_id for n in self.nodes if n.gpu_model is None]
+
+    # ---------------------- GPU occupancy accounting ----------------------
+    def occupy(self, node_id: int, model: str, now: float) -> None:
+        n = self.nodes[node_id]
+        assert n.gpu_model is None, f"node {node_id} already occupied"
+        n.gpu_model = model
+        n.gpu_busy_since = now
+
+    def release(self, node_id: int, now: float) -> None:
+        n = self.nodes[node_id]
+        assert n.gpu_model is not None
+        self.gpu_seconds += now - n.gpu_busy_since
+        n.host_cache.touch(n.gpu_model, now)   # model falls back to host mem
+        n.gpu_model = None
+        n.gpu_busy_since = None
+
+    def finalize(self, now: float) -> None:
+        for n in self.nodes:
+            if n.gpu_model is not None:
+                self.gpu_seconds += now - n.gpu_busy_since
+                n.gpu_busy_since = now

@@ -1,0 +1,100 @@
+"""Workload generation: bursty request traces in the shape of the paper's
+Fig 1 (Alibaba serverless inference + BurstGPT [48] Azure GPT traces).
+
+All generators are deterministic given a seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    req_id: int
+    model: str
+    t_arrive: float
+    prompt_len: int
+    out_tokens: int
+
+
+def _poisson_arrivals(rate_fn, duration: float, rng, dt: float = 0.05
+                      ) -> List[float]:
+    """Thinned non-homogeneous Poisson process."""
+    ts: List[float] = []
+    t = 0.0
+    rmax = max(rate_fn(x) for x in np.arange(0, duration, dt)) + 1e-9
+    while t < duration:
+        t += rng.exponential(1.0 / rmax)
+        if t < duration and rng.random() < rate_fn(t) / rmax:
+            ts.append(t)
+    return ts
+
+
+def bursty_rate(t: float, *, base: float, spikes: Sequence[tuple]) -> float:
+    """base rps plus gaussian-shaped spikes: (center, width, height)."""
+    r = base
+    for c, w, h in spikes:
+        r += h * math.exp(-0.5 * ((t - c) / w) ** 2)
+    return r
+
+
+def burstgpt_like(duration: float = 1800.0, *, model: str = "llama2-13b",
+                  base_rps: float = 1.0, seed: int = 0,
+                  spikes: Optional[Sequence[tuple]] = None,
+                  prompt_len: int = 512, out_tokens: int = 32,
+                  ) -> List[Request]:
+    """30-minute bursty snippet in the shape of BurstGPT (paper §7.5):
+    order-of-magnitude spikes over a low base rate."""
+    rng = np.random.default_rng(seed)
+    if spikes is None:
+        spikes = [(200, 18, 12 * base_rps), (420, 10, 25 * base_rps),
+                  (700, 30, 8 * base_rps), (1000, 12, 30 * base_rps),
+                  (1250, 20, 15 * base_rps), (1500, 8, 22 * base_rps)]
+    ts = _poisson_arrivals(
+        lambda t: bursty_rate(t, base=base_rps, spikes=spikes),
+        duration, rng)
+    reqs = []
+    for i, t in enumerate(ts):
+        pl = int(rng.integers(max(8, prompt_len // 2), prompt_len * 2))
+        ot = int(rng.integers(max(4, out_tokens // 2), out_tokens * 2))
+        reqs.append(Request(i, model, float(t), pl, ot))
+    return reqs
+
+
+def constant_stress(rps: float, duration: float, *, model: str,
+                    prompt_len: int = 512, out_tokens: int = 16,
+                    seed: int = 0) -> List[Request]:
+    """Paper §7.3/§7.4 stress test: a burst of concurrent requests."""
+    rng = np.random.default_rng(seed)
+    ts = _poisson_arrivals(lambda t: rps, duration, rng)
+    return [Request(i, model, float(t), prompt_len, out_tokens)
+            for i, t in enumerate(ts)]
+
+
+def multi_model_trace(n_models: int, per_model_rpm: float, duration: float,
+                      *, seed: int = 0, prompt_len: int = 256,
+                      out_tokens: int = 16,
+                      periodic: bool = False) -> List[Request]:
+    """Paper §2.3 setting: many models, ~1 request/min each (Fig 2/3).
+
+    periodic=True reproduces the paper's deterministic rate (staggered
+    arrivals, exactly per_model_rpm each); False draws Poisson arrivals."""
+    rng = np.random.default_rng(seed)
+    period = 60.0 / per_model_rpm
+    reqs = []
+    rid = 0
+    for m in range(n_models):
+        t = m * period / n_models if periodic else 0.0
+        while True:
+            t += period if periodic else rng.exponential(period)
+            if t >= duration:
+                break
+            reqs.append(Request(rid, f"model-{m:02d}", t, prompt_len,
+                                out_tokens))
+            rid += 1
+    reqs.sort(key=lambda r: r.t_arrive)
+    return [dataclasses.replace(r, req_id=i) for i, r in enumerate(reqs)]

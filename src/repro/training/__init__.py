@@ -1,0 +1,9 @@
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.data import MarkovCorpus, data_iterator
+from repro.training.optimizer import (AdamWConfig, adamw_update,
+                                      init_opt_state, lr_at)
+from repro.training.train_loop import Trainer, lm_loss, make_train_step
+
+__all__ = ["AdamWConfig", "adamw_update", "init_opt_state", "lr_at",
+           "Trainer", "lm_loss", "make_train_step", "MarkovCorpus",
+           "data_iterator", "save_checkpoint", "load_checkpoint"]

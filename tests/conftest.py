@@ -1,0 +1,49 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+sys.path.insert(0, SRC)
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600
+                     ) -> str:
+    """Run a snippet in a subprocess with forced host devices.
+
+    jax locks the device count at first init, so multi-device tests
+    (λPipe multicast, pipelined execution, mini dry-runs) must run in a
+    fresh process; everything else in the suite sees 1 device."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{n_devices}")
+    env["PYTHONPATH"] = SRC
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{proc.stdout}\n"
+            f"STDERR:\n{proc.stderr[-3000:]}")
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_with_devices
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    """XLA:CPU caches every compiled executable for the process lifetime;
+    on the 35 GB single-core CI box the full suite (kernel interpret
+    sweeps + per-arch smoke + live-cluster) exhausts memory without
+    per-module cache eviction."""
+    yield
+    import gc
+
+    import jax
+
+    jax.clear_caches()
+    gc.collect()

@@ -1,0 +1,94 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED variant
+of each family runs one forward and one train step on CPU with correct
+shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SHAPES, get_config, list_archs, reduced
+from repro.models import forward, init_cache, init_params, make_batch
+from repro.training import AdamWConfig, Trainer, data_iterator
+
+ARCHS = list_archs()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_no_nan(arch):
+    cfg = reduced(get_config(arch))
+    assert cfg.n_layers <= 8 and cfg.d_model <= 512
+    if cfg.n_experts:
+        assert cfg.n_experts <= 4
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 64
+    batch = make_batch(cfg, B, S)
+    out = forward(cfg, params, batch)
+    assert out["logits"].shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.isnan(out["logits"]).any())
+    assert not bool(jnp.isnan(out["aux"]))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch):
+    cfg = reduced(get_config(arch))
+    tr = Trainer(cfg, AdamWConfig(warmup_steps=1, total_steps=10))
+    it = data_iterator(cfg, batch=2, seq_len=64)
+    met = tr.step(next(it))
+    assert met["loss"] > 0 and not jnp.isnan(met["loss"])
+    assert met["grad_norm"] > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_init_cache_structure(arch):
+    cfg = reduced(get_config(arch))
+    cache = init_cache(cfg, batch=2, max_len=128)
+    assert len(cache["trunk"]) == cfg.pattern_len
+    assert len(cache["rem"]) == cfg.n_remainder_layers
+    # stacked leading dim
+    for c in cache["trunk"]:
+        for leaf in jax.tree.leaves(c):
+            assert leaf.shape[0] == cfg.n_pattern_reps
+
+
+def test_all_shapes_defined():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                           "long_500k"}
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["long_500k"].seq_len == 524_288
+
+
+def test_full_configs_match_assignment():
+    """Exact dims from the assignment table."""
+    c = get_config("starcoder2-3b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (30, 3072, 24, 2, 12288, 49152)
+    c = get_config("whisper-large-v3")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab_size) == \
+        (32, 1280, 20, 5120, 51866)
+    c = get_config("recurrentgemma-2b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (26, 2560, 10, 1, 7680, 256000)
+    c = get_config("starcoder2-15b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff) == \
+        (40, 6144, 48, 4, 24576)
+    c = get_config("pixtral-12b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (40, 5120, 32, 8, 14336, 131072)
+    c = get_config("qwen2.5-3b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (36, 2048, 16, 2, 11008, 151936)
+    c = get_config("qwen2-moe-a2.7b")
+    assert (c.n_layers, c.d_model, c.n_experts, c.top_k,
+            c.n_shared_experts, c.expert_d_ff) == (24, 2048, 60, 4, 4, 1408)
+    c = get_config("llama4-maverick-400b-a17b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.n_experts,
+            c.top_k, c.vocab_size) == (48, 5120, 40, 8, 128, 1, 202048)
+    assert 380e9 < c.param_count() < 420e9          # ~400B total
+    assert 16e9 < c.active_param_count() < 19e9     # ~17B active
+    c = get_config("stablelm-1.6b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab_size) == \
+        (24, 2048, 32, 5632, 100352)
+    c = get_config("xlstm-1.3b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.vocab_size) == \
+        (48, 2048, 4, 50304)
+    assert c.layer_pattern.count("slstm:none") == 1
+    assert c.layer_pattern.count("mlstm:none") == 7

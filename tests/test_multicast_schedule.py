@@ -1,0 +1,106 @@
+"""Property tests for λPipe multicast schedules (§4.2)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.multicast import (LinkModel, binomial_schedule,
+                                  kway_block_orders, kway_schedule,
+                                  optimal_steps)
+from repro.core.pipeline import first_ready_step
+
+
+# ----------------------------------------------------- 1→N binomial pipeline
+@settings(max_examples=60, deadline=None)
+@given(d=st.integers(1, 6), b=st.integers(1, 24))
+def test_power_of_two_optimal(d, b):
+    """Paper claim: 1→N completes in exactly b + log2 N − 1 steps."""
+    n = 2 ** d
+    s = binomial_schedule(n, b)
+    s.validate({0: range(b)})
+    assert s.n_steps == b + d - 1 == optimal_steps(n, b)
+
+
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(2, 48), b=st.integers(1, 20))
+def test_arbitrary_n_near_optimal(n, b):
+    """Greedy fallback: complete, model-valid, ≤ bound + 3 steps."""
+    s = binomial_schedule(n, b)
+    s.validate({0: range(b)})
+    assert s.n_steps <= optimal_steps(n, b) + 3
+
+
+@settings(max_examples=40, deadline=None)
+@given(d=st.integers(1, 5), b=st.integers(1, 16))
+def test_send_receive_constraints(d, b):
+    """Full-duplex telephone model: ≤1 send and ≤1 receive per node/step."""
+    s = binomial_schedule(2 ** d, b)
+    for step in s.steps:
+        senders = [t[0] for t in step]
+        receivers = [t[1] for t in step]
+        assert len(senders) == len(set(senders))
+        assert len(receivers) == len(set(receivers))
+
+
+# ------------------------------------------------ Algorithm 1: k-way orders
+@settings(max_examples=60, deadline=None)
+@given(b=st.integers(1, 40), k=st.integers(1, 8))
+def test_kway_orders_are_permutations(b, k):
+    k = min(k, b)
+    orders = kway_block_orders(b, k)
+    assert len(orders) == k
+    for o in orders:
+        assert sorted(o) == list(range(b))
+
+
+def test_kway_orders_circular_shift():
+    """Paper Fig 5: 2 sub-groups, 4 blocks → orders [0,1,2,3], [2,3,0,1]."""
+    assert kway_block_orders(4, 2) == [[0, 1, 2, 3], [2, 3, 0, 1]]
+    assert kway_block_orders(6, 3) == [[0, 1, 2, 3, 4, 5],
+                                       [2, 3, 4, 5, 0, 1],
+                                       [4, 5, 0, 1, 2, 3]]
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(4, 32), b=st.integers(2, 16), k=st.integers(1, 4))
+def test_kway_schedule_complete(n, b, k):
+    k = min(k, n - 1)
+    s = kway_schedule(n, b, k)
+    s.validate({src: range(b) for src in range(k)})
+
+
+@pytest.mark.parametrize("n,b,k", [(8, 16, 2), (16, 16, 4), (12, 16, 4),
+                                   (8, 4, 2)])
+def test_kway_first_pipeline_early(n, b, k):
+    """Paper claim: first complete pipeline after ~⌈b/k⌉ steps — much
+    earlier than full multicast."""
+    s = kway_schedule(n, b, k)
+    init = {src: range(b) for src in range(k)}
+    fr = first_ready_step(s, init)
+    group = math.ceil(n / k)
+    assert 0 < fr <= math.ceil(b / k) + math.ceil(math.log2(group)) + 1
+    assert fr < s.n_steps                    # strictly before completion
+
+
+def test_kway_speedup_vs_k1():
+    """Doubling k should roughly halve time-to-first-pipeline (Fig 16)."""
+    b, n = 16, 16
+    ready = {}
+    for k in (1, 2, 4):
+        s = kway_schedule(n + k, b, k)   # keep 16 destinations each time
+        ready[k] = first_ready_step(s, {src: range(b) for src in range(k)})
+    assert ready[4] < ready[2] < ready[1]
+    assert ready[4] <= ready[1] / 2
+
+
+# ---------------------------------------------------------------- timing
+def test_multicast_time_model():
+    """T ∝ M(1 + log N / b): Llama-13B (26 GB) to 8 nodes < 1 s at
+    400 Gb/s (paper §1/§7.2)."""
+    link = LinkModel(bandwidth=50e9, step_overhead=0.004)
+    t = link.multicast_time(26e9, 8, 16)
+    assert t < 1.0, f"13B × 8 nodes took {t:.2f}s (paper: <1s)"
+    # more blocks → diminishing returns (elbow, Fig 18)
+    t8 = link.multicast_time(26e9, 8, 8)
+    t16 = link.multicast_time(26e9, 8, 16)
+    assert t16 < t8

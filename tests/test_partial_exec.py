@@ -1,0 +1,51 @@
+"""core.partial_exec — block-resident execution primitives used by λPipe
+stage execution (LiveCluster)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.blocks import block_assignment, flatten_params
+from repro.core.partial_exec import (apply_layer_range, embed_from_flat,
+                                     head_from_flat, layer_range_of_units)
+from repro.models import forward, init_params, make_batch
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "recurrentgemma-2b",
+                                  "qwen2-moe-a2.7b"])
+def test_chained_ranges_equal_forward(arch):
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    flat = flatten_params(cfg, params)
+    batch = make_batch(cfg, 2, 32)
+    ref = forward(cfg, params, batch, moe_cf=None)["logits"]
+    B, S = batch["tokens"].shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = embed_from_flat(cfg, flat, batch["tokens"], positions)
+    # split the trunk at an arbitrary boundary and chain
+    mid = max(1, cfg.n_layers // 2)
+    x = apply_layer_range(cfg, flat, x, 0, mid, positions)
+    x = apply_layer_range(cfg, flat, x, mid, cfg.n_layers, positions)
+    out = head_from_flat(cfg, flat, x)
+    assert float(jnp.max(jnp.abs(out - ref))) < 2e-4
+
+
+def test_layer_range_of_units():
+    cfg = reduced(get_config("qwen2.5-3b"), n_layers=2)
+    assign = block_assignment(cfg, 2)
+    lo, hi = layer_range_of_units(assign[0])
+    assert (lo, hi) == (0, 1)
+    lo, hi = layer_range_of_units(assign[-1])
+    assert (lo, hi) == (1, 2)
+    assert layer_range_of_units(["@embed"]) == (0, 0)
+
+
+def test_missing_layer_raises():
+    cfg = reduced(get_config("qwen2.5-3b"), n_layers=2)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    flat = {k: v for k, v in flatten_params(cfg, params).items()
+            if not k.startswith("@layer0001")}
+    x = jnp.zeros((1, 4, cfg.d_model))
+    positions = jnp.zeros((1, 4), jnp.int32)
+    with pytest.raises(AssertionError):
+        apply_layer_range(cfg, flat, x, 0, 2, positions)

@@ -1,0 +1,69 @@
+"""Property tests for Algorithm 2 (execution pipeline generation, §4.3)."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ewl import plan_scale
+from repro.core.multicast import kway_chunks
+from repro.core.pipeline import generate_pipelines
+
+
+@settings(max_examples=80, deadline=None)
+@given(k=st.integers(1, 6), sizes=st.lists(st.integers(0, 7), min_size=1,
+                                           max_size=6),
+       b=st.integers(1, 24))
+def test_pipelines_partition_blocks_and_nodes(k, sizes, b):
+    k = min(k, len(sizes))
+    groups = []
+    nid = 0
+    for i in range(k):
+        groups.append(list(range(nid, nid + sizes[i])))
+        nid += sizes[i]
+    pipes = generate_pipelines(groups, b)
+    # every node assigned exactly once
+    seen = []
+    for p in pipes:
+        for s in p.stages:
+            seen.append(s.node)
+    flat = [n for g in groups for n in g]
+    assert sorted(seen) == sorted(flat)
+    # every pipeline covers all b blocks exactly once
+    for p in pipes:
+        blocks = [blk for s in p.stages for blk in s.blocks]
+        assert sorted(blocks) == list(range(b))
+        # stages ordered by first block (contiguity in model order)
+        firsts = [s.blocks[0] for s in p.stages]
+        assert firsts == sorted(firsts)
+
+
+def test_fig5_scenario():
+    """Paper Fig 5: 2→8, b=4 → 3 pipelines of (blocks 0-1 | blocks 2-3)."""
+    groups = [[2, 3, 4], [5, 6, 7]]      # destination nodes per sub-group
+    pipes = generate_pipelines(groups, 4)
+    assert len(pipes) == 3
+    chunks = kway_chunks(4, 2)
+    for p in pipes:
+        assert [list(s.blocks) for s in p.stages] == chunks
+    assert [p.nodes for p in pipes] == [[2, 5], [3, 6], [4, 7]]
+
+
+def test_single_subgroup_pipeline():
+    pipes = generate_pipelines([[1, 2, 3]], 6)
+    assert len(pipes) == 1
+    assert [list(s.blocks) for s in pipes[0].stages] == [[0, 1], [2, 3],
+                                                         [4, 5]]
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(3, 24), b=st.integers(2, 16), k=st.integers(1, 4))
+def test_plan_serving_capacity_monotone(n, b, k):
+    """Serving instances never decrease during a scale-out, and end at the
+    number of destination nodes (all mode-switched)."""
+    k = min(k, n - 1)
+    plan = plan_scale(n, b, k)
+    caps = [plan.serving_instances_at(s)
+            for s in range(plan.total_steps + 1)]
+    assert all(b_ >= a_ for a_, b_ in zip(caps, caps[1:]))
+    assert caps[-1] == n - k               # every destination serves locally
+    # execute-while-load: k-way scaling yields capacity strictly before
+    # completion whenever there are ≥2 destinations (paper §4.2/4.3)
+    if n - k >= 2 and k >= 2 and b >= 4:
+        assert any(c > 0 for c in caps[:-1])

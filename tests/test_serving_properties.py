@@ -1,0 +1,59 @@
+"""Property-based serving invariants (hypothesis): random bursty traces on
+random cluster sizes must preserve conservation, ordering and accounting
+for EVERY policy."""
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.baselines import POLICIES
+from repro.serving.simulator import Simulator
+from repro.serving.tiers import HardwareProfile
+from repro.serving.workload import Request, burstgpt_like
+
+HW = HardwareProfile()
+
+
+@settings(max_examples=10, deadline=None)
+@given(policy=st.sampled_from(sorted(POLICIES)),
+       n_nodes=st.integers(3, 16),
+       rps=st.floats(1.0, 30.0),
+       seed=st.integers(0, 5))
+def test_simulation_invariants(policy, n_nodes, rps, seed):
+    reqs = burstgpt_like(duration=30.0, base_rps=rps / 10,
+                         spikes=[(10, 3, rps)], seed=seed,
+                         model="llama2-7b", out_tokens=8)
+    if not reqs:
+        return
+    sim = Simulator(POLICIES[policy](HW), n_nodes, HW)
+    res = sim.run(reqs)
+    # conservation: every request served exactly once
+    assert len(res.ttft) == len(reqs)
+    assert len(res.completions) == len(reqs)
+    # physics: TTFT includes at least one prefill+token
+    sm = sim._model("llama2-7b")
+    t_min = sm.tok_time(HW)
+    assert all(t >= t_min * 0.99 for _, t in res.ttft)
+    # accounting: gpu time bounded by nodes × horizon, non-negative
+    assert 0.0 <= res.gpu_seconds <= n_nodes * (30.0 + 200.0)
+    # completions non-decreasing in time ordering by construction
+    toks = sum(t for _, t in res.completions)
+    assert toks == sum(r.out_tokens for r in reqs)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10))
+def test_lambdascale_never_slower_than_serverlessllm_p99(seed):
+    """On identical bursty traces λScale's tail should never lose to the
+    wait-for-full-load baseline by more than scheduling noise."""
+    reqs = burstgpt_like(duration=60.0, base_rps=0.5,
+                         spikes=[(20, 4, 25.0)], seed=seed,
+                         model="llama2-13b", out_tokens=8)
+    lam = Simulator(POLICIES["lambdascale"](HW), 10, HW).run(reqs)
+    sll = Simulator(POLICIES["serverlessllm"](HW), 10, HW).run(reqs)
+    assert lam.ttft_percentile(99) <= sll.ttft_percentile(99) * 1.10
+
+
+def test_request_dataclass_deterministic_fields():
+    r = Request(0, "m", 1.0, 10, 5)
+    assert (r.req_id, r.model, r.t_arrive, r.prompt_len, r.out_tokens) == \
+        (0, "m", 1.0, 10, 5)

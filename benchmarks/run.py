@@ -11,6 +11,7 @@ Prints ``name,value,derived`` CSV lines.  Modules:
   fig18    bench_num_blocks     (block-count elbow)
   roofline bench_roofline       (dry-run derived roofline table)
   engine   bench_engine         (live JAX us_per_call micro-benches)
+  cbatch   bench_continuous_batching (static vs continuous tokens/s)
 """
 from __future__ import annotations
 
@@ -18,10 +19,10 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_cache, bench_engine, bench_kway,
-                        bench_latency, bench_multicast, bench_num_blocks,
-                        bench_optimizations, bench_roofline, bench_trace,
-                        bench_throughput)
+from benchmarks import (bench_cache, bench_continuous_batching, bench_engine,
+                        bench_kway, bench_latency, bench_multicast,
+                        bench_num_blocks, bench_optimizations, bench_roofline,
+                        bench_trace, bench_throughput)
 
 MODULES = {
     "cache": bench_cache, "multicast": bench_multicast,
@@ -29,6 +30,7 @@ MODULES = {
     "trace": bench_trace, "kway": bench_kway,
     "optimizations": bench_optimizations, "num_blocks": bench_num_blocks,
     "roofline": bench_roofline, "engine": bench_engine,
+    "cbatch": bench_continuous_batching,
 }
 
 

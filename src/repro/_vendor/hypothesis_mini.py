@@ -1,0 +1,169 @@
+"""Minimal stand-in for the parts of ``hypothesis`` this repo uses.
+
+The property tests declare ``hypothesis`` as a real dependency
+(pyproject.toml) and CI installs it; this fallback exists so the suite
+still *runs* (not just collects) in hermetic environments without
+network access.  ``tests/conftest.py`` installs it into ``sys.modules``
+only when the real package is missing.
+
+Scope: ``@given`` with keyword strategies, ``@settings(max_examples,
+deadline)``, ``assume``, and the strategies the tests draw from
+(integers, floats, booleans, lists, tuples, sampled_from, just).
+Examples are generated from a PRNG seeded by the test's qualified name,
+so runs are deterministic; there is no shrinking — the failing example
+is reported verbatim.
+"""
+from __future__ import annotations
+
+import functools
+import random
+import types
+import zlib
+from typing import Any, Callable, Sequence
+
+__version__ = "0.0-mini"
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume(False): skip this example."""
+
+
+def assume(condition: Any) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+# -------------------------------------------------------------- strategies
+class SearchStrategy:
+    def __init__(self, draw: Callable[[random.Random], Any], desc: str):
+        self._draw = draw
+        self.desc = desc
+
+    def example_from(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def __repr__(self) -> str:
+        return self.desc
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda r: r.randint(min_value, max_value),
+                          f"integers({min_value}, {max_value})")
+
+
+def floats(min_value: float, max_value: float, **_: Any) -> SearchStrategy:
+    return SearchStrategy(lambda r: r.uniform(min_value, max_value),
+                          f"floats({min_value}, {max_value})")
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda r: r.random() < 0.5, "booleans()")
+
+
+def just(value: Any) -> SearchStrategy:
+    return SearchStrategy(lambda r: value, f"just({value!r})")
+
+
+def sampled_from(elements: Sequence) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(lambda r: elements[r.randrange(len(elements))],
+                          f"sampled_from({elements!r})")
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0,
+          max_size: int = 10) -> SearchStrategy:
+    def draw(r: random.Random):
+        n = r.randint(min_size, max_size)
+        return [elements.example_from(r) for _ in range(n)]
+    return SearchStrategy(draw, f"lists({elements.desc})")
+
+
+def tuples(*elements: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda r: tuple(e.example_from(r) for e in elements),
+        f"tuples({', '.join(e.desc for e in elements)})")
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+for _name in ("integers", "floats", "booleans", "just", "sampled_from",
+              "lists", "tuples"):
+    setattr(strategies, _name, globals()[_name])
+strategies.SearchStrategy = SearchStrategy
+
+
+# -------------------------------------------------------------- decorators
+DEFAULT_MAX_EXAMPLES = 50
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES,
+             deadline: Any = None, **_: Any):
+    def apply(func):
+        func._mini_max_examples = max_examples
+        return func
+    return apply
+
+
+def given(*arg_strategies: SearchStrategy, **kw_strategies: SearchStrategy):
+    def decorate(func):
+        kws = dict(kw_strategies)
+        if arg_strategies:
+            import inspect
+            names = [p for p in inspect.signature(func).parameters]
+            for name, strat in zip(names, arg_strategies):
+                kws[name] = strat
+
+        @functools.wraps(func)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_mini_max_examples",
+                        DEFAULT_MAX_EXAMPLES)
+            seed0 = zlib.crc32(func.__qualname__.encode())
+            ran = 0
+            for i in range(n * 4):          # head-room for assume() skips
+                if ran >= n:
+                    break
+                rng = random.Random(seed0 * 1_000_003 + i)
+                drawn = {k: s.example_from(rng) for k, s in kws.items()}
+                try:
+                    func(*args, **drawn, **kwargs)
+                except _Unsatisfied:
+                    continue
+                # Exception, not BaseException: KeyboardInterrupt and
+                # pytest's Skipped/Failed control flow must propagate
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example ({func.__qualname__}, "
+                        f"try {i}): {drawn!r}") from e
+                ran += 1
+        # pytest must not mistake drawn parameters for fixtures: hide the
+        # inner signature (inspect follows __wrapped__ otherwise)
+        import inspect
+        del wrapper.__wrapped__
+        params = [p for name, p in
+                  inspect.signature(func).parameters.items()
+                  if name not in kws]
+        wrapper.__signature__ = inspect.Signature(params)
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=func)
+        return wrapper
+    return decorate
+
+
+class HealthCheck:
+    all = staticmethod(lambda: [])
+    too_slow = data_too_large = filter_too_much = None
+
+
+def install() -> types.ModuleType:
+    """Register this module as ``hypothesis`` in ``sys.modules``."""
+    import sys
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    mod.strategies = strategies
+    mod.HealthCheck = HealthCheck
+    mod.__version__ = __version__
+    mod.__mini__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies
+    return mod

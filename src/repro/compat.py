@@ -1,0 +1,33 @@
+"""Version-compat aliases for jax APIs that moved between releases.
+
+Single home for every shim so a future jax rename is a one-line fix:
+
+* ``shard_map``    — top-level ``jax.shard_map`` on jax ≥ 0.5, under
+  ``jax.experimental.shard_map`` on 0.4.x.
+* ``CompilerParams`` — Pallas-TPU compiler options; named
+  ``TPUCompilerParams`` on jax 0.4.x.
+
+(`launch.mesh` keeps the mesh-construction shims ``_make_mesh`` /
+``mesh_context`` since those wrap repo-specific defaults.)
+"""
+from __future__ import annotations
+
+import jax
+
+try:                                    # jax ≥ 0.5 top-level export
+    shard_map = jax.shard_map
+except AttributeError:                  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+from jax.experimental.pallas import tpu as _pltpu
+
+try:
+    CompilerParams = _pltpu.CompilerParams
+except AttributeError:
+    try:
+        CompilerParams = _pltpu.TPUCompilerParams
+    except AttributeError as e:         # renamed again: fail at the source
+        raise ImportError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams "
+            "nor TPUCompilerParams; update repro.compat for this jax "
+            "version") from e

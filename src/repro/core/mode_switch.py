@@ -13,12 +13,15 @@ same code path (``forward(build_cache=True)``).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import TYPE_CHECKING, Dict, List, Sequence
 
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import forward
+
+if TYPE_CHECKING:                                    # pragma: no cover
+    from repro.serving.scheduler import SeqState
 
 
 def redistribute(request_ids: Sequence, nodes: Sequence[int]
@@ -40,6 +43,28 @@ def recompute_cache(cfg: ModelConfig, params, batch: Dict, *,
     out = forward(cfg, params, batch, build_cache=True, cache_len=cache_len,
                   moe_cf=None)
     return out["cache"]
+
+
+def handoff_requests(cfg: ModelConfig, params,
+                     seqs: Sequence["SeqState"], *, cache_len: int
+                     ) -> Dict[int, dict]:
+    """Rebuild decode caches for sequences handed off by a draining
+    instance (scheduler ``handoff()`` → local ``adopt()``).
+
+    Each sequence resumes mid-generation: its cache is recomputed once
+    over prompt + generated-so-far (all but the last token, which is the
+    next decode input), positioned exactly where the draining instance
+    stopped — the request re-enters DECODE, never the prefill queue.
+    Returns req_id -> batch-1 cache.
+    """
+    out: Dict[int, dict] = {}
+    for seq in seqs:
+        toks = seq.tokens_so_far
+        assert len(toks) >= 2, "nothing decoded yet — resubmit instead"
+        batch = {"tokens": jnp.asarray(toks[:-1], jnp.int32)[None]}
+        out[seq.req_id] = recompute_cache(cfg, params, batch,
+                                          cache_len=cache_len)
+    return out
 
 
 def recompute_cost(cfg: ModelConfig, tokens_so_far: int,

@@ -1,5 +1,6 @@
 from repro.distributed.collectives import multicast, multicast_reference
-from repro.distributed.pipeline import pipelined_forward, stage_params_from_trunk
+from repro.distributed.pipeline import (PipelinedEngine, pipelined_forward,
+                                        stage_params_from_trunk)
 
 __all__ = ["multicast", "multicast_reference", "pipelined_forward",
-           "stage_params_from_trunk"]
+           "stage_params_from_trunk", "PipelinedEngine"]

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -94,7 +96,7 @@ def decode_attention(q, k, v, spos, pos, *, window=None, bk: int = 128,
             pltpu.VMEM((1, 1), jnp.float32),
             pltpu.VMEM((1, dh), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(q.reshape(B * H, dh), kT, vT, spos, pos.reshape(B, 1))

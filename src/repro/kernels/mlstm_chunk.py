@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import CompilerParams
+
 NEG = -1e30
 
 
@@ -113,7 +115,7 @@ def mlstm_chunkwise(q, k, v, i_pre, f_pre, *, chunk: int = 128,
             pltpu.VMEM((1, dh), jnp.float32),
             pltpu.VMEM((1, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(q.reshape(BH, S, dh), k.reshape(BH, S, dh), v.reshape(BH, S, dh),

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import CompilerParams
+
 
 def _kernel(a_ref, b_ref, h0_ref, o_ref, h_scr, *, bt: int):
     it = pl.program_id(2)
@@ -58,7 +60,7 @@ def rglru_scan(a, b, h0, *, bt: int = 256, bd: int = 128,
                                lambda ib, id_, it: (ib, it, id_)),
         out_shape=jax.ShapeDtypeStruct((B, S, d), a.dtype),
         scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b, h0)

@@ -36,7 +36,11 @@ COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _OP_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\(")
-_DOT_OPERANDS_RE = re.compile(r"dot\(\s*%?([\w.\-]+),\s*%?([\w.\-]+)")
+# operands may be bare (`dot(%a, %b)`) or typed (`dot(f32[8,8]{1,0} %a,
+# f32[8,8]{1,0} %b)` — newer XLA prints the shape before each name)
+_DOT_OPERANDS_RE = re.compile(
+    r"dot\(\s*(?:[\w\[\],{}]+\s+)?%?([\w.\-]+)\s*,"
+    r"\s*(?:[\w\[\],{}]+\s+)?%?([\w.\-]+)")
 _COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$")
 _CALLEE_RE = re.compile(r"(?:body|condition|to_apply|branch_computations|"
                         r"called_computations)=\{?%?([\w.\-]+)")

@@ -11,20 +11,35 @@ from __future__ import annotations
 import jax
 
 
+def mesh_context(mesh):
+    """``jax.set_mesh(mesh)`` where available (newer jax); sharded jit
+    carries the mesh through NamedShardings on older versions, so a
+    null context is equivalent there."""
+    import contextlib
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh else contextlib.nullcontext()
+
+
+def _make_mesh(shape, axes):
+    # jax.sharding.AxisType only exists on newer jax; older versions
+    # default every axis to Auto anyway.
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(n_nodes: int = 8, axis: str = "node"):
     """1-D mesh for λPipe multicast / pipeline tests on forced host
     devices."""
-    return jax.make_mesh(
-        (n_nodes,), (axis,),
-        axis_types=(jax.sharding.AxisType.Auto,))
+    return _make_mesh((n_nodes,), (axis,))
 
 
 def data_axes(mesh) -> tuple:

@@ -4,6 +4,7 @@ comparing λScale's execute-while-load scaling against the baselines on the
 calibrated simulator.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --requests 32
+  PYTHONPATH=src python -m repro.launch.serve --continuous --requests 24
   PYTHONPATH=src python -m repro.launch.serve --sim --model llama2-13b \
       --nodes 12 --rps 50
 """
@@ -17,11 +18,20 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.models import init_params, make_batch
-from repro.serving import InferenceEngine
+from repro.serving import ContinuousBatchingEngine, InferenceEngine
 from repro.serving.baselines import POLICIES
 from repro.serving.simulator import Simulator
 from repro.serving.tiers import HardwareProfile
 from repro.serving.workload import constant_stress
+
+
+def mixed_trace(n: int, prompt: int, tokens: int, seed: int = 0):
+    """Mixed-length request list (prompt_len, out_tokens) around the
+    requested means — the workload shape where continuous batching wins."""
+    rng = np.random.default_rng(seed)
+    return [(int(rng.integers(max(4, prompt // 2), prompt * 2)),
+             int(rng.integers(max(2, tokens // 2), tokens * 2)))
+            for _ in range(n)]
 
 
 def run_engine(args) -> None:
@@ -38,6 +48,35 @@ def run_engine(args) -> None:
     print(f"arch={cfg.arch_id}: served {args.requests} requests × "
           f"{args.tokens} tokens in {dt:.2f}s "
           f"({total/dt:.1f} tok/s on CPU); output shape {out.shape}")
+
+
+def run_continuous(args) -> None:
+    """Drive the continuous-batching engine through a mixed-length spike:
+    every request arrives at once (the burst), slots refill mid-decode."""
+    if args.requests < 1:
+        raise SystemExit("--continuous needs --requests >= 1")
+    cfg = reduced(get_config(args.arch), d_model=args.d_model, vocab=2048)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    trace = mixed_trace(args.requests, args.prompt, args.tokens)
+    max_len = max(p + t for p, t in trace)
+    rng = np.random.default_rng(1)
+    prompts = [list(rng.integers(0, cfg.vocab_size, size=p)) for p, _ in trace]
+
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=args.slots,
+                                   max_len=max_len)
+    for (plen, otok), prompt in zip(trace, prompts):
+        eng.submit(prompt, otok)
+    t0 = time.time()
+    out = eng.run()
+    dt = time.time() - t0
+    total = sum(len(v) for v in out.values())
+    s = eng.stats
+    print(f"arch={cfg.arch_id} continuous batching: {len(trace)} requests "
+          f"({args.slots} slots) → {total} tokens in {dt:.2f}s "
+          f"({total/dt:.1f} tok/s on CPU)")
+    print(f"  prefills={s['prefills']} decode_ticks={s['decode_ticks']} "
+          f"mean decode batch="
+          f"{s['decode_tokens']/max(s['decode_ticks'],1):.2f}")
 
 
 def run_sim(args) -> None:
@@ -57,11 +96,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sim", action="store_true",
                     help="simulator comparison instead of the live engine")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching engine on a mixed-length trace")
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--d-model", type=int, default=256)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt", type=int, default=64)
     ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--model", default="llama2-13b")
     ap.add_argument("--nodes", type=int, default=12)
     ap.add_argument("--rps", type=float, default=50.0)
@@ -69,6 +111,8 @@ def main() -> None:
     args = ap.parse_args()
     if args.sim:
         run_sim(args)
+    elif args.continuous:
+        run_continuous(args)
     else:
         run_engine(args)
 

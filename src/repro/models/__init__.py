@@ -1,5 +1,8 @@
+from repro.models.cache_ops import (batch_axes, cache_batch_concat,
+                                    cache_gather, cache_scatter)
 from repro.models.model import (decode_step, forward, init_cache,
                                 init_params, make_batch)
 
 __all__ = ["init_params", "forward", "decode_step", "init_cache",
-           "make_batch"]
+           "make_batch", "batch_axes", "cache_scatter", "cache_gather",
+           "cache_batch_concat"]

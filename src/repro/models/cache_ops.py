@@ -1,0 +1,72 @@
+"""Batched decode-cache gather/scatter over KV-cache slots.
+
+The continuous-batching engine keeps ONE pooled decode cache of batch
+size ``n_slots`` and scatters freshly-prefilled single-sequence caches
+into free slots (and gathers a slot back out at mode-switch handoff).
+Cache pytrees mix leaf layouts — trunk leaves carry a leading
+pattern-repetition axis before batch, KV leaves are (B, W, kv, dh),
+recurrent states (B, d), scalars are unbatched — so the batch axis is
+*detected* per leaf by comparing the pooled tree against a batch-1
+reference of the same config: the unique axis where the sizes differ is
+the batch axis; leaves with identical shapes are shared/unbatched and
+marked with ``-1`` (a sentinel rather than None so the axes tree has the
+same pytree structure as the cache and maps cleanly under ``tree.map``).
+
+All three operations are pure jnp and trace cleanly under ``jax.jit``
+with a *traced* slot index (``dynamic_update_slice_in_dim``), so the
+engine fuses prefill + scatter into one compiled executable.
+"""
+from __future__ import annotations
+
+from typing import Any, List
+
+import jax
+import jax.numpy as jnp
+
+UNBATCHED = -1
+
+
+def batch_axes(pool_cache: Any, single_cache: Any) -> Any:
+    """Pytree of per-leaf batch-axis indices (UNBATCHED for shared leaves).
+
+    ``pool_cache`` and ``single_cache`` must be structurally identical
+    caches built for batch sizes B>1 and 1 respectively."""
+    def axis(p, s):
+        assert p.ndim == s.ndim, (p.shape, s.shape)
+        diff = [i for i, (a, b) in enumerate(zip(p.shape, s.shape))
+                if a != b]
+        if not diff:
+            return UNBATCHED
+        assert len(diff) == 1 and s.shape[diff[0]] == 1, \
+            f"ambiguous batch axis: {p.shape} vs {s.shape}"
+        return diff[0]
+    return jax.tree.map(axis, pool_cache, single_cache)
+
+
+def cache_scatter(pool_cache: Any, seq_cache: Any, slot, axes: Any) -> Any:
+    """Write a batch-1 cache into slot ``slot`` (int or traced scalar) of
+    the pooled cache."""
+    def scatter(pool, seq, ax):
+        if ax == UNBATCHED:
+            return pool
+        return jax.lax.dynamic_update_slice_in_dim(
+            pool, seq.astype(pool.dtype), slot, axis=ax)
+    return jax.tree.map(scatter, pool_cache, seq_cache, axes)
+
+
+def cache_gather(pool_cache: Any, slot, axes: Any) -> Any:
+    """Extract slot ``slot`` of a pooled cache as a batch-1 cache."""
+    def gather(pool, ax):
+        if ax == UNBATCHED:
+            return pool
+        return jax.lax.dynamic_slice_in_dim(pool, slot, 1, axis=ax)
+    return jax.tree.map(gather, pool_cache, axes)
+
+
+def cache_batch_concat(seq_caches: List[Any], axes: Any) -> Any:
+    """Stack batch-1 caches along their batch axes (static-batch helper)."""
+    def cat(ax, *leaves):
+        if ax == UNBATCHED:
+            return leaves[0]
+        return jnp.concatenate(leaves, axis=ax)
+    return jax.tree.map(cat, axes, *seq_caches)

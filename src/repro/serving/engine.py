@@ -1,23 +1,36 @@
-"""JAX inference engine: batched prefill + autoregressive decode.
+"""JAX inference engines: static-batch and continuous-batching.
 
-The single-replica ("local mode") execution path of λScale's model manager.
-Pipelined (execute-while-load) execution uses ``repro.distributed.pipeline``
-for the trunk; mode switching back to this engine is exercised in
-``tests/test_mode_switch.py`` via ``repro.core.mode_switch.recompute_cache``.
+The single-replica ("local mode") execution path of λScale's model
+manager.  ``InferenceEngine`` is the static loop kept as the reference
+implementation (and the baseline the continuous-batching benchmark beats);
+``ContinuousBatchingEngine`` executes the request-level schedule from
+``repro.serving.scheduler`` over a pooled KV cache: new arrivals are
+prefilled into free slots while every in-flight sequence keeps decoding,
+and finished sequences free their slot mid-generation.
+
+Pipelined (execute-while-load) execution uses
+``repro.distributed.pipeline.PipelinedEngine`` for the trunk; mode
+switching hands its live slot state to this engine via
+``repro.core.mode_switch.handoff_requests`` (drain → adopt, §4.4).
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import decode_step, forward, init_cache
+from repro.models import (batch_axes, cache_gather, cache_scatter,
+                          decode_step, forward, init_cache)
+from repro.serving.scheduler import (DEFAULT_SLOTS, Scheduler, SeqState,
+                                     SlotState)
 
 
 class InferenceEngine:
+    """Static-batch reference engine: one prefill, fixed decode loop."""
+
     def __init__(self, cfg: ModelConfig, params, *, max_len: int = 4096):
         self.cfg = cfg
         self.params = params
@@ -44,10 +57,12 @@ class InferenceEngine:
 
     def generate(self, batch: Dict, max_new_tokens: int,
                  *, greedy: bool = True, key=None,
-                 temperature: float = 1.0) -> jnp.ndarray:
+                 temperature: float = 1.0,
+                 cache_len: Optional[int] = None) -> jnp.ndarray:
         """Returns (B, max_new_tokens) generated token ids."""
         logits, cache = self.prefill(
-            batch, cache_len=batch["tokens"].shape[1] + max_new_tokens)
+            batch,
+            cache_len=cache_len or batch["tokens"].shape[1] + max_new_tokens)
         toks = []
         tok = self._sample(logits, greedy, key, temperature, 0)
         toks.append(tok)
@@ -63,3 +78,202 @@ class InferenceEngine:
         k = jax.random.fold_in(key, i)
         return jax.random.categorical(k, logits / temperature).astype(
             jnp.int32)
+
+
+# ===================================================== continuous batching
+@functools.lru_cache(maxsize=None)
+def _cb_executables(cfg: ModelConfig, max_len: int):
+    """Jitted (prefill+scatter, decode+argmax) shared across every engine
+    built for the same (config, pool length) — a new engine instance must
+    not recompile, and slot index / token values are traced so one
+    executable serves all slots and (per prompt length) all requests.
+
+    Both executables thread ``last_tok`` (n_slots,) through the device so
+    the decode loop never blocks on a host read: greedy continuation and
+    count-based retirement are token-value-free, and the actual ids are
+    fetched lazily (one gather at flush points, not one per tick)."""
+    axes = batch_axes(init_cache(cfg, 2, max_len),
+                      init_cache(cfg, 1, max_len))
+
+    def prefill_scatter(params, pool, last_tok, tokens, slot):
+        out = forward(cfg, params, {"tokens": tokens}, build_cache=True,
+                      cache_len=max_len, moe_cf=None)
+        first = jnp.argmax(out["logits"][:, -1], -1).astype(jnp.int32)
+        last_tok = jax.lax.dynamic_update_slice(last_tok, first, (slot,))
+        return last_tok, cache_scatter(pool, out["cache"], slot, axes)
+
+    def step(params, cache, last_tok):
+        logits, cache = decode_step(cfg, params, cache, last_tok,
+                                    cache["pos"])
+        return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+    return jax.jit(prefill_scatter), jax.jit(step), axes
+
+
+class ContinuousBatchingEngine:
+    """Slot-pool engine executing the continuous-batching schedule.
+
+    One pooled decode cache of batch size ``n_slots`` lives on device;
+    each scheduler tick (a) prefills up to ``max_prefill_per_tick`` queued
+    requests into free slots (single-sequence prefill, cache scattered
+    into the pool) and (b) advances the whole pool one decode step,
+    keeping only the tokens of live slots.  Distinct prompt lengths each
+    compile one prefill executable; the decode step compiles once.
+
+    Greedy decoding only: continuous batching re-batches sequences across
+    ticks, so per-request sampling streams would not be reproducible
+    against the static engine.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *,
+                 n_slots: int = DEFAULT_SLOTS, max_len: int = 512,
+                 max_prefill_per_tick: int = 1):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.sched = Scheduler(n_slots,
+                               max_prefill_per_tick=max_prefill_per_tick)
+        self.cache = init_cache(cfg, n_slots, max_len)
+        self._prefill_scatter, self._step, self._axes = \
+            _cb_executables(cfg, max_len)
+        self._last_tok = jnp.zeros((n_slots,), jnp.int32)
+        self._next_id = 0
+        # lazily-resolved token ids: (seq, index, slot, device_array).
+        # EOS-terminated sequences need token values at schedule time, so
+        # any eos_id switches the engine to per-tick host sync.
+        self._pending: List[Tuple[SeqState, int, int, jnp.ndarray]] = []
+        self._eager = False
+
+    # ------------------------------------------------------------- intake
+    def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
+               req_id: Optional[int] = None,
+               eos_id: Optional[int] = None) -> int:
+        if req_id is None:
+            req_id = self._next_id
+        self._next_id = max(self._next_id, req_id) + 1
+        if len(prompt) + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request needs {len(prompt) + max_new_tokens} cache slots "
+                f"but the pool was built with max_len={self.max_len}")
+        if eos_id is not None:
+            self._eager = True
+        self.sched.submit(SeqState(req_id, list(prompt), max_new_tokens,
+                                   eos_id=eos_id))
+        return req_id
+
+    # ------------------------------------------------------------ execution
+    def _record(self, seq: SeqState, slot: int, arr) -> int:
+        """Register a device-side token for ``seq``; returns the id to
+        append (the real value in eager mode, a placeholder otherwise)."""
+        if self._eager:
+            return int(arr[slot])
+        self._pending.append((seq, len(seq.generated), slot, arr))
+        return -1
+
+    def flush(self) -> None:
+        """Resolve placeholder token ids (single blocking gather)."""
+        if not self._pending:
+            return
+        arrs = jax.device_get([a for _, _, _, a in self._pending])
+        for (seq, idx, slot, _), vals in zip(self._pending, arrs):
+            seq.generated[idx] = int(vals[slot])
+        self._pending = []
+
+    def _do_prefill(self, slot: int, seq: SeqState) -> None:
+        tokens = jnp.asarray(seq.tokens_so_far, jnp.int32)[None]
+        self._last_tok, self.cache = self._prefill_scatter(
+            self.params, self.cache, self._last_tok, tokens, slot)
+        self.sched.on_prefilled(slot, self._record(seq, slot,
+                                                   self._last_tok))
+
+    def step(self) -> bool:
+        """Run one scheduler tick.  Returns False when nothing ran."""
+        tick = self.sched.next_tick()
+        if tick.idle:
+            return False
+        # drop back to the sync-free path once no live/queued sequence
+        # terminates on EOS (the latch would otherwise cost a host read
+        # per token for the rest of the engine's lifetime)
+        if self._eager and not any(
+                s is not None and s.eos_id is not None
+                for s in self.sched.slots) and not any(
+                s.eos_id is not None for s in self.sched.queue):
+            self._eager = False
+        # decode first: the pooled decode step advances EVERY cache row,
+        # so freshly-prefilled rows must be scattered after it, not before
+        # (their ignored pseudo-step would otherwise corrupt pos/KV).
+        if tick.decode:
+            self._last_tok, self.cache = self._step(self.params, self.cache,
+                                                    self._last_tok)
+            for slot in tick.decode:
+                seq = self.sched.slots[slot]
+                self.sched.on_decoded(slot, self._record(seq, slot,
+                                                         self._last_tok))
+        for slot, seq in tick.admit:
+            self._do_prefill(slot, seq)
+        return True
+
+    def run(self) -> Dict[int, List[int]]:
+        """Drive ticks until queue and slots are empty; returns
+        req_id -> generated tokens."""
+        while self.step():
+            pass
+        self.flush()
+        return {rid: s.generated for rid, s in self.sched.finished.items()}
+
+    # --------------------------------------------------------- mode switch
+    def drain(self) -> None:
+        self.sched.drain()
+
+    def handoff(self) -> List[Tuple[SeqState, Any]]:
+        """Export in-flight sequences with their live slot caches.
+
+        Sequences still queued (never prefilled) carry ``None`` caches."""
+        self.flush()          # adopters need concrete token ids (§4.4)
+        out: List[Tuple[SeqState, Any]] = []
+        live = {i: s for i, s in enumerate(self.sched.slots)
+                if s is not None and not s.finished
+                and self.sched.state[i] is not SlotState.FREE}
+        for slot, seq in live.items():
+            out.append((seq, cache_gather(self.cache, slot, self._axes)))
+        for seq in self.sched.handoff():
+            if seq.req_id not in {s.req_id for s, _ in out}:
+                out.append((seq, None))
+        return out
+
+    def adopt(self, pairs: Sequence[Tuple[SeqState, Any]]) -> None:
+        """Adopt handed-off sequences (mode switch, §4.4).
+
+        A sequence arriving with a live cache is scattered straight into
+        a free slot; one arriving without (e.g. from a pipelined instance
+        that keeps no decode cache) has its cache rebuilt once via
+        ``repro.core.mode_switch.handoff_requests`` — either way it
+        resumes in DECODE and never re-enters the prefill queue.
+        Sequences that never started decode are submitted normally."""
+        from repro.core.mode_switch import handoff_requests
+        if any(s.eos_id is not None for s, _ in pairs):
+            self._eager = True
+        started = [(s, c) for s, c in pairs if s.generated]
+        fresh = [s for s, c in pairs if not s.generated]
+        rebuilt = handoff_requests(
+            self.cfg, self.params,
+            [s for s, c in started if c is None], cache_len=self.max_len)
+        caches = {s.req_id: c for s, c in started if c is not None}
+        caches.update(rebuilt)
+        for seq, _ in started:
+            free = self.sched.free_slots()
+            if not free:
+                raise RuntimeError("no free slot for handoff")
+            slot = free[0]
+            self.cache = cache_scatter(self.cache, caches[seq.req_id], slot,
+                                       self._axes)
+            self._last_tok = self._last_tok.at[slot].set(seq.generated[-1])
+            self.sched.adopt(seq, slot)
+        for seq in fresh:
+            self.sched.submit(seq)
+
+    # ------------------------------------------------------------- status
+    @property
+    def stats(self) -> Dict[str, int]:
+        return self.sched.stats

@@ -1,0 +1,236 @@
+"""Request-level continuous-batching scheduler (λScale model manager).
+
+A serving instance — local replica or λPipe execution pipeline — owns a
+fixed pool of KV-cache *slots*.  The scheduler admits queued requests into
+free slots (prefill), interleaves those prefills with batched decode of
+every in-flight sequence, and retires finished sequences so freed slots
+are refilled mid-generation.  It is pure Python and backend-agnostic: the
+JAX engines (``repro.serving.engine.ContinuousBatchingEngine``,
+``repro.distributed.pipeline.PipelinedEngine``) execute the actions it
+emits, the discrete-event simulator prices instances with the same slot
+constants, and the property tests drive it directly.
+
+Slot state machine (see docs/architecture.md):
+
+    FREE ──admit──▶ PREFILL ──first token──▶ DECODE ──finish──▶ FREE
+                                                │
+                                         drain/handoff
+                                                ▼
+                                      adopted by another
+                                      instance in DECODE
+
+Draining (mode switch, §4.4): a draining instance admits nothing new;
+its in-flight sequences are exported by ``handoff()`` and re-enter a
+local replica directly in DECODE — the request never re-runs its
+completed prefill phase.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional, Tuple
+
+# ------------------------------------------------------ shared constants
+# These ground the discrete-event simulator in the real engine: the
+# simulator's per-instance concurrency and pipelined-mode penalties are
+# imported from here, so the capacity it prices is the capacity the
+# scheduler actually exposes.
+DEFAULT_SLOTS = 8                # KV-cache slots per serving instance
+PIPELINE_TOK_OVERHEAD = 1.10     # per-token inflation in pipelined mode
+HOP_LATENCY = 2e-4               # activation hand-off per stage per token
+MAX_PREFILL_PER_TICK = 1         # decode never starves behind admissions
+
+
+def instance_slot_count(kind: str, n_nodes: int,
+                        base: int = DEFAULT_SLOTS) -> int:
+    """Concurrent requests an instance sustains.  2-D pipelining (§4.3):
+    a g-stage pipeline keeps all g nodes busy on different in-flight
+    batches, so it exposes g× the per-replica slots."""
+    return base * (n_nodes if kind == "pipeline" else 1)
+
+
+# -------------------------------------------------------------- sequences
+class SlotState(enum.Enum):
+    FREE = "free"
+    PREFILL = "prefill"
+    DECODE = "decode"
+
+
+@dataclasses.dataclass
+class SeqState:
+    """One in-flight request: everything needed to continue it anywhere.
+
+    ``prompt`` and ``generated`` are plain int lists so the state can be
+    handed between instances (mode switch) without touching device
+    buffers; the owning engine keeps the device-side cache per slot.
+    """
+    req_id: int
+    prompt: List[int]
+    max_new_tokens: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    eos_id: Optional[int] = None
+    submit_tick: int = 0
+    first_token_tick: Optional[int] = None
+    handoffs: int = 0
+
+    @property
+    def pos(self) -> int:
+        """Next decode position = tokens processed so far."""
+        return len(self.prompt) + len(self.generated)
+
+    @property
+    def tokens_so_far(self) -> List[int]:
+        return self.prompt + self.generated
+
+    @property
+    def finished(self) -> bool:
+        if len(self.generated) >= self.max_new_tokens:
+            return True
+        return (self.eos_id is not None and self.generated
+                and self.generated[-1] == self.eos_id)
+
+
+@dataclasses.dataclass
+class Tick:
+    """One scheduling round, executed by an engine.
+
+    ``admit``: (slot, seq) pairs to prefill this round.
+    ``decode``: slots holding live sequences to advance one token.
+    """
+    admit: List[Tuple[int, SeqState]]
+    decode: List[int]
+
+    @property
+    def idle(self) -> bool:
+        return not self.admit and not self.decode
+
+
+# -------------------------------------------------------------- scheduler
+class Scheduler:
+    """Continuous batching over a fixed slot pool.
+
+    The policy is FCFS admission with bounded prefills per tick
+    (``max_prefill_per_tick``) so a queue of new arrivals cannot starve
+    decode of in-flight sequences — each tick advances every live slot
+    by one token *and* admits at most a few newcomers.
+    """
+
+    def __init__(self, n_slots: int = DEFAULT_SLOTS, *,
+                 max_prefill_per_tick: int = MAX_PREFILL_PER_TICK):
+        self.n_slots = n_slots
+        self.max_prefill_per_tick = max_prefill_per_tick
+        self.slots: List[Optional[SeqState]] = [None] * n_slots
+        self.state: List[SlotState] = [SlotState.FREE] * n_slots
+        self.queue: List[SeqState] = []
+        self.draining = False
+        self.tick_count = 0
+        self.finished: Dict[int, SeqState] = {}
+        self.stats = {"prefills": 0, "decode_ticks": 0, "decode_tokens": 0,
+                      "admitted": 0, "retired": 0, "adopted": 0}
+
+    # ------------------------------------------------------------- intake
+    def submit(self, seq: SeqState) -> None:
+        if self.draining:
+            raise RuntimeError("draining instance admits no new requests")
+        seq.submit_tick = self.tick_count
+        self.queue.append(seq)
+
+    def adopt(self, seq: SeqState, slot: int) -> None:
+        """Place a handed-off sequence directly into DECODE (mode switch):
+        its prefill already ran on the draining instance and is not
+        re-entered here."""
+        assert self.state[slot] is SlotState.FREE
+        seq.handoffs += 1
+        self.slots[slot] = seq
+        self.state[slot] = SlotState.DECODE
+        self.stats["adopted"] += 1
+
+    # ------------------------------------------------------------ tick
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.state) if s is SlotState.FREE]
+
+    def live_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.state)
+                if s is SlotState.DECODE]
+
+    def next_tick(self) -> Tick:
+        """Plan one round: retire finished, refill freed slots, decode."""
+        self.tick_count += 1
+        self._retire_finished()
+        admit: List[Tuple[int, SeqState]] = []
+        if not self.draining:
+            for slot in self.free_slots():
+                if not self.queue or len(admit) >= self.max_prefill_per_tick:
+                    break
+                seq = self.queue.pop(0)
+                self.slots[slot] = seq
+                self.state[slot] = SlotState.PREFILL
+                admit.append((slot, seq))
+                self.stats["admitted"] += 1
+        decode = self.live_slots()
+        if decode:
+            self.stats["decode_ticks"] += 1
+            self.stats["decode_tokens"] += len(decode)
+        self.stats["prefills"] += len(admit)
+        return Tick(admit=admit, decode=decode)
+
+    # ----------------------------------------------------- engine feedback
+    def on_prefilled(self, slot: int, first_token: int) -> None:
+        """Engine reports the prefill of ``slot`` produced its first
+        token; the sequence joins the decode batch next tick."""
+        seq = self.slots[slot]
+        assert seq is not None and self.state[slot] is SlotState.PREFILL
+        seq.generated.append(first_token)
+        if seq.first_token_tick is None:
+            seq.first_token_tick = self.tick_count
+        self.state[slot] = SlotState.DECODE
+
+    def on_decoded(self, slot: int, token: int) -> None:
+        seq = self.slots[slot]
+        assert seq is not None and self.state[slot] is SlotState.DECODE
+        seq.generated.append(token)
+
+    def _retire_finished(self) -> None:
+        for i, seq in enumerate(self.slots):
+            if seq is not None and seq.finished:
+                self.finished[seq.req_id] = seq
+                self.slots[i] = None
+                self.state[i] = SlotState.FREE
+                self.stats["retired"] += 1
+
+    # --------------------------------------------------------- mode switch
+    def drain(self) -> None:
+        """Stop admitting; in-flight sequences keep decoding until handed
+        off (or until they finish on this instance)."""
+        self.draining = True
+
+    def handoff(self) -> List[SeqState]:
+        """Export live slot state for adoption by another instance.
+
+        Returns every in-flight sequence (queued-but-unstarted ones are
+        included last — they carry no cache and simply re-queue).  The
+        slots are freed; this instance can be torn down once the caller
+        has adopted the sequences."""
+        self._retire_finished()      # completed-but-unretired stay here
+        out: List[SeqState] = []
+        for i, seq in enumerate(self.slots):
+            if seq is not None and not seq.finished:
+                out.append(seq)
+            self.slots[i] = None
+            self.state[i] = SlotState.FREE
+        out.extend(self.queue)
+        self.queue = []
+        return out
+
+    # ------------------------------------------------------------- status
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    @property
+    def in_flight(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
+    @property
+    def done(self) -> bool:
+        return not self.queue and self.in_flight == 0

@@ -25,6 +25,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs import get_config
 from repro.configs.base import ModelConfig
+from repro.serving.scheduler import (DEFAULT_SLOTS, HOP_LATENCY,
+                                     PIPELINE_TOK_OVERHEAD,
+                                     instance_slot_count)
 from repro.serving.tiers import ClusterState, HardwareProfile
 from repro.serving.workload import Request
 
@@ -54,8 +57,11 @@ class SimModel:
 
 
 # --------------------------------------------------------------- instances
-PIPELINE_TOK_OVERHEAD = 1.10     # per-token inflation in pipelined mode
-HOP_LATENCY = 2e-4               # activation hand-off per stage per token
+# Instance concurrency and pipelined-mode penalties are the scheduler's
+# constants (repro.serving.scheduler): the capacity the simulator prices
+# is the slot pool the continuous-batching engine actually executes, and
+# ``Instance.draining`` mirrors ``Scheduler.drain`` (no admissions; live
+# slots run to completion or hand off).
 
 
 @dataclasses.dataclass
@@ -131,7 +137,8 @@ class Simulator:
     """Event-driven serving simulation under a scaling policy."""
 
     def __init__(self, policy, n_nodes: int, hw: HardwareProfile, *,
-                 slots_per_instance: int = 8, keepalive: float = 5.0,
+                 slots_per_instance: int = DEFAULT_SLOTS,
+                 keepalive: float = 5.0,
                  autoscale_dt: float = 0.25, scale_headroom: int = 0,
                  model_configs: Optional[Dict[str, ModelConfig]] = None):
         self.policy = policy
@@ -226,8 +233,8 @@ class Simulator:
                                               now):
                 # 2-D pipelining (§4.3): a g-stage pipeline keeps all g
                 # nodes busy on different in-flight batches → g× slots.
-                n_slots = self.slots * (len(spec["nodes"])
-                                        if spec["kind"] == "pipeline" else 1)
+                n_slots = instance_slot_count(spec["kind"],
+                                              len(spec["nodes"]), self.slots)
                 iid = next(self._iid)
                 inst = Instance(iid, m, tuple(spec["nodes"]), spec["kind"],
                                 spec["ready"], [0.0] * n_slots,

@@ -8,6 +8,12 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 sys.path.insert(0, SRC)
 
+try:                                   # real dependency (pyproject.toml)
+    import hypothesis                  # noqa: F401
+except ModuleNotFoundError:            # hermetic env: vendored fallback
+    from repro._vendor import hypothesis_mini
+    hypothesis_mini.install()
+
 
 def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600
                      ) -> str:

@@ -8,6 +8,8 @@ import pytest
 from repro.configs import get_config, list_archs, reduced
 from repro.models import decode_step, forward, make_batch, init_params
 
+pytestmark = pytest.mark.slow    # all-architecture decode loops
+
 TOL = 2e-4
 
 

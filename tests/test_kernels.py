@@ -10,6 +10,8 @@ from repro.kernels.ops import (decode_attention, flash_attention,
 from repro.kernels.ref import (decode_attention_ref, flash_attention_ref,
                                mlstm_chunkwise_ref, rglru_scan_ref)
 
+pytestmark = pytest.mark.slow    # Pallas interpret-mode shape/dtype sweeps
+
 RNG = np.random.default_rng(0)
 
 

@@ -11,6 +11,8 @@ from repro.configs import get_config, reduced
 from repro.models import forward, init_params, make_batch
 from repro.serving.cluster import LiveCluster
 
+pytestmark = pytest.mark.slow    # full live-cluster scale-out with real logits
+
 TOL = 2e-4
 
 

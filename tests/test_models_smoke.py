@@ -9,6 +9,8 @@ from repro.configs import SHAPES, get_config, list_archs, reduced
 from repro.models import forward, init_cache, init_params, make_batch
 from repro.training import AdamWConfig, Trainer, data_iterator
 
+pytestmark = pytest.mark.slow    # all-architecture forward/train sweep
+
 ARCHS = list_archs()
 
 

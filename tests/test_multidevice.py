@@ -4,6 +4,8 @@ miniature multi-pod dry-run.  These must run in fresh processes because
 jax locks the device count at first init."""
 import pytest
 
+pytestmark = pytest.mark.slow    # multi-device subprocess runs
+
 MULTICAST = r"""
 import jax, jax.numpy as jnp, numpy as np
 from repro.core.multicast import binomial_schedule, kway_schedule
@@ -61,17 +63,17 @@ print("PIPELINE-OK")
 MINI_DRYRUN = r"""
 import jax, jax.numpy as jnp
 from repro.configs import get_config, reduced, SHAPES
+from repro.launch.mesh import _make_mesh, mesh_context
 from repro.launch.specs import build_dryrun
 import dataclasses
 
 # mini production mesh: (pod, data, model) = (2, 2, 2) on 8 host devices
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = _make_mesh((2, 2, 2), ("pod", "data", "model"))
 shape = dataclasses.replace(SHAPES["train_4k"], seq_len=128, global_batch=8)
 for arch in ("qwen2.5-3b", "qwen2-moe-a2.7b"):
     cfg = reduced(get_config(arch))
     fn, args, in_sh = build_dryrun(cfg, shape, mesh)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         compiled = jax.jit(fn, in_shardings=in_sh).lower(*args).compile()
     mem = compiled.memory_analysis()
     assert mem.temp_size_in_bytes > 0
@@ -79,7 +81,7 @@ for arch in ("qwen2.5-3b", "qwen2-moe-a2.7b"):
     dshape = dataclasses.replace(SHAPES["decode_32k"], seq_len=256,
                                  global_batch=8)
     fn, args, in_sh = build_dryrun(cfg, dshape, mesh)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         compiled = jax.jit(fn, in_shardings=in_sh).lower(*args).compile()
 print("MINIDRYRUN-OK")
 """
@@ -134,3 +136,44 @@ def test_mini_multipod_dryrun(subproc):
 @pytest.mark.slow
 def test_execute_while_load_end_to_end(subproc):
     assert "EWL-OK" in subproc(EWL_END_TO_END, 8)
+
+
+CB_PIPELINE = r"""
+import dataclasses, jax, jax.numpy as jnp
+from repro.configs import get_config, reduced
+from repro.distributed.pipeline import PipelinedEngine
+from repro.launch.mesh import make_test_mesh
+from repro.models import init_params
+from repro.serving.engine import ContinuousBatchingEngine, InferenceEngine
+
+cfg = dataclasses.replace(reduced(get_config("qwen2.5-3b"), d_model=64),
+                          n_layers=4)
+params = init_params(cfg, jax.random.PRNGKey(0))
+mesh = make_test_mesh(4)
+pipe = PipelinedEngine.from_mesh(cfg, params, mesh, n_microbatches=2,
+                                 n_slots=2, max_len=48, pad_to=8)
+ref = InferenceEngine(cfg, params, max_len=48)
+prompts = {0: list(range(1, 9)), 1: list(range(3, 15)), 2: [5, 4, 3, 2, 1]}
+want = {i: list(map(int, ref.generate(
+            {"tokens": jnp.asarray(p, jnp.int32)[None]}, 6,
+            cache_len=48)[0])) for i, p in prompts.items()}
+for i, p in prompts.items():
+    pipe.submit(p, 6, req_id=i)
+for _ in range(4):                      # serve mid-multicast...
+    pipe.step()
+pipe.drain()                            # ...then mode-switch
+local = ContinuousBatchingEngine(cfg, params, n_slots=4, max_len=48)
+local.adopt(pipe.handoff())
+done = {r: s.generated for r, s in pipe.sched.finished.items()}
+done.update(local.run())
+assert done == want, (done, want)
+assert local.stats["adopted"] >= 1
+print("CB-PIPELINE-OK")
+"""
+
+
+@pytest.mark.slow
+def test_continuous_batching_on_pipelined_mesh(subproc):
+    """λPipe shard_map trunk drives the continuous-batching scheduler and
+    hands off to a local replica with exact token equality."""
+    assert "CB-PIPELINE-OK" in subproc(CB_PIPELINE, 4)

@@ -67,7 +67,11 @@ def test_hlo_cost_counts_loop_trips():
     hc = HloCost(compiled.as_text())
     assert hc.flops == 10 * 2 * 256 ** 3
     # XLA's own analysis counts the body once — the bug we correct
-    assert compiled.cost_analysis()["flops"] == 2 * 256 ** 3
+    # (cost_analysis returns a list of per-program dicts on newer jax)
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    assert ca["flops"] == 2 * 256 ** 3
 
 
 def test_hlo_cost_nested_loops():

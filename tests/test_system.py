@@ -1,6 +1,7 @@
 """End-to-end behaviour tests: the serving engine generates coherently; the
 full λScale pipeline (plan → simulate → serve) beats the baselines on a
 spike; the launchers run."""
+import os
 import subprocess
 import sys
 
@@ -17,6 +18,9 @@ from repro.serving.tiers import HardwareProfile
 from repro.serving.workload import burstgpt_like
 
 from conftest import SRC
+import pytest
+
+pytestmark = pytest.mark.slow    # end-to-end system + launcher subprocesses
 
 
 def test_engine_generates_deterministically():
@@ -78,7 +82,11 @@ def test_train_launcher_runs():
         [sys.executable, "-m", "repro.launch.train", "--arch",
          "stablelm-1.6b", "--steps", "3", "--batch", "2", "--seq", "64",
          "--d-model", "128"],
-        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin"},
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
+             # without the platform pin jax probes for accelerator
+             # backends and hangs on hosts with a TPU runtime
+             **({"JAX_PLATFORMS": os.environ["JAX_PLATFORMS"]}
+                if "JAX_PLATFORMS" in os.environ else {})},
         capture_output=True, text=True, timeout=300)
     assert proc.returncode == 0, proc.stderr[-2000:]
     assert "done: 3 steps" in proc.stdout
@@ -88,7 +96,11 @@ def test_serve_launcher_runs():
     proc = subprocess.run(
         [sys.executable, "-m", "repro.launch.serve", "--requests", "2",
          "--prompt", "16", "--tokens", "4", "--d-model", "128"],
-        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin"},
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
+             # without the platform pin jax probes for accelerator
+             # backends and hangs on hosts with a TPU runtime
+             **({"JAX_PLATFORMS": os.environ["JAX_PLATFORMS"]}
+                if "JAX_PLATFORMS" in os.environ else {})},
         capture_output=True, text=True, timeout=300)
     assert proc.returncode == 0, proc.stderr[-2000:]
     assert "served 2 requests" in proc.stdout

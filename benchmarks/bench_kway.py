@@ -7,7 +7,6 @@ from __future__ import annotations
 import math
 
 from repro.core.ewl import plan_scale
-from repro.core.multicast import LinkModel
 from repro.configs import get_config
 from repro.serving.baselines import LambdaScalePolicy
 from repro.serving.simulator import Simulator
@@ -15,7 +14,7 @@ from repro.serving.tiers import HardwareProfile
 from repro.serving.workload import constant_stress
 
 HW = HardwareProfile()
-LINK = LinkModel(bandwidth=HW.link_bw, step_overhead=HW.step_overhead)
+LINK = HW.link_model()
 B = 16
 
 

@@ -1,0 +1,94 @@
+"""Multi-model tiered runtime: locality-driven scale-up latency by tier.
+
+Part 1 scales the same model from each storage tier (GPU-hot replica,
+host-warm packed blocks, SSD-cold) on identical topology and reports the
+live cluster's simulated-clock accounting — the §5 locality claim in one
+table (host-warm load at 64 GB/s vs SSD at 5 GB/s; GPU-hot sources start
+multicasting immediately).
+
+Part 2 runs a two-model concurrent spike through the scheduler-unified
+serving path: model A hot on its sources, model B host-warm, both scaling
+while a mixed burst is absorbed (pipelines mid-multicast, drain/handoff
+at mode switch) — real JAX tokens, wall-clock reported for context.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import init_params
+from repro.serving.cluster import LiveCluster
+
+MAX_LEN = 48
+TIERS = [("gpu_hot", {"hot_nodes": [0]}),
+         ("host_warm", {"warm_nodes": [0]}),
+         ("cold", {})]
+
+
+def run(report) -> None:
+    cfg_a = reduced(get_config("qwen2.5-3b"), d_model=64, n_layers=4)
+    params_a = init_params(cfg_a, jax.random.PRNGKey(0))
+
+    # ---- part 1: scale-up latency by source tier (simulated clock)
+    reports = {}
+    for tier, kw in TIERS:
+        lc = LiveCluster(n_nodes=6, max_len=MAX_LEN)
+        lc.register("m", cfg_a, params_a, n_blocks=4, **kw)
+        rep = lc.scale("m", 4, k=1)
+        lc.run_to_completion()
+        assert len(lc.complete_nodes("m")) == 5
+        reports[tier] = rep
+        report(f"mmodel/{tier}/t_source_ready_ms",
+               rep.t_source_ready * 1e3, f"source tier {rep.source_tier}")
+        report(f"mmodel/{tier}/t_first_serve_ms", rep.t_first_serve * 1e3,
+               "first NEW serving instance")
+        report(f"mmodel/{tier}/t_complete_ms", rep.t_complete * 1e3,
+               "all destinations mode-switched")
+    # tier speedup on source acquisition (size-independent: the 64 GB/s
+    # host path vs the 5 GB/s SSD path, paper Table 1)
+    report("mmodel/warm_vs_cold_speedup",
+           reports["cold"].t_source_ready / reports["host_warm"].t_source_ready,
+           "host-warm vs SSD-cold source acquisition")
+    # the same pricing at paper scale (Llama-13B, 26 GB bf16)
+    hw = LiveCluster(n_nodes=1).hw
+    report("mmodel/paper_scale/host_load_s",
+           hw.fetch_seconds(26e9, "host"), "13B from host memory")
+    report("mmodel/paper_scale/ssd_load_s",
+           hw.fetch_seconds(26e9, "ssd"), "13B from SSD (cold)")
+
+    # ---- part 2: two-model concurrent scale + spike through the scheduler
+    cfg_b = reduced(get_config("stablelm-1.6b"), d_model=64)
+    params_b = init_params(cfg_b, jax.random.PRNGKey(1))
+    lc = LiveCluster(n_nodes=8, n_slots=2, max_len=MAX_LEN)
+    lc.register("A", cfg_a, params_a, n_blocks=4, hot_nodes=[0, 1])
+    lc.register("B", cfg_b, params_b, n_blocks=4, warm_nodes=[6])
+    lc.scale("A", 4, k=2)
+    lc.scale("B", 1)
+    rng = np.random.default_rng(7)
+    n_req = 12
+    for i in range(n_req):
+        m = "A" if i % 2 == 0 else "B"
+        vocab = (cfg_a if m == "A" else cfg_b).vocab_size
+        lc.submit(m, list(rng.integers(0, vocab, size=6)),
+                  int(rng.integers(3, 7)))
+    t0 = time.perf_counter()
+    while lc.step():
+        lc.tick()
+    lc.drain_serving()
+    dt = time.perf_counter() - t0
+    done = {m: lc.results(m) for m in "AB"}
+    total = sum(len(v) for res in done.values() for v in res.values())
+    assert sum(len(res) for res in done.values()) == n_req
+    adopted = sum(e.stats["adopted"] for m in "AB"
+                  for e in lc.serving[m].locals_.values())
+    pipe_admits = sum(p.engine.sched.stats["admitted"] for m in "AB"
+                      for p in lc.serving[m].pipes)
+    report("mmodel/spike_tok_s", total / dt,
+           f"{n_req} reqs over 2 concurrently-scaling models")
+    report("mmodel/spike_pipeline_admits", pipe_admits,
+           "requests admitted on EWL pipelines mid-multicast")
+    report("mmodel/spike_handoffs", adopted,
+           "sequences adopted into DECODE at mode switch")

@@ -1,6 +1,8 @@
 """Benchmark harness: one module per paper table/figure + roofline.
 
-Prints ``name,value,derived`` CSV lines.  Modules:
+Prints ``name,value,derived`` CSV lines and, per module, writes a
+machine-readable ``BENCH_<name>.json`` summary (rows + wall-clock) so the
+perf trajectory across PRs can be diffed without parsing stdout.  Modules:
   fig2/3   bench_cache          (§2.3 motivation: keep-alive, miss ratio)
   fig7/8   bench_multicast      (multicast latency, block-arrival CDF)
   fig9-11  bench_throughput     (ramp-up via GDR / local cache / cold)
@@ -12,17 +14,20 @@ Prints ``name,value,derived`` CSV lines.  Modules:
   roofline bench_roofline       (dry-run derived roofline table)
   engine   bench_engine         (live JAX us_per_call micro-benches)
   cbatch   bench_continuous_batching (static vs continuous tokens/s)
+  mmodel   bench_multimodel     (§5 tiers: cold/warm/hot scale-up latency)
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
 from benchmarks import (bench_cache, bench_continuous_batching, bench_engine,
                         bench_kway, bench_latency, bench_multicast,
-                        bench_num_blocks, bench_optimizations, bench_roofline,
-                        bench_trace, bench_throughput)
+                        bench_multimodel, bench_num_blocks,
+                        bench_optimizations, bench_roofline, bench_trace,
+                        bench_throughput)
 
 MODULES = {
     "cache": bench_cache, "multicast": bench_multicast,
@@ -30,7 +35,7 @@ MODULES = {
     "trace": bench_trace, "kway": bench_kway,
     "optimizations": bench_optimizations, "num_blocks": bench_num_blocks,
     "roofline": bench_roofline, "engine": bench_engine,
-    "cbatch": bench_continuous_batching,
+    "cbatch": bench_continuous_batching, "mmodel": bench_multimodel,
 }
 
 
@@ -38,22 +43,31 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benchmarks")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for the BENCH_<name>.json summaries")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(MODULES)
 
     print("name,value,derived")
+    rows = []
 
     def report(name: str, value: float, derived: str = "") -> None:
         print(f"{name},{value:.6g},{derived}")
         sys.stdout.flush()
+        rows.append({"name": name, "value": value, "derived": derived})
 
     t0 = time.time()
     for name in names:
         mod = MODULES[name]
         t1 = time.time()
+        rows = []
         mod.run(report)
-        report(f"_meta/{name}/seconds", time.time() - t1, "")
-    report("_meta/total_seconds", time.time() - t0, "")
+        seconds = time.time() - t1
+        report(f"_meta/{name}/seconds", seconds, "")
+        with open(f"{args.json_dir}/BENCH_{name}.json", "w") as f:
+            json.dump({"benchmark": name, "seconds": seconds,
+                       "rows": rows}, f, indent=1)
+    print(f"_meta/total_seconds,{time.time() - t0:.6g},")
 
 
 if __name__ == "__main__":

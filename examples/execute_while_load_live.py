@@ -21,15 +21,18 @@ params = init_params(cfg, jax.random.PRNGKey(0))
 batch = make_batch(cfg, 2, 32)
 ref = forward(cfg, params, batch, moe_cf=None)["logits"]
 
-lc = LiveCluster(cfg, params, n_nodes=8, n_blocks=8, k=2)
-print(f"2→8 scale-out, {lc.n_blocks} blocks, "
-      f"{lc.plan.total_steps} multicast steps "
-      f"({lc.step_time*1e3:.1f} ms/step at 50 GB/s)\n")
+lc = LiveCluster(n_nodes=8, max_len=64)
+lc.register("qwen", cfg, params, n_blocks=8, hot_nodes=[0, 1])
+rep = lc.scale("qwen", 6, k=2)
+sc = lc.scales["qwen"]
+print(f"2→8 scale-out ({rep.source_tier} sources {rep.sources}), "
+      f"{sc.plan.n_blocks} blocks, {sc.plan.total_steps} multicast steps "
+      f"({sc.step_time*1e3:.1f} ms/step at 50 GB/s)\n")
 
 while True:
-    r = lc.serve(batch["tokens"])
-    ready = len(lc.ready_pipelines())
-    done = len(lc.complete_nodes)
+    r = lc.forward("qwen", batch["tokens"])
+    ready = len(lc.ready_pipelines("qwen"))
+    done = len(lc.complete_nodes("qwen"))
     if r is None:
         status = "queueing (no capacity)"
     else:
@@ -37,12 +40,12 @@ while True:
         where = (f"node {r['node']}" if r["mode"] == "local"
                  else f"nodes {r['nodes']}")
         status = f"served via {r['mode']:<8s} on {where}  |Δ|={err:.1e}"
-    print(f"step {lc.step_idx:2d}  t={lc.clock*1e3:6.1f}ms  "
+    print(f"step {sc.steps_done:2d}  t={lc.clock*1e3:6.1f}ms  "
           f"pipelines={ready}  complete={done}  {status}")
     if not lc.step():
         break
 
-r = lc.serve(batch["tokens"])
+r = lc.forward("qwen", batch["tokens"])
 print(f"\nafter completion: all 8 nodes serve locally "
       f"(mode switch §4.4); final check "
       f"|Δ|={float(jnp.max(jnp.abs(r['logits'] - ref))):.1e}")

@@ -9,16 +9,16 @@ request restarted.
 
 Run:  PYTHONPATH=src python examples/serve_spike.py
 """
+import dataclasses
 import time
 
 import jax
 import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.distributed.pipeline import PipelinedEngine
-from repro.models import forward, init_params
+from repro.models import init_params
 from repro.serving.baselines import POLICIES
-from repro.serving.engine import ContinuousBatchingEngine
+from repro.serving.cluster import LiveCluster
 from repro.serving.simulator import Simulator
 from repro.serving.tiers import HardwareProfile
 from repro.serving.workload import burstgpt_like
@@ -51,49 +51,47 @@ for name, p50, p90, p99, cost in rows:
 print("\npaper claims: 2.4–5x p90 TTFT improvement, "
       "17.8–31.3% GPU-time reduction")
 
-# ------------------------------------- 2. the real engine absorbs a spike
-print("\n--- live JAX engine (reduced model): spike → EWL pipeline → "
-      "mode switch ---")
-cfg = reduced(get_config("qwen2.5-3b"))
+# ------------------------------------- 2. the real runtime absorbs a spike
+print("\n--- live JAX runtime (reduced model): spike mid-multicast → EWL "
+      "pipelines → mode-switch handoff ---")
+cfg = dataclasses.replace(reduced(get_config("qwen2.5-3b")), n_layers=4)
 params = init_params(cfg, jax.random.PRNGKey(0))
 MAX_LEN = 96
 rng = np.random.default_rng(7)
 spike = [(list(rng.integers(0, cfg.vocab_size, size=int(rng.integers(8, 32)))),
           int(rng.integers(4, 12))) for _ in range(10)]
 
-
-@jax.jit
-def trunk_forward(tokens):
-    # stands in for pipelined_forward on a multi-node mesh (same logits;
-    # see tests/test_multidevice.py for the shard_map equivalence)
-    return forward(cfg, params, {"tokens": tokens}, moe_cf=None)["logits"]
-
-
-# spike arrives while the model is still multicasting: a λPipe pipelined
-# instance (no decode cache) starts serving immediately
-pipe = PipelinedEngine(cfg, trunk_forward, n_slots=4, max_len=MAX_LEN)
+# two hot sources, 2→6 scale-out; the spike lands while blocks are still
+# multicasting, so overflow requests are admitted on λPipe execution
+# pipelines (ready after ~⌈b/k⌉ steps) and migrate to local replicas at
+# mode switch via drain/handoff — every instance is driven by the
+# request-level Scheduler
+lc = LiveCluster(n_nodes=6, n_slots=4, max_len=MAX_LEN)
+lc.register("qwen", cfg, params, n_blocks=4, hot_nodes=[0, 1])
+rep = lc.scale("qwen", 4, k=2)
 for i, (prompt, otok) in enumerate(spike):
-    pipe.submit(prompt, otok, req_id=i)
+    lc.submit("qwen", prompt, otok, req_id=i)
 t0 = time.time()
-for _ in range(6):                      # ... multicast still in flight ...
-    pipe.step()
-pipe.drain()                            # multicast done → mode switch
-pairs = pipe.handoff()
-served_on_pipe = {r: s for r, s in pipe.sched.finished.items()}
-
-# local replica adopts the live slot state: generated tokens carry over,
-# nothing re-enters prefill
-local = ContinuousBatchingEngine(cfg, params, n_slots=4, max_len=MAX_LEN)
-local.adopt(pairs)
-out = local.run()
+while lc.step():                        # serve during load
+    lc.tick()
+    lc.tick()
+lc.drain_serving()
 dt = time.time() - t0
-done = {**{r: s.generated for r, s in served_on_pipe.items()}, **out}
+done = lc.results("qwen")
+served_on_pipe = sum(len(p.engine.sched.finished)
+                     for p in lc.serving["qwen"].pipes)
+adopted = sum(e.stats["adopted"]
+              for e in lc.serving["qwen"].locals_.values())
+admitted = sum(e.stats["admitted"]
+               for e in lc.serving["qwen"].locals_.values())
 total = sum(len(v) for v in done.values())
-print(f"{len(spike)} requests, {total} tokens in {dt:.2f}s on CPU")
-print(f"  served on pipeline instance : {len(served_on_pipe)}")
-print(f"  handed off mid-generation   : {local.stats['adopted']} "
+print(f"{len(spike)} requests, {total} tokens in {dt:.2f}s on CPU "
+      f"(scale: {rep.source_tier} source, first pipeline at "
+      f"{rep.t_first_serve*1e3:.0f} ms simulated)")
+print(f"  served on pipeline instances: {served_on_pipe}")
+print(f"  handed off mid-generation   : {adopted} "
       f"(adopted straight into DECODE — zero re-prefills)")
-print(f"  admitted fresh on replica   : {local.stats['admitted']}")
+print(f"  admitted fresh on replicas  : {admitted}")
 assert sorted(done) == list(range(len(spike)))
 assert all(len(done[i]) == spike[i][1] for i in done)
 print("all requests completed exactly once ✓")

@@ -34,6 +34,7 @@ class ScalePlan:
     pipelines: List[ExecutionPipeline]
     pipeline_ready: List[int]       # multicast step when each pipe is ready
     node_complete: Dict[int, int]   # step when node holds the full model
+    model: str = ""                 # model being scaled (multi-model runtime)
 
     @property
     def total_steps(self) -> int:
@@ -60,7 +61,8 @@ class ScalePlan:
         return n_inst
 
 
-def plan_scale(n_nodes: int, n_blocks: int, k: int = 1) -> ScalePlan:
+def plan_scale(n_nodes: int, n_blocks: int, k: int = 1, *,
+               model: str = "") -> ScalePlan:
     """Build the λPipe plan for a k→N scaling operation."""
     sched = kway_schedule(n_nodes, n_blocks, k)
     initial = {src: list(range(n_blocks)) for src in range(k)}
@@ -71,4 +73,5 @@ def plan_scale(n_nodes: int, n_blocks: int, k: int = 1) -> ScalePlan:
     ready = [pipeline_ready_step(p, arrivals) for p in pipes]
     complete = {n: max(arrivals[n].values()) if arrivals[n] else -1
                 for n in range(n_nodes)}
-    return ScalePlan(n_nodes, n_blocks, k, sched, pipes, ready, complete)
+    return ScalePlan(n_nodes, n_blocks, k, sched, pipes, ready, complete,
+                     model=model)

@@ -215,11 +215,24 @@ def kway_schedule(n_nodes: int, n_blocks: int, k: int) -> Schedule:
 
 
 # ------------------------------------------------------------ timing model
+# Single source of truth for the inter-node link calibration: the serving
+# layer's HardwareProfile (serving/tiers.py) imports these as its defaults,
+# so recalibrating the link means editing exactly these two constants.
+DEFAULT_LINK_BW = 50e9          # bytes/s (ICI link; paper: 400Gb/s IB)
+DEFAULT_STEP_OVERHEAD = 0.004   # s, per-step processing (paper Fig 18)
+
+
 @dataclasses.dataclass(frozen=True)
 class LinkModel:
     """Per-step wall-clock model: t = block_bytes / bw + overhead."""
-    bandwidth: float = 50e9          # bytes/s (ICI link; paper: 400Gb/s IB)
-    step_overhead: float = 0.004     # s, per-step processing (paper Fig 18)
+    bandwidth: float = DEFAULT_LINK_BW
+    step_overhead: float = DEFAULT_STEP_OVERHEAD
+
+    @classmethod
+    def from_profile(cls, hw) -> "LinkModel":
+        """Build from a ``serving.tiers.HardwareProfile`` (anything with
+        ``link_bw`` / ``step_overhead`` attributes)."""
+        return cls(bandwidth=hw.link_bw, step_overhead=hw.step_overhead)
 
     def step_time(self, block_bytes: float) -> float:
         return block_bytes / self.bandwidth + self.step_overhead

@@ -7,6 +7,7 @@ calibrated simulator.
   PYTHONPATH=src python -m repro.launch.serve --continuous --requests 24
   PYTHONPATH=src python -m repro.launch.serve --sim --model llama2-13b \
       --nodes 12 --rps 50
+  PYTHONPATH=src python -m repro.launch.serve --live --nodes 8 --requests 12
 """
 from __future__ import annotations
 
@@ -20,6 +21,7 @@ from repro.configs import get_config, reduced
 from repro.models import init_params, make_batch
 from repro.serving import ContinuousBatchingEngine, InferenceEngine
 from repro.serving.baselines import POLICIES
+from repro.serving.cluster import LiveCluster
 from repro.serving.simulator import Simulator
 from repro.serving.tiers import HardwareProfile
 from repro.serving.workload import constant_stress
@@ -79,6 +81,49 @@ def run_continuous(args) -> None:
           f"{s['decode_tokens']/max(s['decode_ticks'],1):.2f}")
 
 
+def run_live(args) -> None:
+    """Two models on one tiered cluster (multi-model runtime): model A
+    hot on its sources, model B host-warm; both scale concurrently while
+    a mixed request burst is absorbed through the scheduler-driven
+    serving instances (pipelines during load, locals after mode switch)."""
+    cfg_a = reduced(get_config(args.arch), d_model=args.d_model, vocab=2048)
+    cfg_b = reduced(get_config("stablelm-1.6b"), d_model=args.d_model,
+                    vocab=2048)
+    max_len = args.prompt + args.tokens + 8
+    lc = LiveCluster(n_nodes=args.nodes, n_slots=args.slots, max_len=max_len)
+    lc.register("A", cfg_a, init_params(cfg_a, jax.random.PRNGKey(0)),
+                n_blocks=4, hot_nodes=[0])
+    lc.register("B", cfg_b, init_params(cfg_b, jax.random.PRNGKey(1)),
+                n_blocks=4, warm_nodes=[args.nodes - 1])
+    half = max(1, (args.nodes - 2) // 2)
+    reports = {"A": lc.scale("A", half), "B": lc.scale("B", half)}
+    for m, rep in reports.items():
+        print(f"scale {m}: {rep.source_tier}-tier source {rep.sources} → "
+              f"{len(rep.dests)} dests; first new capacity at "
+              f"{rep.t_first_serve*1e3:.1f} ms, complete at "
+              f"{rep.t_complete*1e3:.1f} ms (simulated clock)")
+    rng = np.random.default_rng(2)
+    t0 = time.time()
+    for i in range(args.requests):
+        model = "A" if i % 2 == 0 else "B"
+        cfg = cfg_a if model == "A" else cfg_b
+        prompt = list(rng.integers(0, cfg.vocab_size,
+                                   size=max(4, args.prompt // 4)))
+        lc.submit(model, prompt, args.tokens)
+    while lc.step():           # serve while the multicast is in flight
+        lc.tick()
+    lc.drain_serving()
+    dt = time.time() - t0
+    out = {m: lc.results(m) for m in ("A", "B")}
+    total = sum(len(v) for res in out.values() for v in res.values())
+    adopted = sum(e.stats["adopted"] for m in ("A", "B")
+                  for e in lc.serving[m].locals_.values())
+    print(f"{args.requests} requests across 2 models → {total} tokens "
+          f"in {dt:.2f}s on CPU; {adopted} handed off mid-generation; "
+          f"replicas: A={sorted(lc.serving['A'].locals_)} "
+          f"B={sorted(lc.serving['B'].locals_)}")
+
+
 def run_sim(args) -> None:
     hw = HardwareProfile()
     reqs = constant_stress(args.rps, args.duration, model=args.model,
@@ -98,6 +143,8 @@ def main() -> None:
                     help="simulator comparison instead of the live engine")
     ap.add_argument("--continuous", action="store_true",
                     help="continuous-batching engine on a mixed-length trace")
+    ap.add_argument("--live", action="store_true",
+                    help="two-model tiered live cluster (scale + serve)")
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--d-model", type=int, default=256)
     ap.add_argument("--requests", type=int, default=8)
@@ -111,6 +158,8 @@ def main() -> None:
     args = ap.parse_args()
     if args.sim:
         run_sim(args)
+    elif args.live:
+        run_live(args)
     elif args.continuous:
         run_continuous(args)
     else:

@@ -1,11 +1,13 @@
 from repro.serving.baselines import (POLICIES, FaaSNetPolicy, IdealPolicy,
                                      LambdaScalePolicy, NCCLPolicy,
                                      ServerlessLLMPolicy)
+from repro.serving.cluster import (LiveCluster, ModelDeployment, ScaleReport)
 from repro.serving.engine import ContinuousBatchingEngine, InferenceEngine
 from repro.serving.scheduler import (DEFAULT_SLOTS, Scheduler, SeqState,
                                      SlotState, instance_slot_count)
 from repro.serving.simulator import SimModel, SimResult, Simulator
-from repro.serving.tiers import H800, ClusterState, HardwareProfile
+from repro.serving.tiers import (H800, ClusterState, HardwareProfile,
+                                 LRUCache, ModelManager, ModelShard)
 from repro.serving.workload import (Request, burstgpt_like, constant_stress,
                                     multi_model_trace)
 
@@ -13,7 +15,9 @@ __all__ = [
     "InferenceEngine", "ContinuousBatchingEngine", "Scheduler", "SeqState",
     "SlotState", "DEFAULT_SLOTS", "instance_slot_count",
     "Simulator", "SimResult", "SimModel",
-    "HardwareProfile", "H800", "ClusterState", "POLICIES",
+    "LiveCluster", "ModelDeployment", "ScaleReport",
+    "HardwareProfile", "H800", "ClusterState", "ModelManager", "ModelShard",
+    "LRUCache", "POLICIES",
     "LambdaScalePolicy", "ServerlessLLMPolicy", "FaaSNetPolicy",
     "NCCLPolicy", "IdealPolicy", "Request", "burstgpt_like",
     "constant_stress", "multi_model_trace",

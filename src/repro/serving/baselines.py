@@ -21,11 +21,10 @@ GPUs and returns instance specs:
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from repro.core.blocks import elbow_block_count
 from repro.core.ewl import plan_scale
-from repro.core.multicast import LinkModel
 from repro.serving.simulator import SimModel
 from repro.serving.tiers import ClusterState, HardwareProfile
 
@@ -59,12 +58,13 @@ class BasePolicy:
         warm_any = [n.node_id for n in cluster.nodes
                     if model in n.host_cache]
         if warm_free:
-            node, delay = warm_free[0], sm.bytes / self.hw.host_to_gpu_bw
+            node = warm_free[0]
+            delay = self.hw.fetch_seconds(sm.bytes, "host")
         elif warm_any and self.allow_remote_memory:
             # one-sided RDMA read of a remote node's host memory (§5 cold)
-            node, delay = free[0], sm.bytes / self.hw.link_bw
+            node, delay = free[0], self.hw.fetch_seconds(sm.bytes, "remote")
         else:
-            node, delay = free[0], sm.bytes / self.hw.ssd_bw
+            node, delay = free[0], self.hw.fetch_seconds(sm.bytes, "ssd")
         cluster.occupy(node, model, now)
         spec = {"nodes": [node], "kind": "local", "ready": now + delay,
                 "drain_at": None, "owns_gpus": True}
@@ -103,7 +103,7 @@ class LambdaScalePolicy(BasePolicy):
                      if n in cluster.free_nodes()]
         take = warm_free[:max(n_new, 0 if sources else 1)]
         if take:
-            load_t = sm.bytes / self.hw.host_to_gpu_bw
+            load_t = self.hw.fetch_seconds(sm.bytes, "host")
             for nd in take:
                 cluster.occupy(nd, model, now)
                 specs.append({"nodes": [nd], "kind": "local",
@@ -140,9 +140,8 @@ class LambdaScalePolicy(BasePolicy):
         srcs = sources[:k]
         b = self.n_blocks
         if self.adaptive_blocks:
-            b = elbow_block_count(
-                sm.bytes, len(dests) + k,
-                LinkModel(self.hw.link_bw, self.hw.step_overhead))
+            b = elbow_block_count(sm.bytes, len(dests) + k,
+                                  self.hw.link_model())
         plan = plan_scale(k + len(dests), b, k)
         node_map = {i: n for i, n in enumerate(srcs + dests)}
         step_t = sm.bytes / b / self.hw.link_bw + self.hw.step_overhead
@@ -185,8 +184,8 @@ class ServerlessLLMPolicy(BasePolicy):
         warm = [n for n in cluster.warm_nodes(model) if n in free]
         cold = [n for n in free if n not in warm]
         for nd in (warm + cold)[:n_new]:
-            delay = sm.bytes / (self.hw.host_to_gpu_bw if nd in warm
-                                else self.hw.ssd_bw)
+            delay = self.hw.fetch_seconds(sm.bytes,
+                                          "host" if nd in warm else "ssd")
             cluster.occupy(nd, model, now)
             specs.append({"nodes": [nd], "kind": "local",
                           "ready": now + delay, "drain_at": None,

@@ -1,153 +1,561 @@
-"""Live cluster manager (paper Fig 4) — in-process, N emulated nodes.
+"""Live cluster manager (paper Fig 4) — multi-model tiered runtime.
 
-The cluster manager owns the λPipe plan (model-scaling + pipeline-execution
-controllers); each node runs a model manager holding *wire-format packed
-blocks* plus their unpacked parameters.  ``step()`` advances the multicast
-one schedule step, physically copying block buffers between node stores
-(the same byte movement the shard_map ppermute performs on devices) on a
-simulated clock; ``serve()`` routes a request to the best available
-serving option at the current step:
+In-process, N emulated nodes.  Each node runs a ``ModelManager``
+(``serving/tiers.py``) holding *wire-format packed blocks* for multiple
+models across explicit GPU / host-memory tiers; the cluster manager owns
+one λPipe ``ScalePlan`` per actively-scaling model and can run several
+concurrently (disjoint node sets).
 
-  hot source  → local engine on the source node
-  EWL         → an execution pipeline whose stages run
-                ``core.partial_exec.apply_layer_range`` on the blocks each
-                member node actually holds (§4.3)
-  post-switch → local execution on any completed node (§4.4)
+Scaling (§4/§5): ``scale(model, n_new)`` picks multicast sources by tier
+locality — GPU-resident replicas are free, a host-warm node promotes its
+own copy (64 GB/s), a cold node reads a remote host copy over the link or
+falls back to SSD — each priced via ``HardwareProfile.fetch_seconds`` on
+the cluster's simulated clock.  ``step()`` advances every active multicast
+one schedule step, physically copying block buffers between node managers
+(the same byte movement the shard_map ppermute performs on devices).
 
-This is the end-to-end driver for deliverable (b): scale-out, serve during
-loading, mode-switch — with real logits all the way.
+Serving: every serving option is a continuous-batching instance driven by
+the request-level ``Scheduler`` (PR 1) — hot sources and mode-switched
+replicas run ``ContinuousBatchingEngine`` on their local replica, ready
+λPipe execution pipelines run ``PipelinedEngine`` whose forward executes
+``core.partial_exec.apply_layer_range`` on the blocks each member node
+actually holds (§4.3).  A request admitted mid-multicast is drained and
+handed off at mode switch (§4.4): it resumes in DECODE on a local replica
+with its generated tokens intact — never re-prefilled, exact-token-equal
+to the static reference engine (tested).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Set, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.blocks import (BlockSpec, block_assignment, pack_model,
-                               unpack_block)
+                               unflatten_params, unpack_block)
 from repro.core.ewl import ScalePlan, plan_scale
 from repro.core.partial_exec import (apply_layer_range, embed_from_flat,
                                      head_from_flat, layer_range_of_units)
+from repro.core.pipeline import ExecutionPipeline
+from repro.serving.engine import ContinuousBatchingEngine
+from repro.serving.tiers import ClusterState, HardwareProfile, ModelShard
+
+if TYPE_CHECKING:                                    # pragma: no cover
+    # runtime import happens lazily in _on_scale_progress:
+    # distributed.pipeline itself imports the serving package
+    from repro.distributed.pipeline import PipelinedEngine
+
+DEFAULT_MAX_K = 4
+
+
+# ------------------------------------------------------------- deployments
+@dataclasses.dataclass
+class ModelDeployment:
+    """A registered model: config + packed wire blocks (the registry copy
+    every cold load and multicast source ultimately descends from)."""
+    name: str
+    cfg: ModelConfig
+    n_blocks: int
+    assign: List[List[str]]          # block id -> unit names
+    specs: List[BlockSpec]
+    registry: np.ndarray             # (n_blocks, P) packed uint8 blocks
+
+    @property
+    def nbytes(self) -> float:
+        """Wire bytes of one full replica (padded blocks)."""
+        return float(self.registry.size)
+
+    @property
+    def block_nbytes(self) -> float:
+        return float(self.registry.shape[1])
 
 
 @dataclasses.dataclass
-class NodeStore:
-    """A node's model manager: wire blocks + unpacked tensors."""
-    node_id: int
-    buffers: Dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
-    flat: Dict[str, jnp.ndarray] = dataclasses.field(default_factory=dict)
-
-    def receive(self, block_id: int, buf: np.ndarray, spec: BlockSpec):
-        if block_id in self.buffers:
-            return
-        self.buffers[block_id] = buf
-        self.flat.update(unpack_block(jnp.asarray(buf), spec))
-
-    def has(self, block_id: int) -> bool:
-        return block_id in self.buffers
+class PipeInstance:
+    """A live λPipe execution-pipeline serving instance."""
+    pipe: ExecutionPipeline
+    plan_nodes: List[int]            # plan-local member ids
+    members: List[int]               # real node ids
+    engine: "PipelinedEngine"
+    drained: bool = False
 
 
+@dataclasses.dataclass
+class ModelServing:
+    """Per-model serving state: every instance is scheduler-driven."""
+    locals_: Dict[int, ContinuousBatchingEngine] = dataclasses.field(
+        default_factory=dict)
+    pipes: List[PipeInstance] = dataclasses.field(default_factory=list)
+    pending: List[Tuple[int, List[int], int]] = dataclasses.field(
+        default_factory=list)        # (req_id, prompt, max_new) pre-capacity
+
+    def live_pipes(self) -> List[PipeInstance]:
+        return [p for p in self.pipes if not p.drained]
+
+
+@dataclasses.dataclass
+class ActiveScale:
+    """One in-flight k→N scaling operation (one per model; several models
+    may scale concurrently on disjoint node sets)."""
+    model: str
+    plan: ScalePlan
+    node_map: Dict[int, int]         # plan-local id -> real node id
+    t0: float                        # clock when the multicast starts
+    step_time: float
+    steps_done: int = 0
+    spawned: Set[int] = dataclasses.field(default_factory=set)
+    switched: Set[int] = dataclasses.field(default_factory=set)
+
+    @property
+    def done(self) -> bool:
+        return self.steps_done >= self.plan.total_steps
+
+    def time_at(self, step: int) -> float:
+        return self.t0 + step * self.step_time
+
+    @property
+    def now(self) -> float:
+        return self.time_at(self.steps_done)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleReport:
+    """Simulated-clock accounting of one ``scale()`` call — the numbers
+    the locality benchmarks compare (GPU-hot vs host-warm vs cold)."""
+    model: str
+    source_tier: str                 # gpu | host | remote | ssd
+    sources: Tuple[int, ...]
+    dests: Tuple[int, ...]
+    k: int
+    t_request: float
+    t_source_ready: float            # multicast start (source on GPU tier)
+    t_first_serve: float             # first NEW serving instance available
+    t_complete: float                # every destination mode-switched
+
+    @property
+    def startup_latency(self) -> float:
+        return self.t_first_serve - self.t_request
+
+
+# ----------------------------------------------------------------- cluster
 class LiveCluster:
-    def __init__(self, cfg: ModelConfig, params, *, n_nodes: int,
-                 n_blocks: int, k: int = 1,
-                 link_bw: float = 50e9, step_overhead: float = 0.004):
-        assert cfg.family != "encdec", "demo covers decoder-only families"
-        self.cfg = cfg
-        self.n_blocks_req = n_blocks
-        stacked, self.specs = pack_model(cfg, params, n_blocks)
-        self.n_blocks = stacked.shape[0]
-        self.assign = block_assignment(cfg, self.n_blocks)
-        self.plan: ScalePlan = plan_scale(n_nodes, self.n_blocks, k)
-        self.nodes = [NodeStore(i) for i in range(n_nodes)]
-        for src in range(k):
-            for b in range(self.n_blocks):
-                self.nodes[src].receive(b, np.asarray(stacked[b]),
-                                        self.specs[b])
-        self.step_idx = 0
+    def __init__(self, *, n_nodes: int, hw: Optional[HardwareProfile] = None,
+                 n_slots: int = 4, max_len: int = 96,
+                 max_prefill_per_tick: int = 1):
+        self.hw = hw or HardwareProfile()
+        self.state = ClusterState(n_nodes, self.hw)
+        self.nodes = self.state.nodes
+        self.link = self.hw.link_model()
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.max_prefill_per_tick = max_prefill_per_tick
         self.clock = 0.0
-        self.step_time = (float(stacked.shape[1]) / link_bw
-                          + step_overhead)
+        self.models: Dict[str, ModelDeployment] = {}
+        self.serving: Dict[str, ModelServing] = {}
+        self.scales: Dict[str, ActiveScale] = {}
+        self._next_id = 0
+
+    # -------------------------------------------------------- registration
+    def register(self, name: str, cfg: ModelConfig, params, *,
+                 n_blocks: int, hot_nodes: Sequence[int] = (),
+                 warm_nodes: Sequence[int] = ()) -> ModelDeployment:
+        """Pack ``params`` into wire blocks and (optionally) pre-place the
+        model: ``hot_nodes`` get a GPU-resident replica with a live local
+        engine, ``warm_nodes`` get the packed blocks in host memory (the
+        §5 locality tier a later ``scale`` starts from)."""
+        assert cfg.family != "encdec", "runtime covers decoder-only families"
+        stacked, specs = pack_model(cfg, params, n_blocks)
+        stacked = np.asarray(stacked)
+        dep = ModelDeployment(name, cfg, stacked.shape[0],
+                              block_assignment(cfg, stacked.shape[0]),
+                              specs, stacked)
+        self.models[name] = dep
+        self.serving[name] = ModelServing()
+        for nd in hot_nodes:
+            self._load_full(name, nd)
+            self._ensure_local(name, nd)
+        for nd in warm_nodes:
+            shard = ModelShard(name, dep.n_blocks,
+                               buffers={b: dep.registry[b]
+                                        for b in range(dep.n_blocks)})
+            self.nodes[nd].host_cache.touch(name, self.clock, payload=shard)
+        return dep
+
+    def _unpack(self, dep: ModelDeployment, block_id: int, buf):
+        return unpack_block(jnp.asarray(buf), dep.specs[block_id])
+
+    def _load_full(self, model: str, node_id: int) -> None:
+        """Materialize a full GPU-tier replica on ``node_id`` from the
+        registry copy (caller prices the transfer on the clock)."""
+        dep = self.models[model]
+        mm = self.nodes[node_id]
+        mm.admit(model, dep.n_blocks, self.clock)
+        for b in range(dep.n_blocks):
+            mm.receive(model, b, dep.registry[b],
+                       self._unpack(dep, b, dep.registry[b]))
+
+    # ------------------------------------------------------------- engines
+    def _ensure_local(self, model: str,
+                      node_id: int) -> ContinuousBatchingEngine:
+        sv = self.serving[model]
+        if node_id not in sv.locals_:
+            dep = self.models[model]
+            shard = self.nodes[node_id].gpu_shard(model)
+            assert shard is not None and shard.complete, \
+                (model, node_id, "local engine needs a full replica")
+            params = unflatten_params(dep.cfg, shard.flat)
+            sv.locals_[node_id] = ContinuousBatchingEngine(
+                dep.cfg, params, n_slots=self.n_slots, max_len=self.max_len,
+                max_prefill_per_tick=self.max_prefill_per_tick)
+        return sv.locals_[node_id]
+
+    def _pipeline_forward(self, model: str, pipe: ExecutionPipeline,
+                          node_map: Dict[int, int]):
+        """Full-sequence forward walking blocks in model order; each
+        block's layers execute on the (real) node that owns it (§4.3 —
+        activations hop between stages, the KV/state never moves)."""
+        dep = self.models[model]
+        cfg = dep.cfg
+        owner = {b: node_map[n] for b, n in pipe.block_map().items()}
+
+        def flat_of(node_id: int):
+            return self.nodes[node_id].gpu_shard(model).flat
+
+        def fwd(tokens: jnp.ndarray) -> jnp.ndarray:
+            B, S = tokens.shape
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+            x = embed_from_flat(cfg, flat_of(owner[0]), tokens, positions)
+            for b in range(dep.n_blocks):
+                lo, hi = layer_range_of_units(dep.assign[b])
+                x = apply_layer_range(cfg, flat_of(owner[b]), x, lo, hi,
+                                      positions)
+            # the head lives in the last block; tied embeddings live in
+            # block 0 — route the final activation to whichever node owns
+            # both pieces (one extra hop for tied-embedding models)
+            last = owner[dep.n_blocks - 1]
+            head_node = owner[0] if cfg.tie_embeddings else last
+            flat = dict(flat_of(last))
+            flat.update(flat_of(head_node))
+            return head_from_flat(cfg, flat, x)
+
+        return fwd
+
+    # ------------------------------------------------------------- scaling
+    def scale(self, model: str, n_new: int, *,
+              k: Optional[int] = None) -> ScaleReport:
+        """Locality-driven k→N scale-up (§5): acquire sources by tier
+        (GPU > host > remote-host > SSD), start the k-way multicast to
+        ``n_new`` free destination nodes, and let execution pipelines
+        serve during loading.  Returns simulated-clock accounting."""
+        dep = self.models[model]
+        assert model not in self.scales, \
+            f"{model}: one scale operation at a time"
+        t_req = self.clock
+        sources = self.state.gpu_nodes(model)
+        tier, t0 = "gpu", t_req
+        fresh_source = None
+        if not sources:
+            nd, tier = self._acquire_source(model)
+            t0 = t_req + self.hw.fetch_seconds(dep.nbytes, tier)
+            sources, fresh_source = [nd], nd
+            self._ensure_local(model, nd)
+        k = max(1, min(k or DEFAULT_MAX_K, len(sources), DEFAULT_MAX_K))
+        srcs = sources[:k]
+        dests = [nd for nd in self.state.free_nodes()
+                 if nd not in srcs][:max(n_new, 0)]
+        first_serve = [t0] if fresh_source is not None else []
+        t_complete = t0
+        if dests:
+            for nd in dests:
+                self.nodes[nd].admit(model, dep.n_blocks, self.clock)
+            plan = plan_scale(k + len(dests), dep.n_blocks, k, model=model)
+            node_map = {i: nd for i, nd in enumerate(srcs + list(dests))}
+            sc = ActiveScale(model, plan, node_map, t0,
+                             self.link.step_time(dep.block_nbytes))
+            self.scales[model] = sc
+            first_serve += [sc.time_at(r) for r in plan.pipeline_ready
+                            if r >= 0]
+            dest_done = [plan.node_complete[i]
+                         for i in range(k, k + len(dests))]
+            first_serve.append(sc.time_at(min(dest_done)))
+            t_complete = sc.time_at(plan.total_steps)
+        return ScaleReport(model, tier, tuple(srcs), tuple(dests), k,
+                           t_req, t0,
+                           min(first_serve) if first_serve else t0,
+                           t_complete)
+
+    def _acquire_source(self, model: str) -> Tuple[int, str]:
+        """§5 locality-driven source acquisition for a model with no
+        GPU-resident replica; materializes the replica (clock pricing is
+        the caller's job — tiers differ only in bandwidth)."""
+        warm = self.state.warm_nodes(model)
+        if warm:
+            nd = warm[0]
+            dep = self.models[model]
+            shard = self.nodes[nd].promote(model, self.clock)
+            for b, buf in list(shard.buffers.items()):
+                shard.flat.update(self._unpack(dep, b, buf))
+            shard.n_blocks = dep.n_blocks
+            return nd, "host"
+        free = self.state.free_nodes()
+        if not free:
+            raise RuntimeError(f"{model}: no free node for a source")
+        nd = free[0]
+        # one-sided read of a remote node's host copy beats SSD (§5)
+        tier = ("remote" if any(model in n.host_cache for n in self.nodes)
+                else "ssd")
+        self._load_full(model, nd)
+        return nd, tier
+
+    def scale_down(self, model: str, nodes: Sequence[int]) -> None:
+        """Release GPU replicas; the model falls back to the host-memory
+        tier (§5) where a later ``scale`` finds it warm.  In-flight
+        sequences drain and hand off to a surviving local replica (or
+        park in its resume queue)."""
+        sc = self.scales.get(model)
+        if sc is not None:
+            busy = set(sc.node_map.values()) & set(nodes)
+            assert not busy, \
+                f"{model}: nodes {sorted(busy)} are part of the in-flight " \
+                f"scale plan — run it to completion before scaling down"
+        sv = self.serving[model]
+        for nd in nodes:
+            eng = sv.locals_.pop(nd, None)
+            if eng is not None:
+                eng.drain()
+                pairs = eng.handoff()
+                target = self._adoption_target(model, exclude=nd)
+                if pairs:
+                    assert target is not None, \
+                        f"{model}: scale_down of the last replica with " \
+                        f"in-flight requests"
+                    target.adopt(pairs)
+            self.state.release(nd, self.clock, model)
 
     # ------------------------------------------------------------- control
     def step(self) -> bool:
-        """Advance one multicast step (returns False when done)."""
-        if self.step_idx >= self.plan.total_steps:
-            return False
-        for src, dst, blk in self.plan.schedule.steps[self.step_idx]:
-            assert self.nodes[src].has(blk), (src, blk)
-            self.nodes[dst].receive(blk, self.nodes[src].buffers[blk],
-                                    self.specs[blk])
-        self.step_idx += 1
-        self.clock += self.step_time
-        return True
+        """Advance every active multicast one schedule step (returns
+        False when none advanced): physically copy block buffers, spawn
+        execution pipelines as they become ready, mode-switch nodes as
+        they complete (drain → handoff → local DECODE resume)."""
+        advanced = False
+        for model in list(self.scales):
+            sc = self.scales[model]
+            if sc.done:
+                continue
+            dep = self.models[model]
+            for src, dst, blk in sc.plan.schedule.steps[sc.steps_done]:
+                rs, rd = sc.node_map[src], sc.node_map[dst]
+                assert self.nodes[rs].has_block(model, blk), (src, blk)
+                buf = self.nodes[rs].gpu_shard(model).buffers[blk]
+                self.nodes[rd].receive(model, blk, buf,
+                                       self._unpack(dep, blk, buf))
+            sc.steps_done += 1
+            self.clock = max(self.clock, sc.now)
+            advanced = True
+            self._on_scale_progress(sc)
+            if sc.done:
+                self._finish_scale(sc)
+                del self.scales[model]
+        return advanced
 
     def run_to_completion(self) -> None:
         while self.step():
             pass
 
-    @property
-    def complete_nodes(self) -> List[int]:
-        return [n.node_id for n in self.nodes
-                if len(n.buffers) == self.n_blocks]
+    def _on_scale_progress(self, sc: ActiveScale) -> None:
+        model, sv, step = sc.model, self.serving[sc.model], sc.steps_done
+        # 1. mode switch: destinations holding the full model become
+        #    local replicas (scheduler-driven CB engines)
+        for pi, done_step in sc.plan.node_complete.items():
+            if pi >= sc.plan.k and pi not in sc.switched \
+                    and 0 <= done_step <= step:
+                sc.switched.add(pi)
+                self._ensure_local(model, sc.node_map[pi])
+        # 2. spawn execution pipelines that became ready — unless every
+        #    member already mode-switched (locals serve instead)
+        from repro.distributed.pipeline import PipelinedEngine
+        for idx, rstep in enumerate(sc.plan.pipeline_ready):
+            pipe = sc.plan.pipelines[idx]
+            if idx in sc.spawned or not 0 <= rstep <= step:
+                continue
+            sc.spawned.add(idx)
+            if all(p in sc.switched for p in pipe.nodes):
+                continue
+            eng = PipelinedEngine(
+                self.models[model].cfg,
+                self._pipeline_forward(model, pipe, sc.node_map),
+                n_slots=self.n_slots, max_len=self.max_len,
+                max_prefill_per_tick=self.max_prefill_per_tick)
+            sv.pipes.append(PipeInstance(pipe, list(pipe.nodes),
+                                         [sc.node_map[n]
+                                          for n in pipe.nodes], eng))
+        # 3. pipelines whose every member mode-switched drain and hand
+        #    their in-flight requests to a member's local replica (§4.4)
+        for pinst in sv.live_pipes():
+            if all(p in sc.switched for p in pinst.plan_nodes):
+                self._drain_pipe(model, pinst)
 
-    def ready_pipelines(self):
-        return [p for p, r in zip(self.plan.pipelines,
-                                  self.plan.pipeline_ready)
-                if 0 <= r <= self.step_idx]
+    def _finish_scale(self, sc: ActiveScale) -> None:
+        for pinst in self.serving[sc.model].live_pipes():
+            self._drain_pipe(sc.model, pinst)
+
+    def _adoption_target(self, model: str, exclude: Optional[int] = None
+                         ) -> Optional[ContinuousBatchingEngine]:
+        sv = self.serving[model]
+        cands = [(eng.sched.in_flight + eng.sched.pending, nd, eng)
+                 for nd, eng in sv.locals_.items() if nd != exclude]
+        if not cands:
+            return None
+        return min(cands)[2]
+
+    def _drain_pipe(self, model: str, pinst: PipeInstance) -> None:
+        pinst.drained = True
+        pinst.engine.drain()
+        pairs = pinst.engine.handoff()
+        if not pairs:
+            return
+        target = self.serving[model].locals_.get(pinst.members[0]) \
+            or self._adoption_target(model)
+        assert target is not None, "mode switch with no local replica"
+        target.adopt(pairs)
 
     # ------------------------------------------------------------- serving
-    def _forward_local(self, node_id: int, tokens) -> jnp.ndarray:
-        st = self.nodes[node_id]
-        B, S = tokens.shape
-        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
-        x = embed_from_flat(self.cfg, st.flat, tokens, positions)
-        x = apply_layer_range(self.cfg, st.flat, x, 0, self.cfg.n_layers,
-                              positions)
-        return head_from_flat(self.cfg, st.flat, x)
+    def submit(self, model: str, prompt: Sequence[int],
+               max_new_tokens: int, *,
+               req_id: Optional[int] = None) -> int:
+        """Admit a request for ``model`` into a scheduler-driven serving
+        instance (ready pipelines preferred over local replicas during a
+        scale-out — offload spikes to the scaling nodes); queued until
+        capacity exists when the model has no instance yet."""
+        if req_id is None:
+            req_id = self._next_id
+        self._next_id = max(self._next_id, req_id) + 1
+        inst = self._route(model)
+        if inst is None:
+            self.serving[model].pending.append(
+                (req_id, list(prompt), max_new_tokens))
+        else:
+            inst.submit(prompt, max_new_tokens, req_id=req_id)
+        return req_id
 
-    def _forward_pipeline(self, pipe, tokens) -> jnp.ndarray:
-        """Walk blocks in model order; each block's layers execute on the
-        node that owns it (§4.3 — activations hop between stages, the
-        KV/state never moves).  Handles non-contiguous per-stage block
-        sets from the arrival-aware (k=1) pipelines too."""
-        B, S = tokens.shape
-        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
-        owner = pipe.block_map()
-        x = embed_from_flat(self.cfg, self.nodes[owner[0]].flat, tokens,
-                            positions)
-        for b in range(self.n_blocks):
-            st = self.nodes[owner[b]]
-            lo, hi = layer_range_of_units(self.assign[b])
-            x = apply_layer_range(self.cfg, st.flat, x, lo, hi, positions)
-        # the head lives in the last block; tied embeddings live in block
-        # 0 — route the final activation to whichever node owns both
-        # pieces (one extra hop for tied-embedding models)
-        head_node = owner[0] if self.cfg.tie_embeddings \
-            else owner[self.n_blocks - 1]
-        flat = dict(self.nodes[owner[self.n_blocks - 1]].flat)
-        flat.update(self.nodes[head_node].flat)
-        return head_from_flat(self.cfg, flat, x)
+    def _route(self, model: str):
+        """Pick the serving instance for a new request: least-loaded
+        instance with a free slot, pipelines first (paper: offload spikes
+        to the scaling nodes).  While a scale-out is in flight, overflow
+        stays pending — new pipelines and replicas are about to appear —
+        otherwise it queues on the least-loaded existing instance."""
+        sv = self.serving[model]
+        pipes = [(p.engine.sched.in_flight + p.engine.sched.pending, i, p)
+                 for i, p in enumerate(sv.live_pipes())]
+        room = [c for c in pipes if c[0] < self.n_slots]
+        if room:
+            return min(room)[2].engine
+        locs = [(eng.sched.in_flight + eng.sched.pending, nd, eng)
+                for nd, eng in sv.locals_.items()]
+        room = [c for c in locs if c[0] < self.n_slots]
+        if room:
+            return min(room)[2]
+        if model in self.scales:
+            return None
+        if locs:
+            return min(locs)[2]
+        return min(pipes)[2].engine if pipes else None
 
-    def serve(self, tokens) -> Optional[dict]:
-        """Serve a request with the best currently-available option."""
-        done = self.complete_nodes
-        ewl = self.ready_pipelines()
-        if done and self.step_idx >= self.plan.total_steps:
+    def tick(self) -> bool:
+        """Run one scheduler tick on every serving instance of every
+        model (and flush requests that were waiting for capacity).
+        Returns False when every instance was idle."""
+        did = False
+        for model, sv in self.serving.items():
+            if sv.pending:
+                left = []
+                for rid, prompt, n in sv.pending:
+                    inst = self._route(model)
+                    if inst is None:
+                        left.append((rid, prompt, n))
+                    else:
+                        inst.submit(prompt, n, req_id=rid)
+                did = did or len(left) < len(sv.pending)
+                sv.pending = left
+            for pinst in sv.live_pipes():
+                did = pinst.engine.step() or did
+            for eng in sv.locals_.values():
+                did = eng.step() or did
+        return did
+
+    def drain_serving(self) -> None:
+        """Tick until every instance of every model is idle.  Raises if
+        requests are stuck pending for a model that never gained a
+        serving instance (registered without placement and never
+        scaled) — they would otherwise be dropped silently."""
+        while self.tick():
+            pass
+        stuck = {m: len(sv.pending)
+                 for m, sv in self.serving.items() if sv.pending}
+        if stuck:
+            raise RuntimeError(
+                f"requests pending with no serving instance: {stuck} "
+                f"(scale the model or register it with hot_nodes)")
+
+    def results(self, model: str) -> Dict[int, List[int]]:
+        """req_id → generated tokens, across every instance the request
+        may have touched (pipelines, handoffs, locals)."""
+        out: Dict[int, List[int]] = {}
+        sv = self.serving[model]
+        for pinst in sv.pipes:
+            out.update({rid: s.generated
+                        for rid, s in pinst.engine.sched.finished.items()})
+        for eng in sv.locals_.values():
+            eng.flush()
+            out.update({rid: s.generated
+                        for rid, s in eng.sched.finished.items()})
+        return out
+
+    # --------------------------------------------------------- diagnostics
+    def complete_nodes(self, model: str) -> List[int]:
+        return [mm.node_id for mm in self.nodes
+                if (s := mm.gpu_shard(model)) is not None and s.complete]
+
+    def ready_pipelines(self, model: str) -> List[ExecutionPipeline]:
+        sc = self.scales.get(model)
+        if sc is None:
+            return []
+        return sc.plan.ready_pipelines_at(sc.steps_done)
+
+    def forward(self, model: str, tokens) -> Optional[dict]:
+        """One-shot diagnostic forward through the best currently
+        available option (NOT the serving path — requests go through
+        ``submit``/``tick`` and the Scheduler): used by correctness tests
+        to compare logits against the reference model at every step."""
+        done = self.complete_nodes(model)
+        sc = self.scales.get(model)
+        if done and sc is None:
             nd = done[-1]
             return {"mode": "local", "node": nd,
-                    "logits": self._forward_local(nd, tokens)}
-        # prefer pipelines over burdening the source (paper: offload
-        # spikes to the scaling nodes)
-        for pipe in ewl:
-            if not any(n in done for n in pipe.nodes):
-                return {"mode": "pipeline",
-                        "nodes": pipe.nodes,
-                        "logits": self._forward_pipeline(pipe, tokens)}
+                    "logits": self._forward_local(model, nd, tokens)}
+        if sc is not None:
+            for pipe in sc.plan.ready_pipelines_at(sc.steps_done):
+                members = [sc.node_map[n] for n in pipe.nodes]
+                if not any(nd in done for nd in members):
+                    fwd = self._pipeline_forward(model, pipe, sc.node_map)
+                    return {"mode": "pipeline", "nodes": members,
+                            "logits": fwd(tokens)}
         if done:
             nd = done[0]
             return {"mode": "local", "node": nd,
-                    "logits": self._forward_local(nd, tokens)}
+                    "logits": self._forward_local(model, nd, tokens)}
         return None
+
+    def _forward_local(self, model: str, node_id: int,
+                       tokens) -> jnp.ndarray:
+        dep = self.models[model]
+        flat = self.nodes[node_id].gpu_shard(model).flat
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x = embed_from_flat(dep.cfg, flat, tokens, positions)
+        x = apply_layer_range(dep.cfg, flat, x, 0, dep.cfg.n_layers,
+                              positions)
+        return head_from_flat(dep.cfg, flat, x)

@@ -144,6 +144,10 @@ class ContinuousBatchingEngine:
         # any eos_id switches the engine to per-tick host sync.
         self._pending: List[Tuple[SeqState, int, int, jnp.ndarray]] = []
         self._eager = False
+        # handed-off sequences waiting for a slot (Scheduler.resume_queue):
+        # req_id -> live cache, or None when the cache must be rebuilt
+        # (mode-switch recomputation) at resume time.
+        self._parked: Dict[int, Any] = {}
 
     # ------------------------------------------------------------- intake
     def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
@@ -187,19 +191,34 @@ class ContinuousBatchingEngine:
         self.sched.on_prefilled(slot, self._record(seq, slot,
                                                    self._last_tok))
 
+    def _restore(self, slot: int, seq: SeqState, cache: Any) -> None:
+        """Scatter a handed-off sequence's cache into ``slot`` and stage
+        its last generated token as the next decode input."""
+        if cache is None:       # pipelined source kept no decode cache
+            from repro.core.mode_switch import handoff_requests
+            cache = handoff_requests(self.cfg, self.params, [seq],
+                                     cache_len=self.max_len)[seq.req_id]
+        self.cache = cache_scatter(self.cache, cache, slot, self._axes)
+        self._last_tok = self._last_tok.at[slot].set(seq.generated[-1])
+
     def step(self) -> bool:
         """Run one scheduler tick.  Returns False when nothing ran."""
         tick = self.sched.next_tick()
         if tick.idle:
             return False
-        # drop back to the sync-free path once no live/queued sequence
-        # terminates on EOS (the latch would otherwise cost a host read
-        # per token for the rest of the engine's lifetime)
+        # drop back to the sync-free path once no live/queued/parked
+        # sequence terminates on EOS (the latch would otherwise cost a
+        # host read per token for the rest of the engine's lifetime)
         if self._eager and not any(
                 s is not None and s.eos_id is not None
                 for s in self.sched.slots) and not any(
-                s.eos_id is not None for s in self.sched.queue):
+                s.eos_id is not None
+                for s in self.sched.queue + self.sched.resume_queue):
             self._eager = False
+        # resumed sequences are mid-decode: their caches must land in the
+        # pool BEFORE this tick's decode step advances every row
+        for slot, seq in tick.resume:
+            self._restore(slot, seq, self._parked.pop(seq.req_id, None))
         # decode first: the pooled decode step advances EVERY cache row,
         # so freshly-prefilled rows must be scattered after it, not before
         # (their ignored pseudo-step would otherwise corrupt pos/KV).
@@ -237,9 +256,11 @@ class ContinuousBatchingEngine:
                 and self.sched.state[i] is not SlotState.FREE}
         for slot, seq in live.items():
             out.append((seq, cache_gather(self.cache, slot, self._axes)))
+        have = {s.req_id for s, _ in out}
         for seq in self.sched.handoff():
-            if seq.req_id not in {s.req_id for s, _ in out}:
-                out.append((seq, None))
+            if seq.req_id not in have:
+                # parked sequences keep the cache they arrived with
+                out.append((seq, self._parked.pop(seq.req_id, None)))
         return out
 
     def adopt(self, pairs: Sequence[Tuple[SeqState, Any]]) -> None:
@@ -249,27 +270,22 @@ class ContinuousBatchingEngine:
         a free slot; one arriving without (e.g. from a pipelined instance
         that keeps no decode cache) has its cache rebuilt once via
         ``repro.core.mode_switch.handoff_requests`` — either way it
-        resumes in DECODE and never re-enters the prefill queue.
+        resumes in DECODE and never re-enters the prefill queue.  When
+        more live sequences arrive than slots are free (a multi-pipeline
+        mode switch converging on one replica), the overflow parks in the
+        scheduler's resume queue and enters DECODE as slots retire.
         Sequences that never started decode are submitted normally."""
-        from repro.core.mode_switch import handoff_requests
         if any(s.eos_id is not None for s, _ in pairs):
             self._eager = True
         started = [(s, c) for s, c in pairs if s.generated]
         fresh = [s for s, c in pairs if not s.generated]
-        rebuilt = handoff_requests(
-            self.cfg, self.params,
-            [s for s, c in started if c is None], cache_len=self.max_len)
-        caches = {s.req_id: c for s, c in started if c is not None}
-        caches.update(rebuilt)
-        for seq, _ in started:
-            free = self.sched.free_slots()
-            if not free:
-                raise RuntimeError("no free slot for handoff")
-            slot = free[0]
-            self.cache = cache_scatter(self.cache, caches[seq.req_id], slot,
-                                       self._axes)
-            self._last_tok = self._last_tok.at[slot].set(seq.generated[-1])
+        free = self.sched.free_slots()
+        for (seq, cache), slot in zip(started, free):
+            self._restore(slot, seq, cache)
             self.sched.adopt(seq, slot)
+        for seq, cache in started[len(free):]:
+            self._parked[seq.req_id] = cache
+            self.sched.enqueue_resume(seq)
         for seq in fresh:
             self.sched.submit(seq)
 

@@ -96,13 +96,17 @@ class Tick:
 
     ``admit``: (slot, seq) pairs to prefill this round.
     ``decode``: slots holding live sequences to advance one token.
+    ``resume``: (slot, seq) handed-off sequences entering DECODE this
+    round — the engine must restore their caches before decoding.
     """
     admit: List[Tuple[int, SeqState]]
     decode: List[int]
+    resume: List[Tuple[int, SeqState]] = dataclasses.field(
+        default_factory=list)
 
     @property
     def idle(self) -> bool:
-        return not self.admit and not self.decode
+        return not self.admit and not self.decode and not self.resume
 
 
 # -------------------------------------------------------------- scheduler
@@ -122,6 +126,7 @@ class Scheduler:
         self.slots: List[Optional[SeqState]] = [None] * n_slots
         self.state: List[SlotState] = [SlotState.FREE] * n_slots
         self.queue: List[SeqState] = []
+        self.resume_queue: List[SeqState] = []
         self.draining = False
         self.tick_count = 0
         self.finished: Dict[int, SeqState] = {}
@@ -145,6 +150,17 @@ class Scheduler:
         self.state[slot] = SlotState.DECODE
         self.stats["adopted"] += 1
 
+    def enqueue_resume(self, seq: SeqState) -> None:
+        """Queue a handed-off mid-generation sequence for adoption when a
+        slot frees up.  Unlike ``submit``, it will enter DECODE directly
+        (``Tick.resume``) — its prefill is never re-run — but unlike
+        ``adopt`` it does not require a slot to be free right now (a
+        multi-pipeline mode switch can hand off more live sequences than
+        one replica has free slots)."""
+        if self.draining:
+            raise RuntimeError("draining instance admits no new requests")
+        self.resume_queue.append(seq)
+
     # ------------------------------------------------------------ tick
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.state) if s is SlotState.FREE]
@@ -157,8 +173,17 @@ class Scheduler:
         """Plan one round: retire finished, refill freed slots, decode."""
         self.tick_count += 1
         self._retire_finished()
+        resume: List[Tuple[int, SeqState]] = []
         admit: List[Tuple[int, SeqState]] = []
         if not self.draining:
+            # handed-off sequences outrank fresh admissions: they already
+            # spent prefill compute elsewhere and resume in DECODE
+            for slot in self.free_slots():
+                if not self.resume_queue:
+                    break
+                seq = self.resume_queue.pop(0)
+                self.adopt(seq, slot)
+                resume.append((slot, seq))
             for slot in self.free_slots():
                 if not self.queue or len(admit) >= self.max_prefill_per_tick:
                     break
@@ -172,7 +197,7 @@ class Scheduler:
             self.stats["decode_ticks"] += 1
             self.stats["decode_tokens"] += len(decode)
         self.stats["prefills"] += len(admit)
-        return Tick(admit=admit, decode=decode)
+        return Tick(admit=admit, decode=decode, resume=resume)
 
     # ----------------------------------------------------- engine feedback
     def on_prefilled(self, slot: int, first_token: int) -> None:
@@ -218,6 +243,8 @@ class Scheduler:
                 out.append(seq)
             self.slots[i] = None
             self.state[i] = SlotState.FREE
+        out.extend(self.resume_queue)
+        self.resume_queue = []
         out.extend(self.queue)
         self.queue = []
         return out
@@ -225,7 +252,7 @@ class Scheduler:
     # ------------------------------------------------------------- status
     @property
     def pending(self) -> int:
-        return len(self.queue)
+        return len(self.queue) + len(self.resume_queue)
 
     @property
     def in_flight(self) -> int:
@@ -233,4 +260,5 @@ class Scheduler:
 
     @property
     def done(self) -> bool:
-        return not self.queue and self.in_flight == 0
+        return not self.queue and not self.resume_queue \
+            and self.in_flight == 0

@@ -290,9 +290,9 @@ class Simulator:
                     if idle and now - inst.last_active > self.keepalive:
                         if inst.owns_gpus:
                             for nd in inst.nodes:
-                                if (self.cluster.nodes[nd].gpu_model
-                                        == inst.model):
-                                    self.cluster.release(nd, now)
+                                if inst.model in self.cluster.nodes[nd].gpu:
+                                    self.cluster.release(nd, now,
+                                                         inst.model)
                         result.instance_events.append(
                             (now, "down:" + inst.kind, inst.model))
                         del instances[iid]

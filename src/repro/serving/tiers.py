@@ -1,4 +1,4 @@
-"""Storage tiers and node/cluster state (λScale §5, locality-driven startup).
+"""Storage tiers and the per-node model manager (λScale §5).
 
 Hardware constants default to the TPU-v5e-class target of this repo's
 dry-run (ICI links) for the network, and to the paper's measured testbed
@@ -6,20 +6,31 @@ numbers for host-memory and SSD paths (Table 1: 64 GB/s host, 5 GB/s NVMe).
 A paper-faithful "H800" profile is provided for reproducing the paper's
 absolute latency figures (400 Gb/s IB ≈ 50 GB/s — numerically the same link
 bandwidth as one ICI link, which is why the paper's sub-second 13B×8 claim
-transfers directly).
+transfers directly).  The link constants themselves live in
+``core.multicast`` (single calibration point shared with ``LinkModel``).
+
+``ModelManager`` is the per-node runtime state: packed blocks for
+*multiple* models across explicit GPU / host-memory tiers, with LRU
+eviction on the host tier and host-memory fallback on GPU scale-down.
+``ClusterState`` aggregates one manager per node and is shared by the
+discrete-event simulator (metadata-only shards) and the live cluster
+(shards carrying real wire buffers + unpacked tensors).
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Dict, List, Optional, Set
+from typing import Any, Dict, List, Optional, Set
+
+from repro.core.multicast import (DEFAULT_LINK_BW, DEFAULT_STEP_OVERHEAD,
+                                  LinkModel)
 
 
 @dataclasses.dataclass(frozen=True)
 class HardwareProfile:
     name: str = "tpu-v5e"
-    link_bw: float = 50e9            # bytes/s inter-node (ICI / 400Gb IB)
-    step_overhead: float = 0.004     # s per multicast step (Fig 17/18)
+    link_bw: float = DEFAULT_LINK_BW         # bytes/s inter-node
+    step_overhead: float = DEFAULT_STEP_OVERHEAD  # s per multicast step
     hbm_bw: float = 819e9            # bytes/s
     peak_flops: float = 197e12      # bf16
     host_to_gpu_bw: float = 64e9     # bytes/s (paper Table 1)
@@ -29,38 +40,56 @@ class HardwareProfile:
     host_mem_models: int = 3         # paper §2.3 simulation setting
     nccl_group_init: float = 0.30    # s (paper §7.2: 100s of ms)
 
+    def link_model(self) -> LinkModel:
+        """The multicast step-time model this profile calibrates."""
+        return LinkModel.from_profile(self)
+
+    def fetch_seconds(self, nbytes: float, tier: str) -> float:
+        """Seconds to materialize ``nbytes`` into GPU memory from a
+        storage tier: 'gpu' (already resident), 'host' (local host
+        memory), 'remote' (another node's host memory via one-sided
+        RDMA), 'ssd' (local NVMe), 'registry' (remote model store)."""
+        bw = {"gpu": float("inf"), "host": self.host_to_gpu_bw,
+              "remote": self.link_bw, "ssd": self.ssd_bw,
+              "registry": self.remote_bw}[tier]
+        return nbytes / bw
+
 
 H800 = HardwareProfile(name="h800", hbm_bw=3350e9, peak_flops=990e12)
 
 
-@dataclasses.dataclass
-class NodeState:
-    node_id: int
-    gpu_model: Optional[str] = None          # model resident in GPU memory
-    gpu_busy_since: Optional[float] = None   # for GPU-time accounting
-    host_cache: "LRUCache" = None            # type: ignore
-
-    def __post_init__(self):
-        if self.host_cache is None:
-            self.host_cache = LRUCache(capacity=3)
-
-
 class LRUCache:
-    """LRU set of model ids cached in a node's host memory."""
+    """LRU set of model ids cached in a node's host memory.
+
+    Optionally carries a payload per model (the live cluster stores the
+    packed block shard there; the simulator stores nothing) — evicting a
+    model drops its payload."""
 
     def __init__(self, capacity: int):
         self.capacity = capacity
         self._d: "OrderedDict[str, float]" = OrderedDict()
+        self._payload: Dict[str, Any] = {}
         self.evictions: List[tuple] = []     # (model, t_in, t_out)
 
-    def touch(self, model: str, now: float) -> None:
+    def touch(self, model: str, now: float, payload: Any = None) -> None:
+        if payload is not None:
+            self._payload[model] = payload
         if model in self._d:
             self._d.move_to_end(model)
             return
         self._d[model] = now
         while len(self._d) > self.capacity:
             old, t_in = self._d.popitem(last=False)
+            self._payload.pop(old, None)
             self.evictions.append((old, t_in, now))
+
+    def get(self, model: str) -> Any:
+        return self._payload.get(model)
+
+    def pop(self, model: str) -> Any:
+        """Remove a model (promotion to GPU); returns its payload."""
+        self._d.pop(model, None)
+        return self._payload.pop(model, None)
 
     def __contains__(self, model: str) -> bool:
         return model in self._d
@@ -69,41 +98,147 @@ class LRUCache:
         return set(self._d)
 
 
+@dataclasses.dataclass
+class ModelShard:
+    """One model's blocks resident on one node.
+
+    ``buffers`` maps block id → packed wire buffer (np.ndarray in the
+    live cluster, None-valued placeholders are never stored); ``flat``
+    holds the unpacked tensors and exists only while the shard sits in
+    the GPU tier.  The simulator keeps metadata-only shards (no buffers).
+    """
+    model: str
+    n_blocks: int = 0                # blocks of a full replica (0: unknown)
+    buffers: Dict[int, Any] = dataclasses.field(default_factory=dict)
+    flat: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def complete(self) -> bool:
+        return self.n_blocks > 0 and len(self.buffers) == self.n_blocks
+
+
+@dataclasses.dataclass
+class ModelManager:
+    """A node's model manager (§5): multi-model storage across tiers.
+
+    GPU tier: up to ``gpu_capacity`` resident models (unpacked, servable).
+    Host tier: ``host_cache`` LRU of packed shards (fallback on
+    scale-down; the locality-driven startup's warm source).
+    """
+    node_id: int
+    gpu_capacity: int = 1
+    gpu: "OrderedDict[str, ModelShard]" = dataclasses.field(
+        default_factory=OrderedDict)
+    host_cache: LRUCache = dataclasses.field(
+        default_factory=lambda: LRUCache(capacity=3))
+    gpu_busy_since: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+
+    # -------------------------------------------------------- tier queries
+    @property
+    def gpu_model(self) -> Optional[str]:
+        """The GPU-resident model (oldest first when several)."""
+        return next(iter(self.gpu), None)
+
+    @property
+    def gpu_free(self) -> bool:
+        return len(self.gpu) < self.gpu_capacity
+
+    def has_block(self, model: str, block_id: int) -> bool:
+        shard = self.gpu.get(model)
+        return shard is not None and block_id in shard.buffers
+
+    def gpu_shard(self, model: str) -> Optional[ModelShard]:
+        return self.gpu.get(model)
+
+    # --------------------------------------------------------- GPU intake
+    def admit(self, model: str, n_blocks: int, now: float,
+              shard: Optional[ModelShard] = None) -> List[str]:
+        """Open (or reuse) a GPU-tier shard for ``model``; returns models
+        demoted to host memory to make room (LRU over GPU residents)."""
+        if model in self.gpu:
+            return []
+        demoted = []
+        while len(self.gpu) >= self.gpu_capacity:
+            old = next(iter(self.gpu))
+            self.demote(old, now)
+            demoted.append(old)
+        self.gpu[model] = shard or ModelShard(model, n_blocks)
+        self.gpu_busy_since.setdefault(model, now)
+        return demoted
+
+    def receive(self, model: str, block_id: int, buf: Any,
+                flat_update: Optional[Dict[str, Any]] = None) -> bool:
+        """Store one packed block (and its unpacked tensors) in the GPU
+        shard.  Returns False when the block was already resident."""
+        shard = self.gpu[model]
+        if block_id in shard.buffers:
+            return False
+        shard.buffers[block_id] = buf
+        if flat_update:
+            shard.flat.update(flat_update)
+        return True
+
+    # ------------------------------------------------- tier transitions
+    def demote(self, model: str, now: float) -> None:
+        """GPU → host fallback (§5 scale-down): keep the packed wire
+        buffers in host memory (LRU), drop the unpacked tensors."""
+        shard = self.gpu.pop(model)
+        shard.flat = {}
+        self.gpu_busy_since.pop(model, None)
+        self.host_cache.touch(model, now,
+                              payload=shard if shard.buffers else None)
+
+    def promote(self, model: str, now: float) -> Optional[ModelShard]:
+        """Host → GPU (locality-driven warm start): move the packed shard
+        back to the GPU tier; the caller re-unpacks tensors and pays the
+        host→GPU transfer (``HardwareProfile.fetch_seconds``)."""
+        if model not in self.host_cache:
+            return None
+        shard = self.host_cache.pop(model) or ModelShard(model)
+        self.admit(model, shard.n_blocks, now, shard=shard)
+        return shard
+
+
 class ClusterState:
+    """One ``ModelManager`` per node + GPU-time accounting, shared by the
+    discrete-event simulator and the live cluster."""
+
     def __init__(self, n_nodes: int, hw: HardwareProfile):
         self.hw = hw
-        self.nodes = [NodeState(i, host_cache=LRUCache(hw.host_mem_models))
-                      for i in range(n_nodes)]
+        self.nodes = [
+            ModelManager(i, gpu_capacity=hw.gpu_mem_models,
+                         host_cache=LRUCache(hw.host_mem_models))
+            for i in range(n_nodes)]
         self.gpu_seconds = 0.0
 
     # ---------------- locality-driven startup queries (§5) ----------------
     def gpu_nodes(self, model: str) -> List[int]:
-        return [n.node_id for n in self.nodes if n.gpu_model == model]
+        return [n.node_id for n in self.nodes if model in n.gpu]
 
     def warm_nodes(self, model: str) -> List[int]:
         return [n.node_id for n in self.nodes
-                if model in n.host_cache and n.gpu_model is None]
+                if model in n.host_cache and n.gpu_free]
 
     def free_nodes(self) -> List[int]:
-        return [n.node_id for n in self.nodes if n.gpu_model is None]
+        return [n.node_id for n in self.nodes if n.gpu_free]
 
     # ---------------------- GPU occupancy accounting ----------------------
     def occupy(self, node_id: int, model: str, now: float) -> None:
         n = self.nodes[node_id]
-        assert n.gpu_model is None, f"node {node_id} already occupied"
-        n.gpu_model = model
-        n.gpu_busy_since = now
+        assert n.gpu_free, f"node {node_id} GPU tier full"
+        n.admit(model, 0, now)
 
-    def release(self, node_id: int, now: float) -> None:
+    def release(self, node_id: int, now: float,
+                model: Optional[str] = None) -> None:
         n = self.nodes[node_id]
-        assert n.gpu_model is not None
-        self.gpu_seconds += now - n.gpu_busy_since
-        n.host_cache.touch(n.gpu_model, now)   # model falls back to host mem
-        n.gpu_model = None
-        n.gpu_busy_since = None
+        model = model or n.gpu_model
+        assert model is not None and model in n.gpu
+        self.gpu_seconds += now - n.gpu_busy_since[model]
+        n.demote(model, now)                 # falls back to host memory
 
     def finalize(self, now: float) -> None:
         for n in self.nodes:
-            if n.gpu_model is not None:
-                self.gpu_seconds += now - n.gpu_busy_since
-                n.gpu_busy_since = now
+            for model, since in n.gpu_busy_since.items():
+                self.gpu_seconds += now - since
+                n.gpu_busy_since[model] = now

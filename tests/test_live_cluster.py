@@ -1,6 +1,7 @@
 """End-to-end live cluster manager (paper Fig 4): scale-out with real block
 movement, execute-while-load serving with real logits, mode switch to
-local — all compared against the source model."""
+local — all compared against the source model.  (Fast-tier multi-model /
+scheduler-routed serving coverage lives in tests/test_tiered_runtime.py.)"""
 import dataclasses
 
 import jax
@@ -26,26 +27,34 @@ def _setup(arch, n_layers=8):
     return cfg, params, batch, ref
 
 
+def _scaled_cluster(cfg, params, *, n, k, n_blocks=8):
+    lc = LiveCluster(n_nodes=n, max_len=64)
+    lc.register("m", cfg, params, n_blocks=n_blocks,
+                hot_nodes=list(range(k)))
+    lc.scale("m", n - k, k=k)
+    return lc, lc.scales["m"]
+
+
 @pytest.mark.parametrize("arch,k,n", [("qwen2.5-3b", 1, 8),
                                       ("qwen2.5-3b", 2, 8),
                                       ("qwen2-moe-a2.7b", 2, 6),
                                       ("xlstm-1.3b", 1, 4)])
 def test_serve_correct_at_every_step(arch, k, n):
     cfg, params, batch, ref = _setup(arch)
-    lc = LiveCluster(cfg, params, n_nodes=n, n_blocks=8, k=k)
+    lc, sc = _scaled_cluster(cfg, params, n=n, k=k)
     modes = set()
     while True:
-        r = lc.serve(batch["tokens"])
+        r = lc.forward("m", batch["tokens"])
         if r is not None:
             err = float(jnp.max(jnp.abs(r["logits"] - ref)))
             assert err < TOL, (r["mode"], err)
             modes.add(r["mode"])
         if not lc.step():
             break
-    final = lc.serve(batch["tokens"])
+    final = lc.forward("m", batch["tokens"])
     assert final["mode"] == "local"
     assert float(jnp.max(jnp.abs(final["logits"] - ref))) < TOL
-    assert len(lc.complete_nodes) == n        # everyone mode-switched
+    assert len(lc.complete_nodes("m")) == n   # everyone mode-switched
     assert "local" in modes                   # sources served from step 0
 
 
@@ -53,26 +62,28 @@ def test_kway_pipeline_serves_before_completion():
     """k=2, 8 nodes: execute-while-load pipelines must serve strictly
     before the multicast completes (the paper's core speedup)."""
     cfg, params, batch, ref = _setup("qwen2.5-3b")
-    lc = LiveCluster(cfg, params, n_nodes=8, n_blocks=8, k=2)
+    lc, sc = _scaled_cluster(cfg, params, n=8, k=2)
     first_pipe_step = None
     while True:
-        r = lc.serve(batch["tokens"])
+        r = lc.forward("m", batch["tokens"])
         if (r is not None and r["mode"] == "pipeline"
                 and first_pipe_step is None):
-            first_pipe_step = lc.step_idx
+            first_pipe_step = sc.steps_done
             assert float(jnp.max(jnp.abs(r["logits"] - ref))) < TOL
         if not lc.step():
             break
     assert first_pipe_step is not None
-    assert first_pipe_step < lc.plan.total_steps
+    assert first_pipe_step < sc.plan.total_steps
 
 
 def test_block_movement_matches_schedule():
     cfg, params, batch, ref = _setup("stablelm-1.6b")
-    lc = LiveCluster(cfg, params, n_nodes=4, n_blocks=6, k=1)
-    arrivals = lc.plan.schedule.arrival_steps({0: range(lc.n_blocks)})
+    lc, sc = _scaled_cluster(cfg, params, n=4, k=1, n_blocks=6)
+    arrivals = sc.plan.schedule.arrival_steps(
+        {0: range(sc.plan.n_blocks)})
     while lc.step():
-        for nd in lc.nodes:
-            for b in range(lc.n_blocks):
-                expect = arrivals[nd.node_id].get(b, 10 ** 9) <= lc.step_idx
-                assert nd.has(b) == expect, (nd.node_id, b, lc.step_idx)
+        for pi, nd in sc.node_map.items():
+            for b in range(sc.plan.n_blocks):
+                expect = arrivals[pi].get(b, 10 ** 9) <= sc.steps_done
+                assert lc.nodes[nd].has_block("m", b) == expect, \
+                    (pi, nd, b, sc.steps_done)

@@ -2,7 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis import assume, given, settings, strategies as st
 
 from repro.core.multicast import (LinkModel, binomial_schedule,
                                   kway_block_orders, kway_schedule,
@@ -67,6 +67,28 @@ def test_kway_schedule_complete(n, b, k):
     k = min(k, n - 1)
     s = kway_schedule(n, b, k)
     s.validate({src: range(b) for src in range(k)})
+
+
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(5, 33), b=st.integers(2, 16), k=st.integers(2, 5))
+def test_kway_non_power_of_two_valid_and_bounded(n, b, k):
+    """k>1 sources on a non-power-of-two N: the merged sub-group
+    schedules must stay model-valid/complete (``Schedule.validate``) and
+    finish within the greedy fallback's slack over the per-sub-group
+    ``optimal_steps`` bound (sub-groups have ≤ ⌈N/k⌉ nodes and run
+    concurrently, so the merge inherits the largest group's bound)."""
+    assume(n & (n - 1))                  # non-power-of-two N
+    k = min(k, n - 1, b)
+    assume(k > 1)
+    s = kway_schedule(n, b, k)
+    s.validate({src: range(b) for src in range(k)})
+    group = math.ceil(n / k)
+    assert s.n_steps <= optimal_steps(group, b) + 3
+    # every transfer stays within one sub-group (disjoint concurrency)
+    group_of = {nd: gi for gi, g in enumerate(s.sub_groups) for nd in g}
+    for step in s.steps:
+        for src, dst, _ in step:
+            assert group_of[src] == group_of[dst]
 
 
 @pytest.mark.parametrize("n,b,k", [(8, 16, 2), (16, 16, 4), (12, 16, 4),

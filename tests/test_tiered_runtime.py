@@ -1,0 +1,269 @@
+"""Tiered multi-model runtime (λScale §5 unified across the live cluster,
+scheduler, and simulator).
+
+Fast-tier coverage of the tentpole: per-node ``ModelManager`` GPU/host
+tiers with LRU eviction and host fallback on scale-down; locality-driven
+source selection (GPU > host > remote/SSD) priced on the simulated clock;
+multiple concurrent ``ScalePlan``s; and every live serving option (hot
+sources, EWL pipelines, post-mode-switch replicas) driven by the
+request-level ``Scheduler`` — exact-token-equal to the static reference
+engine, including requests admitted mid-multicast and handed off at mode
+switch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import init_params
+from repro.serving.cluster import LiveCluster
+from repro.serving.engine import ContinuousBatchingEngine, InferenceEngine
+from repro.serving.simulator import Simulator
+from repro.serving.baselines import LambdaScalePolicy
+from repro.serving.tiers import ClusterState, HardwareProfile, ModelManager
+from repro.serving.workload import constant_stress
+
+MAX_LEN = 48
+_CTX = {}
+
+
+def _ctx():
+    """Two reduced models + reference engines, built once per session."""
+    if not _CTX:
+        cfg_a = reduced(get_config("qwen2.5-3b"), d_model=64, n_layers=4)
+        cfg_b = reduced(get_config("stablelm-1.6b"), d_model=64)
+        _CTX["A"] = (cfg_a, init_params(cfg_a, jax.random.PRNGKey(0)))
+        _CTX["B"] = (cfg_b, init_params(cfg_b, jax.random.PRNGKey(1)))
+        _CTX["ref"] = {m: InferenceEngine(cfg, params, max_len=MAX_LEN)
+                       for m, (cfg, params) in _CTX.items()}
+    return _CTX
+
+
+def _reference(model: str, prompt, n_tok):
+    toks = _ctx()["ref"][model].generate(
+        {"tokens": jnp.asarray(prompt, jnp.int32)[None]}, n_tok,
+        cache_len=MAX_LEN)
+    return list(map(int, toks[0]))
+
+
+def _prompt(rng, model: str, length: int):
+    vocab = _ctx()[model][0].vocab_size
+    return list(map(int, rng.integers(0, vocab, size=length)))
+
+
+# ---------------------------------------------------------------- tentpole
+def test_two_model_workload_end_to_end():
+    """Acceptance: model A hot on its 2 sources, model B scaled up from a
+    host-warm node, serving a mixed 12-request workload while both
+    multicasts are in flight.  Every request flows through a Scheduler
+    and matches the static engine's greedy tokens exactly — including
+    requests admitted on EWL pipelines mid-multicast and handed off to
+    local replicas at mode switch."""
+    ctx = _ctx()
+    lc = LiveCluster(n_nodes=8, n_slots=2, max_len=MAX_LEN)
+    lc.register("A", *ctx["A"], n_blocks=4, hot_nodes=[0, 1])
+    lc.register("B", *ctx["B"], n_blocks=4, warm_nodes=[6])
+    rep_a = lc.scale("A", 4, k=2)
+    rep_b = lc.scale("B", 1)
+    assert rep_a.source_tier == "gpu" and rep_b.source_tier == "host"
+    assert set(rep_a.dests).isdisjoint(rep_b.dests)   # concurrent plans
+
+    rng = np.random.default_rng(3)
+    want = {}
+    for i in range(12):
+        m = "A" if i % 2 == 0 else "B"
+        prompt = _prompt(rng, m, int(rng.choice([5, 8])))
+        n_tok = int(rng.integers(3, 7))
+        rid = lc.submit(m, prompt, n_tok)
+        want[rid] = (m, _reference(m, prompt, n_tok))
+    while lc.step():          # serve while both multicasts are in flight
+        lc.tick()
+    lc.drain_serving()
+
+    results = {m: lc.results(m) for m in "AB"}
+    for rid, (m, ref) in want.items():
+        assert results[m][rid] == ref, (m, rid)
+    # every request finished in exactly one scheduler (the only path)
+    per_sched = [len(e.sched.finished)
+                 for m in "AB" for e in lc.serving[m].locals_.values()]
+    per_sched += [len(p.engine.sched.finished)
+                  for m in "AB" for p in lc.serving[m].pipes]
+    assert sum(per_sched) == 12
+    # spike offload: some requests were admitted on an EWL pipeline
+    # mid-multicast, then handed off into DECODE on a local replica
+    pipe_admits = sum(p.engine.sched.stats["admitted"]
+                      for p in lc.serving["A"].pipes)
+    adopted = sum(e.stats["adopted"]
+                  for m in "AB" for e in lc.serving[m].locals_.values())
+    assert pipe_admits >= 1
+    assert adopted >= 1
+    # host-warm startup beat what a cold start would have cost
+    cold = lc.hw.fetch_seconds(lc.models["B"].nbytes, "ssd")
+    assert rep_b.t_source_ready - rep_b.t_request < cold
+    assert len(lc.complete_nodes("A")) == 6
+    assert len(lc.complete_nodes("B")) == 2
+
+
+def test_locality_tiers_on_live_clock():
+    """GPU-hot < host-warm < SSD-cold on the live cluster's simulated
+    clock: same model, same topology, different placement tier."""
+    ctx = _ctx()
+    reports = {}
+    for tier, kw in [("gpu", {"hot_nodes": [0]}),
+                     ("host", {"warm_nodes": [0]}), ("ssd", {})]:
+        lc = LiveCluster(n_nodes=4, max_len=MAX_LEN)
+        lc.register("m", *ctx["B"], n_blocks=2, **kw)
+        reports[tier] = lc.scale("m", 2, k=1)
+        lc.run_to_completion()
+        assert len(lc.complete_nodes("m")) == 3
+    assert [reports[t].source_tier for t in ("gpu", "host", "ssd")] == \
+        ["gpu", "host", "ssd"]
+    # locality-driven startup measurably beats cold start
+    assert reports["host"].t_source_ready < reports["ssd"].t_source_ready
+    assert reports["gpu"].t_complete < reports["host"].t_complete \
+        < reports["ssd"].t_complete
+
+
+def test_locality_beats_cold_in_simulator():
+    """The same locality claim on the calibrated simulator: a host-warm
+    replica (paper footnote 2 seeding) beats an SSD cold start."""
+    hw = HardwareProfile()
+    reqs = constant_stress(10.0, 2.0, model="llama2-13b", seed=5)
+    warm = Simulator(LambdaScalePolicy(hw), 8, hw).run(reqs, warm_nodes=1)
+    cold = Simulator(LambdaScalePolicy(hw), 8, hw).run(reqs, warm_nodes=0)
+    assert warm.mean_ttft() < cold.mean_ttft()
+    assert warm.ttft_percentile(90) < cold.ttft_percentile(90)
+
+
+def test_scale_down_host_fallback_and_rescale():
+    """§5 scale-down: released replicas fall back to the host tier (with
+    their packed blocks), in-flight requests hand off to a surviving
+    replica, and a later scale-up finds the host-warm copy."""
+    ctx = _ctx()
+    lc = LiveCluster(n_nodes=4, n_slots=2, max_len=MAX_LEN)
+    lc.register("m", *ctx["B"], n_blocks=2, hot_nodes=[0])
+    lc.scale("m", 3, k=1)
+    lc.run_to_completion()
+    assert len(lc.complete_nodes("m")) == 4
+
+    rng = np.random.default_rng(9)
+    prompt = _prompt(rng, "B", 5)
+    rid = lc.submit("m", prompt, 6)
+    for _ in range(3):
+        lc.tick()             # prefill + a couple of decode ticks
+    lc.scale_down("m", [0])   # the serving replica drains and hands off
+    assert lc.state.warm_nodes("m") == [0]
+    shard = lc.nodes[0].host_cache.get("m")
+    assert shard is not None and shard.complete   # packed blocks kept
+    lc.drain_serving()
+    assert lc.results("m")[rid] == _reference("B", prompt, 6)
+    adopted = sum(e.stats["adopted"]
+                  for e in lc.serving["m"].locals_.values())
+    assert adopted == 1
+
+    lc.scale_down("m", [1, 2, 3])
+    assert lc.state.free_nodes() == [0, 1, 2, 3]
+    rep = lc.scale("m", 1)
+    assert rep.source_tier == "host"              # found the fallback copy
+    lc.run_to_completion()
+    assert len(lc.complete_nodes("m")) == 2
+
+
+def test_handoff_overflow_parks_and_resumes():
+    """More live sequences than the adopting replica has slots: the
+    overflow parks in the scheduler's resume queue and enters DECODE
+    (never prefill) as slots retire — outputs stay exact."""
+    cfg, params = _ctx()["B"]
+    a = ContinuousBatchingEngine(cfg, params, n_slots=4, max_len=MAX_LEN,
+                                 max_prefill_per_tick=4)
+    rng = np.random.default_rng(11)
+    want = {}
+    for i in range(4):
+        prompt = _prompt(rng, "B", int(rng.choice([4, 7])))
+        a.submit(prompt, 6, req_id=i)
+        want[i] = _reference("B", prompt, 6)
+    for _ in range(3):
+        a.step()              # all 4 prefilled + ≥1 decoded
+    a.drain()
+    pairs = a.handoff()
+    assert len(pairs) == 4 and all(s.generated for s, _ in pairs)
+
+    b = ContinuousBatchingEngine(cfg, params, n_slots=2, max_len=MAX_LEN)
+    b.adopt(pairs)
+    assert b.sched.stats["adopted"] == 2          # two placed immediately
+    assert len(b.sched.resume_queue) == 2         # two parked
+    out = b.run()
+    b.flush()
+    assert {i: out[i] for i in want} == want
+    assert b.sched.stats["adopted"] == 4          # parked ones resumed
+    assert b.sched.stats["prefills"] == 0         # nobody re-prefilled
+
+
+def test_parked_eos_sequence_stops_at_eos():
+    """Regression: a handed-off EOS-carrying sequence that parks in the
+    resume queue must keep the engine in eager (per-tick sync) mode —
+    otherwise its tokens stay -1 placeholders, EOS is never observed,
+    and it decodes past the stop token."""
+    cfg, params = _ctx()["B"]
+    rng = np.random.default_rng(13)
+    prompts = [_prompt(rng, "B", 5) for _ in range(3)]
+    refs = [_reference("B", p, 8) for p in prompts]
+    # give request 0 an eos it will actually emit mid-stream
+    eos = refs[0][4]
+    stop_at = refs[0].index(eos) + 1
+    assert 2 < stop_at < 8       # terminates early, after the handoff
+
+    a = ContinuousBatchingEngine(cfg, params, n_slots=3, max_len=MAX_LEN,
+                                 max_prefill_per_tick=3)
+    for i, p in enumerate(prompts):
+        a.submit(p, 8, req_id=i, eos_id=eos if i == 0 else None)
+    for _ in range(2):
+        a.step()                 # everyone prefilled + one decode
+    a.drain()
+    pairs = a.handoff()
+    pairs.sort(key=lambda pr: pr[0].eos_id is not None)   # eos seq parks
+
+    b = ContinuousBatchingEngine(cfg, params, n_slots=2, max_len=MAX_LEN)
+    b.adopt(pairs)
+    assert [s.eos_id for s in b.sched.resume_queue] == [eos]
+    out = b.run()
+    assert out[0] == refs[0][:stop_at]        # stopped at EOS
+    assert out[1] == refs[1] and out[2] == refs[2]
+
+
+# ------------------------------------------------------------ model manager
+def test_model_manager_tier_transitions_and_lru():
+    hw = HardwareProfile(host_mem_models=2)
+    cs = ClusterState(1, hw)
+    mm = cs.nodes[0]
+    for t, model in enumerate(["a", "b", "c"]):
+        cs.occupy(0, model, float(t))
+        assert not mm.gpu_free                    # capacity 1
+        cs.release(0, float(t) + 0.5, model)      # GPU → host fallback
+    # host LRU capacity 2: "a" was evicted when "c" fell back
+    assert mm.host_cache.models() == {"b", "c"}
+    assert [e[0] for e in mm.host_cache.evictions] == ["a"]
+    assert cs.gpu_seconds == 1.5
+    # promotion pulls a model back out of the host tier
+    assert mm.promote("b", 3.0) is not None
+    assert mm.gpu_model == "b" and "b" not in mm.host_cache
+
+
+def test_model_manager_default_factory_not_shared():
+    """Regression: per-instance host caches (dataclasses default_factory,
+    not __post_init__ None-patching) must not alias."""
+    m1, m2 = ModelManager(0), ModelManager(1)
+    m1.host_cache.touch("x", 0.0)
+    assert "x" not in m2.host_cache
+    assert m1.gpu is not m2.gpu
+
+
+def test_gpu_tier_lru_demotes_to_host():
+    """A node whose GPU tier is full demotes its LRU model to host memory
+    when a new model is admitted (multi-model GPU tier)."""
+    mm = ModelManager(0, gpu_capacity=2)
+    mm.admit("a", 1, 0.0)
+    mm.admit("b", 1, 1.0)
+    demoted = mm.admit("c", 1, 2.0)
+    assert demoted == ["a"]
+    assert set(mm.gpu) == {"b", "c"}
+    assert "a" in mm.host_cache

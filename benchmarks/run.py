@@ -15,6 +15,13 @@ perf trajectory across PRs can be diffed without parsing stdout.  Modules:
   engine   bench_engine         (live JAX us_per_call micro-benches)
   cbatch   bench_continuous_batching (static vs continuous tokens/s)
   mmodel   bench_multimodel     (§5 tiers: cold/warm/hot scale-up latency)
+  autoscale bench_autoscale     (§7.5 closed loop: tail latency + cost
+                                 per policy under bursty traces)
+
+A crashing module does not abort the sweep: the remaining modules still
+run and write their JSON, the failure is recorded in
+``BENCH_<name>.json`` (``"error"`` key), and the process exits non-zero
+so CI fails loudly while still uploading every artifact.
 """
 from __future__ import annotations
 
@@ -22,12 +29,13 @@ import argparse
 import json
 import sys
 import time
+import traceback
 
-from benchmarks import (bench_cache, bench_continuous_batching, bench_engine,
-                        bench_kway, bench_latency, bench_multicast,
-                        bench_multimodel, bench_num_blocks,
-                        bench_optimizations, bench_roofline, bench_trace,
-                        bench_throughput)
+from benchmarks import (bench_autoscale, bench_cache,
+                        bench_continuous_batching, bench_engine, bench_kway,
+                        bench_latency, bench_multicast, bench_multimodel,
+                        bench_num_blocks, bench_optimizations,
+                        bench_roofline, bench_trace, bench_throughput)
 
 MODULES = {
     "cache": bench_cache, "multicast": bench_multicast,
@@ -36,6 +44,7 @@ MODULES = {
     "optimizations": bench_optimizations, "num_blocks": bench_num_blocks,
     "roofline": bench_roofline, "engine": bench_engine,
     "cbatch": bench_continuous_batching, "mmodel": bench_multimodel,
+    "autoscale": bench_autoscale,
 }
 
 
@@ -57,17 +66,29 @@ def main() -> None:
         rows.append({"name": name, "value": value, "derived": derived})
 
     t0 = time.time()
+    failed = []
     for name in names:
         mod = MODULES[name]
         t1 = time.time()
         rows = []
-        mod.run(report)
+        error = None
+        try:
+            mod.run(report)
+        except Exception:                       # noqa: BLE001 — keep going
+            error = traceback.format_exc()
+            print(f"_meta/{name}/CRASHED,nan,", flush=True)
+            print(error, file=sys.stderr)
+            failed.append(name)
         seconds = time.time() - t1
         report(f"_meta/{name}/seconds", seconds, "")
+        summary = {"benchmark": name, "seconds": seconds, "rows": rows}
+        if error is not None:
+            summary["error"] = error
         with open(f"{args.json_dir}/BENCH_{name}.json", "w") as f:
-            json.dump({"benchmark": name, "seconds": seconds,
-                       "rows": rows}, f, indent=1)
+            json.dump(summary, f, indent=1)
     print(f"_meta/total_seconds,{time.time() - t0:.6g},")
+    if failed:
+        raise SystemExit(f"benchmark modules crashed: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

@@ -8,6 +8,8 @@ calibrated simulator.
   PYTHONPATH=src python -m repro.launch.serve --sim --model llama2-13b \
       --nodes 12 --rps 50
   PYTHONPATH=src python -m repro.launch.serve --live --nodes 8 --requests 12
+  PYTHONPATH=src python -m repro.launch.serve --autoscale --nodes 6 \
+      --requests 16
 """
 from __future__ import annotations
 
@@ -20,11 +22,12 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.models import init_params, make_batch
 from repro.serving import ContinuousBatchingEngine, InferenceEngine
+from repro.serving.autoscaler import Autoscaler, AutoscalerConfig
 from repro.serving.baselines import POLICIES
 from repro.serving.cluster import LiveCluster
 from repro.serving.simulator import Simulator
 from repro.serving.tiers import HardwareProfile
-from repro.serving.workload import constant_stress
+from repro.serving.workload import Request, constant_stress
 
 
 def mixed_trace(n: int, prompt: int, tokens: int, seed: int = 0):
@@ -124,6 +127,42 @@ def run_live(args) -> None:
           f"B={sorted(lc.serving['B'].locals_)}")
 
 
+def run_autoscale(args) -> None:
+    """Closed loop on the live runtime: the model starts host-warm with
+    ZERO replicas; a bursty trace arrives and the autoscaler does the
+    rest — scale-up via k-way multicast from the warm copy, serving
+    through EWL pipelines and mode-switched replicas, then keep-alive
+    scale-down back to the host tier when the burst passes."""
+    cfg = reduced(get_config(args.arch), d_model=args.d_model, vocab=2048)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    max_len = max(4, args.prompt // 4) + args.tokens + 8
+    lc = LiveCluster(n_nodes=args.nodes, n_slots=args.slots, max_len=max_len)
+    lc.register("m", cfg, params, n_blocks=4, warm_nodes=[0])
+
+    rng = np.random.default_rng(2)
+    trace = [Request(i, "m", 0.005 + 0.002 * i,
+                     max(4, args.prompt // 4), args.tokens)
+             for i in range(args.requests)]
+    asc = Autoscaler(AutoscalerConfig(cooldown_up=0.05, cooldown_down=0.02,
+                                      keepalive=0.15, min_replicas=0,
+                                      max_k=2))
+    t0 = time.time()
+    log = lc.replay(trace, autoscaler=asc, tick_seconds=0.002,
+                    tail_seconds=0.5,
+                    prompt_fn=lambda r: list(
+                        rng.integers(0, cfg.vocab_size, size=r.prompt_len)))
+    dt = time.time() - t0
+    s = log.summary()
+    print(f"closed-loop replay: {int(s['n_finished'])}/{len(trace)} "
+          f"requests in {dt:.2f}s wall; sim-clock TTFT "
+          f"p50={s['ttft_p50']*1e3:.1f}ms p99={s['ttft_p99']*1e3:.1f}ms; "
+          f"gpu_seconds={s['gpu_seconds']:.3f}")
+    for e in log.scale_events:
+        print(f"  t={e.t*1e3:7.1f}ms {e.kind:6s} {e.detail}")
+    print(f"replicas now: {sorted(lc.serving['m'].locals_)} "
+          f"(host-warm fallback on {lc._host_payload_nodes('m')})")
+
+
 def run_sim(args) -> None:
     hw = HardwareProfile()
     reqs = constant_stress(args.rps, args.duration, model=args.model,
@@ -145,6 +184,9 @@ def main() -> None:
                     help="continuous-batching engine on a mixed-length trace")
     ap.add_argument("--live", action="store_true",
                     help="two-model tiered live cluster (scale + serve)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="closed-loop trace replay: autoscaler drives "
+                         "scale-up/EWL/scale-down on the live cluster")
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--d-model", type=int, default=256)
     ap.add_argument("--requests", type=int, default=8)
@@ -158,6 +200,8 @@ def main() -> None:
     args = ap.parse_args()
     if args.sim:
         run_sim(args)
+    elif args.autoscale:
+        run_autoscale(args)
     elif args.live:
         run_live(args)
     elif args.continuous:

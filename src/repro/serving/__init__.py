@@ -1,7 +1,11 @@
+from repro.serving.autoscaler import (Autoscaler, AutoscalerConfig,
+                                      LoadSignals, ScaleDown, ScaleUp)
 from repro.serving.baselines import (POLICIES, FaaSNetPolicy, IdealPolicy,
                                      LambdaScalePolicy, NCCLPolicy,
                                      ServerlessLLMPolicy)
 from repro.serving.cluster import (LiveCluster, ModelDeployment, ScaleReport)
+from repro.serving.metrics import (MetricsLog, RequestMetric, ScaleEvent,
+                                   percentile)
 from repro.serving.engine import ContinuousBatchingEngine, InferenceEngine
 from repro.serving.scheduler import (DEFAULT_SLOTS, Scheduler, SeqState,
                                      SlotState, instance_slot_count)
@@ -12,6 +16,8 @@ from repro.serving.workload import (Request, burstgpt_like, constant_stress,
                                     multi_model_trace)
 
 __all__ = [
+    "Autoscaler", "AutoscalerConfig", "LoadSignals", "ScaleUp", "ScaleDown",
+    "MetricsLog", "RequestMetric", "ScaleEvent", "percentile",
     "InferenceEngine", "ContinuousBatchingEngine", "Scheduler", "SeqState",
     "SlotState", "DEFAULT_SLOTS", "instance_slot_count",
     "Simulator", "SimResult", "SimModel",

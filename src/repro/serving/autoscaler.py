@@ -1,0 +1,172 @@
+"""Reactive autoscaler: the closed loop driving λScale's mechanisms (§6).
+
+PRs 1–2 built the mechanisms — k-way multicast scale-up, execute-while-
+load pipelines, mode switching, tiered scale-down — but exposed them only
+through manual ``LiveCluster.scale()`` calls.  This module is the policy
+that drives them: a reactive controller watching per-model load signals
+(queue depth, slot utilization, recent TTFT against an SLO) and emitting
+scale actions under cooldown and keep-alive rules.
+
+The same ``Autoscaler`` instance drives BOTH runtimes:
+
+* ``LiveCluster.replay(trace, autoscaler=...)`` — the live JAX runtime on
+  its simulated clock (real tokens, small configs);
+* ``Simulator`` — the calibrated discrete-event simulator, where the
+  autoscaler sizes the fleet and each ``baselines.py`` policy decides the
+  *mechanism* (k-way multicast vs serial loading) used to provision it.
+
+The controller is deliberately runtime-agnostic: it sees ``LoadSignals``
+and returns ``ScaleUp``/``ScaleDown`` actions; it never touches engines,
+instances, or node state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.serving.metrics import percentile
+
+DEFAULT_MAX_K = 4
+
+
+# ----------------------------------------------------------------- signals
+@dataclasses.dataclass
+class LoadSignals:
+    """One model's load as observed by the runtime at decision time."""
+    model: str
+    queue_depth: int                 # requests with no slot anywhere
+    slots_total: int                 # slots across live instances
+    slots_busy: int                  # of which occupied
+    nodes_busy: int                  # nodes committed (serving + scaling)
+    slots_per_instance: int
+    scaling_in_flight: bool = False  # a scale plan is mid-multicast
+    n_replicas: int = 0              # standalone local replicas
+    recent_ttft: Sequence[float] = ()    # TTFTs seen since last decision
+    idle_nodes: Sequence[Tuple[int, float]] = ()  # (node, idle seconds)
+
+    @property
+    def utilization(self) -> float:
+        return self.slots_busy / self.slots_total if self.slots_total \
+            else float("inf" if self.queue_depth else 0)
+
+
+# ----------------------------------------------------------------- actions
+@dataclasses.dataclass(frozen=True)
+class ScaleUp:
+    model: str
+    n_new: int
+    k: int                           # multicast fan-out hint
+    reason: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleDown:
+    model: str
+    nodes: Tuple[int, ...]
+    reason: str = ""
+
+
+Action = Union[ScaleUp, ScaleDown]
+
+
+# ------------------------------------------------------------------ config
+@dataclasses.dataclass(frozen=True)
+class AutoscalerConfig:
+    """Trigger thresholds and pacing rules.
+
+    The defaults reproduce the simulator's original reactive sizing
+    (scale when a queue exists, retire after ``keepalive`` idle seconds);
+    the utilization/SLO triggers and cooldowns are opt-in knobs the
+    closed-loop benchmark and live replay exercise.
+    """
+    headroom: int = 0                # extra nodes beyond measured demand
+    util_high: float = math.inf      # slot utilization triggering +1 node
+    ttft_slo: Optional[float] = None  # p95 TTFT target (seconds)
+    cooldown_up: float = 0.0         # min seconds between scale-ups
+    cooldown_down: float = 0.0       # min seconds between scale-downs
+    keepalive: float = 5.0           # idle seconds before release (§2.3)
+    max_k: int = DEFAULT_MAX_K       # multicast fan-out cap (§4.2)
+    min_replicas: int = 0            # floor kept through idle periods
+    max_nodes: Optional[int] = None  # per-model fleet cap
+
+
+# -------------------------------------------------------------- controller
+class Autoscaler:
+    """Reactive closed-loop controller (queue / utilization / SLO)."""
+
+    def __init__(self, config: Optional[AutoscalerConfig] = None):
+        self.config = config or AutoscalerConfig()
+        self._last_up: Dict[str, float] = {}
+        self._last_down: Dict[str, float] = {}
+        self.decisions: List[Tuple[float, Action]] = []
+
+    # ------------------------------------------------------------- policy
+    def desired_new_nodes(self, sig: LoadSignals) -> Tuple[int, str]:
+        """How many nodes the triggers ask for beyond the committed fleet.
+
+        Queue trigger: enough instances to hold every queued request.
+        Utilization trigger: one node of headroom when the slot pool is
+        nearly saturated (requests are about to queue).
+        TTFT-SLO trigger: one extra node while the recent p95 violates
+        the target (tail pressure the queue depth alone may not show).
+        """
+        c = self.config
+        demand = math.ceil(sig.queue_depth / sig.slots_per_instance)
+        base = max(demand + c.headroom - sig.nodes_busy, 0)
+        reason = "queue" if base > 0 else ""
+        # the utilization / SLO boosts are INCREMENTAL headroom on top of
+        # whatever fleet is already committed
+        boost = 0
+        if sig.slots_total > 0 and sig.utilization >= c.util_high:
+            boost += 1
+            reason = (reason + "+util").lstrip("+")
+        if c.ttft_slo is not None and sig.recent_ttft and \
+                percentile(sig.recent_ttft, 95) > c.ttft_slo:
+            boost += 1
+            reason = (reason + "+slo").lstrip("+")
+        n_new = base + boost
+        if c.max_nodes is not None:
+            n_new = min(n_new, c.max_nodes - sig.nodes_busy)
+        return max(n_new, 0), reason
+
+    def decide(self, now: float,
+               signals: Sequence[LoadSignals]) -> List[Action]:
+        """One control-loop iteration: scale actions for each model."""
+        c = self.config
+        actions: List[Action] = []
+        for sig in signals:
+            m = sig.model
+            n_new, reason = self.desired_new_nodes(sig)
+            if n_new > 0 and not sig.scaling_in_flight:
+                # cold start bypasses the cooldown: a model with zero
+                # capacity and waiting requests cannot afford to pace
+                cold = sig.slots_total == 0 and sig.queue_depth > 0
+                if cold or now - self._last_up.get(m, -math.inf) \
+                        >= c.cooldown_up:
+                    self._last_up[m] = now
+                    actions.append(ScaleUp(m, n_new, c.max_k, reason))
+                continue
+            # scale-down: idle past keep-alive, nothing queued, no scale
+            # mid-flight (its nodes are about to become replicas), and
+            # outside both cooldown windows
+            if sig.queue_depth > 0 or sig.scaling_in_flight:
+                continue
+            if now - self._last_up.get(m, -math.inf) < c.cooldown_down:
+                continue
+            if now - self._last_down.get(m, -math.inf) < c.cooldown_down:
+                continue
+            idle = [nd for nd, idle_s in sig.idle_nodes
+                    if idle_s >= c.keepalive]
+            n_down = min(len(idle), sig.n_replicas - c.min_replicas)
+            if n_down > 0:
+                self._last_down[m] = now
+                actions.append(ScaleDown(m, tuple(idle[:n_down]),
+                                         "keepalive"))
+        self.decisions.extend((now, a) for a in actions)
+        return actions
+
+    # --------------------------------------------------------- keep-alive
+    def should_retire(self, now: float, last_active: float) -> bool:
+        """Instance-level keep-alive check (the simulator's GC rule)."""
+        return now - last_active > self.config.keepalive

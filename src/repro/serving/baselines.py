@@ -1,5 +1,11 @@
 """Scaling policies: λScale and the paper's three baselines (§7.1).
 
+A policy is the provisioning MECHANISM half of the closed loop: the
+shared ``Autoscaler`` (``serving/autoscaler.py``) decides WHEN and HOW
+MUCH to scale from load signals, then the simulator asks the policy to
+provision that many nodes — so comparing policies under one controller
+isolates exactly the scaling mechanism the paper compares.
+
 Each policy's ``provision(cluster, model, sim_model, n_new, now)`` occupies
 GPUs and returns instance specs:
   {"nodes": [...], "kind": "local"|"pipeline", "ready": t,

@@ -27,6 +27,7 @@ to the static reference engine (tested).
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Set, Tuple
 
 import jax.numpy as jnp
@@ -39,8 +40,12 @@ from repro.core.ewl import ScalePlan, plan_scale
 from repro.core.partial_exec import (apply_layer_range, embed_from_flat,
                                      head_from_flat, layer_range_of_units)
 from repro.core.pipeline import ExecutionPipeline
+from repro.serving.autoscaler import Autoscaler, LoadSignals, ScaleDown, \
+    ScaleUp
 from repro.serving.engine import ContinuousBatchingEngine
+from repro.serving.metrics import MetricsLog
 from repro.serving.tiers import ClusterState, HardwareProfile, ModelShard
+from repro.serving.workload import Request
 
 if TYPE_CHECKING:                                    # pragma: no cover
     # runtime import happens lazily in _on_scale_progress:
@@ -88,8 +93,9 @@ class ModelServing:
     locals_: Dict[int, ContinuousBatchingEngine] = dataclasses.field(
         default_factory=dict)
     pipes: List[PipeInstance] = dataclasses.field(default_factory=list)
-    pending: List[Tuple[int, List[int], int]] = dataclasses.field(
-        default_factory=list)        # (req_id, prompt, max_new) pre-capacity
+    # (req_id, prompt, max_new, t_arrive) waiting for capacity
+    pending: List[Tuple[int, List[int], int, Optional[float]]] = \
+        dataclasses.field(default_factory=list)
 
     def live_pipes(self) -> List[PipeInstance]:
         return [p for p in self.pipes if not p.drained]
@@ -156,6 +162,11 @@ class LiveCluster:
         self.serving: Dict[str, ModelServing] = {}
         self.scales: Dict[str, ActiveScale] = {}
         self._next_id = 0
+        # (model, node) -> simulated time its local engine may serve:
+        # a source acquired from host/SSD exists immediately (the buffers
+        # are materialized in-process) but is not READY until the priced
+        # fetch completes — the replay loop routes around it until then
+        self._ready_at: Dict[Tuple[str, int], float] = {}
 
     # -------------------------------------------------------- registration
     def register(self, name: str, cfg: ModelConfig, params, *,
@@ -261,6 +272,7 @@ class LiveCluster:
             t0 = t_req + self.hw.fetch_seconds(dep.nbytes, tier)
             sources, fresh_source = [nd], nd
             self._ensure_local(model, nd)
+            self._ready_at[(model, nd)] = t0
         k = max(1, min(k or DEFAULT_MAX_K, len(sources), DEFAULT_MAX_K))
         srcs = sources[:k]
         dests = [nd for nd in self.state.free_nodes()
@@ -286,15 +298,30 @@ class LiveCluster:
                            min(first_serve) if first_serve else t0,
                            t_complete)
 
+    def _host_payload_nodes(self, model: str) -> List[int]:
+        """Nodes whose host cache holds the model's FULL packed payload —
+        the only host-tier warmth the live cluster can actually serve
+        from (a payload-less LRU entry is simulator-style metadata)."""
+        dep = self.models[model]
+        return [n.node_id for n in self.nodes
+                if (s := n.host_cache.get(model)) is not None
+                and len(s.buffers) == dep.n_blocks]
+
     def _acquire_source(self, model: str) -> Tuple[int, str]:
         """§5 locality-driven source acquisition for a model with no
         GPU-resident replica; materializes the replica (clock pricing is
-        the caller's job — tiers differ only in bandwidth)."""
-        warm = self.state.warm_nodes(model)
+        the caller's job — tiers differ only in bandwidth).  Payload-less
+        host-cache entries are treated as cold: promotion would yield a
+        shard that can never become ``complete``, so those nodes take a
+        real fetch path (remote host copy or SSD) instead."""
+        dep = self.models[model]
+        payload_nodes = self._host_payload_nodes(model)
+        warm = [nd for nd in self.state.warm_nodes(model)
+                if nd in payload_nodes]
         if warm:
             nd = warm[0]
-            dep = self.models[model]
             shard = self.nodes[nd].promote(model, self.clock)
+            assert shard is not None and shard.buffers
             for b, buf in list(shard.buffers.items()):
                 shard.flat.update(self._unpack(dep, b, buf))
             shard.n_blocks = dep.n_blocks
@@ -303,9 +330,9 @@ class LiveCluster:
         if not free:
             raise RuntimeError(f"{model}: no free node for a source")
         nd = free[0]
-        # one-sided read of a remote node's host copy beats SSD (§5)
-        tier = ("remote" if any(model in n.host_cache for n in self.nodes)
-                else "ssd")
+        # one-sided read of a remote node's host copy beats SSD (§5) —
+        # but only a payload-carrying copy counts
+        tier = "remote" if payload_nodes else "ssd"
         self._load_full(model, nd)
         return nd, tier
 
@@ -335,30 +362,50 @@ class LiveCluster:
             self.state.release(nd, self.clock, model)
 
     # ------------------------------------------------------------- control
+    def _advance_one(self, model: str) -> None:
+        """Advance ``model``'s active multicast one schedule step:
+        physically copy block buffers, spawn execution pipelines as they
+        become ready, mode-switch nodes as they complete (drain →
+        handoff → local DECODE resume)."""
+        sc = self.scales[model]
+        dep = self.models[model]
+        for src, dst, blk in sc.plan.schedule.steps[sc.steps_done]:
+            rs, rd = sc.node_map[src], sc.node_map[dst]
+            assert self.nodes[rs].has_block(model, blk), (src, blk)
+            buf = self.nodes[rs].gpu_shard(model).buffers[blk]
+            self.nodes[rd].receive(model, blk, buf,
+                                   self._unpack(dep, blk, buf))
+        sc.steps_done += 1
+        self.clock = max(self.clock, sc.now)
+        self._on_scale_progress(sc)
+        if sc.done:
+            self._finish_scale(sc)
+            del self.scales[model]
+
     def step(self) -> bool:
-        """Advance every active multicast one schedule step (returns
-        False when none advanced): physically copy block buffers, spawn
-        execution pipelines as they become ready, mode-switch nodes as
-        they complete (drain → handoff → local DECODE resume)."""
+        """Advance every active multicast one schedule step; returns
+        False when none advanced."""
         advanced = False
         for model in list(self.scales):
-            sc = self.scales[model]
-            if sc.done:
-                continue
-            dep = self.models[model]
-            for src, dst, blk in sc.plan.schedule.steps[sc.steps_done]:
-                rs, rd = sc.node_map[src], sc.node_map[dst]
-                assert self.nodes[rs].has_block(model, blk), (src, blk)
-                buf = self.nodes[rs].gpu_shard(model).buffers[blk]
-                self.nodes[rd].receive(model, blk, buf,
-                                       self._unpack(dep, blk, buf))
-            sc.steps_done += 1
-            self.clock = max(self.clock, sc.now)
-            advanced = True
-            self._on_scale_progress(sc)
-            if sc.done:
-                self._finish_scale(sc)
-                del self.scales[model]
+            if not self.scales[model].done:
+                self._advance_one(model)
+                advanced = True
+        return advanced
+
+    def step_due(self, now: float) -> bool:
+        """Event-driven variant for trace replay: advance each active
+        multicast only through the schedule steps whose simulated time
+        has arrived (step s of a scale completes at ``t0 + s·step_time``).
+        Returns False when nothing was due."""
+        advanced = False
+        progressed = True
+        while progressed:
+            progressed = False
+            for model in list(self.scales):
+                sc = self.scales[model]
+                if not sc.done and sc.time_at(sc.steps_done + 1) <= now:
+                    self._advance_one(model)
+                    advanced = progressed = True
         return advanced
 
     def run_to_completion(self) -> None:
@@ -425,20 +472,24 @@ class LiveCluster:
     # ------------------------------------------------------------- serving
     def submit(self, model: str, prompt: Sequence[int],
                max_new_tokens: int, *,
-               req_id: Optional[int] = None) -> int:
+               req_id: Optional[int] = None,
+               t_arrive: Optional[float] = None) -> int:
         """Admit a request for ``model`` into a scheduler-driven serving
         instance (ready pipelines preferred over local replicas during a
         scale-out — offload spikes to the scaling nodes); queued until
-        capacity exists when the model has no instance yet."""
+        capacity exists when the model has no instance yet.
+        ``t_arrive`` (simulated-clock arrival) rides on the sequence for
+        the metrics layer and survives handoffs."""
         if req_id is None:
             req_id = self._next_id
         self._next_id = max(self._next_id, req_id) + 1
         inst = self._route(model)
         if inst is None:
             self.serving[model].pending.append(
-                (req_id, list(prompt), max_new_tokens))
+                (req_id, list(prompt), max_new_tokens, t_arrive))
         else:
-            inst.submit(prompt, max_new_tokens, req_id=req_id)
+            inst.submit(prompt, max_new_tokens, req_id=req_id,
+                        t_arrive=t_arrive)
         return req_id
 
     def _route(self, model: str):
@@ -454,7 +505,8 @@ class LiveCluster:
         if room:
             return min(room)[2].engine
         locs = [(eng.sched.in_flight + eng.sched.pending, nd, eng)
-                for nd, eng in sv.locals_.items()]
+                for nd, eng in sv.locals_.items()
+                if self._ready_at.get((model, nd), 0.0) <= self.clock]
         room = [c for c in locs if c[0] < self.n_slots]
         if room:
             return min(room)[2]
@@ -462,6 +514,13 @@ class LiveCluster:
             return None
         if locs:
             return min(locs)[2]
+        # every local is still inside its priced fetch window (no scale
+        # plan to wait on): queue on the least-loaded one anyway rather
+        # than strand the request
+        locs_all = [(eng.sched.in_flight + eng.sched.pending, nd, eng)
+                    for nd, eng in sv.locals_.items()]
+        if locs_all:
+            return min(locs_all)[2]
         return min(pipes)[2].engine if pipes else None
 
     def tick(self) -> bool:
@@ -472,12 +531,12 @@ class LiveCluster:
         for model, sv in self.serving.items():
             if sv.pending:
                 left = []
-                for rid, prompt, n in sv.pending:
+                for rid, prompt, n, t_arr in sv.pending:
                     inst = self._route(model)
                     if inst is None:
-                        left.append((rid, prompt, n))
+                        left.append((rid, prompt, n, t_arr))
                     else:
-                        inst.submit(prompt, n, req_id=rid)
+                        inst.submit(prompt, n, req_id=rid, t_arrive=t_arr)
                 did = did or len(left) < len(sv.pending)
                 sv.pending = left
             for pinst in sv.live_pipes():
@@ -499,6 +558,205 @@ class LiveCluster:
             raise RuntimeError(
                 f"requests pending with no serving instance: {stuck} "
                 f"(scale the model or register it with hot_nodes)")
+
+    # --------------------------------------------------------- trace replay
+    def _schedulers(self, model: str):
+        sv = self.serving[model]
+        for eng in sv.locals_.values():
+            yield eng.sched
+        for pinst in sv.pipes:
+            yield pinst.engine.sched
+
+    def _load_signals(self, now: float,
+                      last_busy: Dict[Tuple[str, int], float],
+                      recent_ttft: Dict[str, List[float]]
+                      ) -> List[LoadSignals]:
+        """Per-model load as the autoscaler vocabulary (queue depth, slot
+        utilization, committed nodes, idle replicas)."""
+        signals = []
+        for model, sv in self.serving.items():
+            queued = len(sv.pending)
+            slots_total = slots_busy = 0
+            for pinst in sv.live_pipes():
+                queued += pinst.engine.sched.pending
+                slots_total += pinst.engine.n_slots
+                slots_busy += pinst.engine.sched.in_flight
+            for nd, eng in sv.locals_.items():
+                queued += eng.sched.pending
+                slots_total += eng.n_slots
+                slots_busy += eng.sched.in_flight
+                # a replica's keep-alive window starts when it is first
+                # observed (fresh replicas are not instantly "idle")
+                if not eng.sched.done:
+                    last_busy[(model, nd)] = now
+                else:
+                    last_busy.setdefault((model, nd), now)
+            busy = set(sv.locals_)
+            sc = self.scales.get(model)
+            if sc is not None:
+                busy |= set(sc.node_map.values())
+            idle = [(nd, now - last_busy[(model, nd)])
+                    for nd in sv.locals_]
+            signals.append(LoadSignals(
+                model, queued, slots_total, slots_busy, len(busy),
+                self.n_slots, scaling_in_flight=sc is not None,
+                n_replicas=len(sv.locals_),
+                recent_ttft=tuple(recent_ttft.get(model, ())),
+                idle_nodes=idle))
+            recent_ttft[model] = []
+        return signals
+
+    def _apply_actions(self, actions: Sequence, now: float,
+                       log: MetricsLog,
+                       last_busy: Dict[Tuple[str, int], float]) -> None:
+        for act in actions:
+            if isinstance(act, ScaleUp):
+                # no free node means nothing to add AND no node to
+                # acquire a source on — skip entirely (logging a +0
+                # event would inflate the scale_ups metric)
+                if act.model in self.scales \
+                        or not self.state.free_nodes():
+                    continue
+                rep = self.scale(act.model, act.n_new, k=act.k)
+                log.on_scale(now, "up", act.model,
+                             f"{act.reason}: +{len(rep.dests)} nodes "
+                             f"k={rep.k} tier={rep.source_tier}")
+            elif isinstance(act, ScaleDown):
+                sv = self.serving[act.model]
+                # only idle standalone replicas release (their scheduler
+                # is empty, so no drain/handoff is needed)
+                nodes = [nd for nd in act.nodes
+                         if nd in sv.locals_ and sv.locals_[nd].sched.done]
+                if nodes and act.model not in self.scales:
+                    self.scale_down(act.model, nodes)
+                    for nd in nodes:
+                        # a later re-scale-up of this node must start a
+                        # fresh keep-alive window, not inherit this one
+                        last_busy.pop((act.model, nd), None)
+                    log.on_scale(now, "down", act.model,
+                                 f"{act.reason}: -{len(nodes)} nodes "
+                                 f"→ host tier")
+
+    def _observe(self, now: float, log: MetricsLog,
+                 recent_ttft: Dict[str, List[float]],
+                 seen_first: set, seen_done: set,
+                 harvested: Dict[object, int]) -> None:
+        """Harvest first-token / completion events at tick granularity.
+
+        ``harvested`` counts per-scheduler finished entries already
+        recorded: ``Scheduler.finished`` is append-only, so only the
+        islice tail is new — the scan stays O(live + new) per tick
+        instead of O(all finished ever)."""
+        for model in self.serving:
+            for sched in self._schedulers(model):
+                live = [s for s in sched.slots if s is not None]
+                live += sched.resume_queue
+                for seq in live:
+                    if seq.generated and seq.req_id not in seen_first \
+                            and seq.req_id in log.requests:
+                        seen_first.add(seq.req_id)
+                        log.on_first_token(seq.req_id, now)
+                        recent_ttft.setdefault(model, []).append(
+                            now - log.requests[seq.req_id].t_arrive)
+                start = harvested.get(sched, 0)
+                if len(sched.finished) == start:
+                    continue
+                harvested[sched] = len(sched.finished)
+                for rid, seq in itertools.islice(sched.finished.items(),
+                                                 start, None):
+                    if rid in seen_done or rid not in log.requests:
+                        continue
+                    if rid not in seen_first:
+                        seen_first.add(rid)
+                        log.on_first_token(rid, now)
+                        recent_ttft.setdefault(model, []).append(
+                            now - log.requests[rid].t_arrive)
+                    seen_done.add(rid)
+                    log.on_finish(rid, now, len(seq.generated))
+
+    def replay(self, trace: Sequence[Request], *, autoscaler: Autoscaler,
+               tick_seconds: float = 0.002,
+               autoscale_dt: Optional[float] = None,
+               tail_seconds: float = 0.0,
+               metrics: Optional[MetricsLog] = None,
+               prompt_fn=None, max_ticks: int = 200_000) -> MetricsLog:
+        """Closed-loop trace replay on the simulated clock (§7.5 shape).
+
+        Replays a workload trace end to end with the ``Autoscaler`` in
+        charge: arrivals are submitted at their trace times, the
+        controller reads load signals every ``autoscale_dt`` simulated
+        seconds and drives ``scale()`` (k-way multicast from the best
+        tier) / ``scale_down()`` (release to the host-memory tier), and
+        multicast schedule steps execute exactly when their simulated
+        time arrives (``step_due``).  Each scheduler tick advances every
+        live sequence one token and costs ``tick_seconds`` on the clock.
+
+        Requests carry real token prompts (``prompt_fn(request)`` or a
+        deterministic per-request draw) through the real engines; the
+        returned ``MetricsLog`` holds per-request TTFT/E2E on the
+        simulated clock plus the scale-event audit trail and GPU-seconds.
+
+        ``tail_seconds`` keeps the control loop running that long after
+        the last request finishes, so keep-alive scale-down (release to
+        the host-memory tier) is observable within the replay.
+        """
+        log = metrics or MetricsLog()
+        dt_ctrl = autoscale_dt if autoscale_dt is not None \
+            else 5 * tick_seconds
+        arrivals = sorted(trace, key=lambda r: r.t_arrive)
+        for r in arrivals:
+            assert r.model in self.models, f"unregistered model {r.model}"
+
+        def default_prompt(req: Request):
+            vocab = self.models[req.model].cfg.vocab_size
+            rng = np.random.default_rng(10_000 + req.req_id)
+            return list(map(int, rng.integers(0, vocab,
+                                              size=max(1, req.prompt_len))))
+
+        prompt_fn = prompt_fn or default_prompt
+        seen_first: set = set()
+        seen_done: set = set()
+        harvested: Dict[object, int] = {}
+        last_busy: Dict[Tuple[str, int], float] = {}
+        recent_ttft: Dict[str, List[float]] = {}
+        idx = 0
+        now = self.clock
+        next_ctrl = now
+        t_drained: Optional[float] = None
+        for _ in range(max_ticks):
+            while idx < len(arrivals) and arrivals[idx].t_arrive <= now:
+                r = arrivals[idx]
+                idx += 1
+                prompt = prompt_fn(r)
+                log.on_arrival(r.req_id, r.model, r.t_arrive, len(prompt))
+                self.submit(r.model, prompt, r.out_tokens, req_id=r.req_id,
+                            t_arrive=r.t_arrive)
+            if now >= next_ctrl:
+                next_ctrl = now + dt_ctrl
+                sigs = self._load_signals(now, last_busy, recent_ttft)
+                self._apply_actions(autoscaler.decide(now, sigs), now, log,
+                                    last_busy)
+            self.step_due(now)
+            self.tick()
+            self._observe(now, log, recent_ttft, seen_first, seen_done,
+                          harvested)
+            if idx >= len(arrivals) and not self.scales \
+                    and len(seen_done) >= len(log.requests):
+                if t_drained is None:
+                    t_drained = now
+                if now >= t_drained + tail_seconds:
+                    break
+            else:
+                t_drained = None
+            now += tick_seconds
+            self.clock = max(self.clock, now)
+        else:
+            raise RuntimeError(
+                f"replay did not converge in {max_ticks} ticks "
+                f"({len(seen_done)}/{len(log.requests)} finished)")
+        self.state.finalize(now)
+        log.gpu_seconds = self.state.gpu_seconds
+        return log
 
     def results(self, model: str) -> Dict[int, List[int]]:
         """req_id → generated tokens, across every instance the request

@@ -152,7 +152,8 @@ class ContinuousBatchingEngine:
     # ------------------------------------------------------------- intake
     def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
                req_id: Optional[int] = None,
-               eos_id: Optional[int] = None) -> int:
+               eos_id: Optional[int] = None,
+               t_arrive: Optional[float] = None) -> int:
         if req_id is None:
             req_id = self._next_id
         self._next_id = max(self._next_id, req_id) + 1
@@ -163,7 +164,7 @@ class ContinuousBatchingEngine:
         if eos_id is not None:
             self._eager = True
         self.sched.submit(SeqState(req_id, list(prompt), max_new_tokens,
-                                   eos_id=eos_id))
+                                   eos_id=eos_id, t_arrive=t_arrive))
         return req_id
 
     # ------------------------------------------------------------ execution
@@ -204,6 +205,12 @@ class ContinuousBatchingEngine:
     def step(self) -> bool:
         """Run one scheduler tick.  Returns False when nothing ran."""
         tick = self.sched.next_tick()
+        # a parked sequence that finished while parked (EOS in its last
+        # handed-off token) is retired by the scheduler without ever
+        # taking a slot — drop the cache it was parked with
+        if self._parked:
+            for rid in [r for r in self._parked if r in self.sched.finished]:
+                del self._parked[rid]
         if tick.idle:
             return False
         # drop back to the sync-free path once no live/queued/parked

@@ -1,0 +1,149 @@
+"""Shared serving metrics (paper §7: TTFT / E2E tails, GPU-seconds cost).
+
+One metrics vocabulary for every runtime in the repo: the discrete-event
+simulator, the live cluster's trace replay, and the autoscale benchmark
+all record per-request timings into a ``MetricsLog`` and summarize them
+the same way, so a λScale-vs-baseline comparison means the same thing
+regardless of which runtime produced it.
+
+Timestamps are *simulated-clock* seconds (the clock both runtimes share);
+the log itself is runtime-agnostic — it never inspects engines or
+instances, callers push observations in:
+
+    log.on_arrival(rid, model, t, prompt_len)   # request enters the system
+    log.on_first_token(rid, t)                  # TTFT endpoint
+    log.on_finish(rid, t, out_tokens)           # E2E endpoint
+    log.on_scale(t, kind, model, detail)        # scale-event audit trail
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile (the paper reports p50/p95/p99 tails)."""
+    ss = sorted(xs)
+    if not ss:
+        return float("nan")
+    i = min(len(ss) - 1, max(0, int(math.ceil(q / 100 * len(ss))) - 1))
+    return ss[i]
+
+
+@dataclasses.dataclass
+class RequestMetric:
+    """Per-request lifecycle timestamps on the simulated clock."""
+    req_id: int
+    model: str
+    t_arrive: float
+    prompt_len: int = 0
+    t_first_token: Optional[float] = None
+    t_finish: Optional[float] = None
+    out_tokens: int = 0
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.t_arrive
+
+    @property
+    def e2e(self) -> Optional[float]:
+        if self.t_finish is None:
+            return None
+        return self.t_finish - self.t_arrive
+
+
+@dataclasses.dataclass
+class ScaleEvent:
+    """One autoscaler/runtime scaling action (the audit trail behind the
+    cost numbers: when capacity appeared and when it was released)."""
+    t: float
+    kind: str               # up | down | switch | decision
+    model: str
+    detail: str = ""
+
+
+class MetricsLog:
+    """Accumulates per-request timings + scale events for one run."""
+
+    def __init__(self) -> None:
+        self.requests: Dict[int, RequestMetric] = {}
+        self.scale_events: List[ScaleEvent] = []
+        self.gpu_seconds: float = 0.0
+
+    # ------------------------------------------------------- observations
+    def on_arrival(self, req_id: int, model: str, t: float,
+                   prompt_len: int = 0) -> None:
+        self.requests[req_id] = RequestMetric(req_id, model, t, prompt_len)
+
+    def on_first_token(self, req_id: int, t: float) -> None:
+        m = self.requests[req_id]
+        if m.t_first_token is None:
+            m.t_first_token = t
+
+    def on_finish(self, req_id: int, t: float, out_tokens: int = 0) -> None:
+        m = self.requests[req_id]
+        if m.t_finish is None:
+            m.t_finish = t
+            m.out_tokens = out_tokens
+
+    def on_scale(self, t: float, kind: str, model: str,
+                 detail: str = "") -> None:
+        self.scale_events.append(ScaleEvent(t, kind, model, detail))
+
+    # ------------------------------------------------------------ queries
+    def ttfts(self) -> List[float]:
+        return [m.ttft for m in self.requests.values()
+                if m.ttft is not None]
+
+    def e2es(self) -> List[float]:
+        return [m.e2e for m in self.requests.values() if m.e2e is not None]
+
+    def ttft_percentile(self, q: float) -> float:
+        return percentile(self.ttfts(), q)
+
+    def e2e_percentile(self, q: float) -> float:
+        return percentile(self.e2es(), q)
+
+    def scale_ups(self) -> List[ScaleEvent]:
+        return [e for e in self.scale_events if e.kind == "up"]
+
+    def scale_downs(self) -> List[ScaleEvent]:
+        return [e for e in self.scale_events if e.kind == "down"]
+
+    @property
+    def unfinished(self) -> List[int]:
+        return [rid for rid, m in self.requests.items()
+                if m.t_finish is None]
+
+    def summary(self) -> Dict[str, float]:
+        """The comparison row every runtime reports (BENCH_autoscale)."""
+        ttfts = self.ttfts()
+        return {
+            "n_requests": len(self.requests),
+            "n_finished": len(self.requests) - len(self.unfinished),
+            "ttft_mean": sum(ttfts) / len(ttfts) if ttfts else float("nan"),
+            "ttft_p50": percentile(ttfts, 50),
+            "ttft_p95": percentile(ttfts, 95),
+            "ttft_p99": percentile(ttfts, 99),
+            "e2e_p50": self.e2e_percentile(50),
+            "e2e_p99": self.e2e_percentile(99),
+            "gpu_seconds": self.gpu_seconds,
+            "scale_ups": float(len(self.scale_ups())),
+            "scale_downs": float(len(self.scale_downs())),
+        }
+
+
+def merge(logs: Sequence[MetricsLog]) -> MetricsLog:
+    """Combine per-shard logs (req_ids must be globally unique)."""
+    out = MetricsLog()
+    for lg in logs:
+        overlap = set(out.requests) & set(lg.requests)
+        assert not overlap, f"duplicate req_ids across logs: {overlap}"
+        out.requests.update(lg.requests)
+        out.scale_events.extend(lg.scale_events)
+        out.gpu_seconds += lg.gpu_seconds
+    out.scale_events.sort(key=lambda e: e.t)
+    return out

@@ -69,8 +69,13 @@ class SeqState:
     max_new_tokens: int
     generated: List[int] = dataclasses.field(default_factory=list)
     eos_id: Optional[int] = None
-    submit_tick: int = 0
+    # set once at FIRST submission and preserved across handoffs — a
+    # never-prefilled sequence re-submitted on the adopting instance
+    # keeps its original queueing delay (TTFT would otherwise under-
+    # report exactly the mode-switch path the paper measures)
+    submit_tick: Optional[int] = None
     first_token_tick: Optional[int] = None
+    t_arrive: Optional[float] = None     # simulated-clock arrival (metrics)
     handoffs: int = 0
 
     @property
@@ -137,7 +142,8 @@ class Scheduler:
     def submit(self, seq: SeqState) -> None:
         if self.draining:
             raise RuntimeError("draining instance admits no new requests")
-        seq.submit_tick = self.tick_count
+        if seq.submit_tick is None:
+            seq.submit_tick = self.tick_count
         self.queue.append(seq)
 
     def adopt(self, seq: SeqState, slot: int) -> None:
@@ -177,8 +183,15 @@ class Scheduler:
         admit: List[Tuple[int, SeqState]] = []
         if not self.draining:
             # handed-off sequences outrank fresh admissions: they already
-            # spent prefill compute elsewhere and resume in DECODE
+            # spent prefill compute elsewhere and resume in DECODE.  One
+            # that finished *while parked* (its last handed-off token was
+            # EOS) retires directly — placing it in DECODE would advance
+            # it one token past its stop token.
             for slot in self.free_slots():
+                while self.resume_queue and self.resume_queue[0].finished:
+                    seq = self.resume_queue.pop(0)
+                    self.finished[seq.req_id] = seq
+                    self.stats["retired"] += 1
                 if not self.resume_queue:
                     break
                 seq = self.resume_queue.pop(0)

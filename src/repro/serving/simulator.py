@@ -10,21 +10,26 @@ collectives execute.
 
 Model: requests are served by *instances* (local replica or λPipe execution
 pipeline) with ``slots`` concurrent requests each.  Decode is HBM-bandwidth
-bound; prefill is FLOPs bound.  A scaling policy (see ``baselines.py``)
-decides how new instances are provisioned and when they become ready; for
-λScale, pipeline instances are created early (execute-while-load) and
-*drain* at mode-switch time while per-node local replicas take over.
+bound; prefill is FLOPs bound.  The closed loop is split the way the paper
+splits it: the shared ``Autoscaler`` (``autoscaler.py``) decides WHEN and
+HOW MUCH to scale from load signals, and a scaling policy
+(``baselines.py``) decides the MECHANISM — how new instances are
+provisioned and when they become ready.  For λScale, pipeline instances
+are created early (execute-while-load) and *drain* at mode-switch time
+while per-node local replicas take over.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 import itertools
-import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs import get_config
 from repro.configs.base import ModelConfig
+from repro.serving.autoscaler import (Autoscaler, AutoscalerConfig,
+                                      LoadSignals, ScaleUp)
+from repro.serving.metrics import MetricsLog, percentile
 from repro.serving.scheduler import (DEFAULT_SLOTS, HOP_LATENCY,
                                      PIPELINE_TOK_OVERHEAD,
                                      instance_slot_count)
@@ -95,13 +100,10 @@ class SimResult:
     gpu_seconds: float
     instance_events: List[Tuple[float, str, str]]
     n_requests: int
+    metrics: MetricsLog = dataclasses.field(default_factory=MetricsLog)
 
     def ttft_percentile(self, q: float) -> float:
-        xs = sorted(t for _, t in self.ttft)
-        if not xs:
-            return float("nan")
-        i = min(len(xs) - 1, max(0, int(math.ceil(q / 100 * len(xs))) - 1))
-        return xs[i]
+        return percentile([t for _, t in self.ttft], q)
 
     def mean_ttft(self) -> float:
         xs = [t for _, t in self.ttft]
@@ -140,7 +142,8 @@ class Simulator:
                  slots_per_instance: int = DEFAULT_SLOTS,
                  keepalive: float = 5.0,
                  autoscale_dt: float = 0.25, scale_headroom: int = 0,
-                 model_configs: Optional[Dict[str, ModelConfig]] = None):
+                 model_configs: Optional[Dict[str, ModelConfig]] = None,
+                 autoscaler: Optional[Autoscaler] = None):
         self.policy = policy
         self.hw = hw
         self.cluster = ClusterState(n_nodes, hw)
@@ -149,6 +152,11 @@ class Simulator:
         self.autoscale_dt = autoscale_dt
         self.scale_headroom = scale_headroom
         self.model_configs = model_configs or {}
+        # the shared closed-loop controller (same class drives the live
+        # cluster's replay); the default config reproduces the reactive
+        # sizing this simulator always used
+        self.autoscaler = autoscaler or Autoscaler(AutoscalerConfig(
+            headroom=scale_headroom, keepalive=keepalive))
         self._models: Dict[str, SimModel] = {}
         self._iid = itertools.count()
 
@@ -174,6 +182,10 @@ class Simulator:
         active: Dict[int, int] = {}
         queues: Dict[str, List[Request]] = {m: [] for m in models}
         result = SimResult([], [], 0.0, [], len(requests))
+        log = result.metrics
+        for r in requests:
+            log.on_arrival(r.req_id, r.model, r.t_arrive, r.prompt_len)
+        recent_ttft: Dict[str, List[float]] = {m: [] for m in models}
 
         evq: List[tuple] = []
         seq = itertools.count()
@@ -224,6 +236,9 @@ class Simulator:
                     inst.last_active = done
                     active[inst.inst_id] = active.get(inst.inst_id, 0) + 1
                     result.ttft.append((req.t_arrive, ttft - req.t_arrive))
+                    log.on_first_token(req.req_id, ttft)
+                    log.on_finish(req.req_id, done, req.out_tokens)
+                    recent_ttft[m].append(ttft - req.t_arrive)
                     push(done, "req_done", (inst.inst_id, req.out_tokens))
                 queues[m] = remaining
 
@@ -243,6 +258,8 @@ class Simulator:
                 instances[iid] = inst
                 result.instance_events.append(
                     (spec["ready"], "up:" + spec["kind"], m))
+                log.on_scale(spec["ready"], "up", m,
+                             f"{spec['kind']}:{len(spec['nodes'])}n")
                 push(spec["ready"], "inst_ready", iid)
                 if spec.get("drain_at") is not None:
                     push(spec["drain_at"], "drain", iid)
@@ -265,21 +282,39 @@ class Simulator:
                 if inst is not None:
                     inst.draining = True
                     result.instance_events.append((now, "switch", inst.model))
+                    log.on_scale(now, "switch", inst.model, inst.kind)
             elif kind == "autoscale":
+                # closed loop: build per-model load signals and let the
+                # shared Autoscaler size the fleet; the policy keeps
+                # deciding the provisioning mechanism
+                signals: List[LoadSignals] = []
                 for m, q in queues.items():
-                    if not q:
+                    # only models with demand pressure signal the
+                    # controller (a queue, or recent TTFTs the SLO
+                    # trigger may act on) — headroom must not provision
+                    # capacity for a model receiving no requests
+                    if not q and not recent_ttft[m]:
                         continue
                     # capacity = occupied nodes (a mid-load λPipe pipeline
                     # counts its member nodes: they are provisioning
                     # capacity, not available headroom)
-                    nodes_busy = {nd for i in instances.values()
-                                  if i.model == m and not i.draining
-                                  for nd in i.nodes}
-                    demand = math.ceil(len(q) / self.slots)
-                    n_new = demand + self.scale_headroom - len(nodes_busy)
-                    if n_new > 0:
-                        provision(m, n_new, now)
-                # scale-in + GC of drained pipelines
+                    live = [i for i in instances.values()
+                            if i.model == m and not i.draining]
+                    nodes_busy = {nd for i in live for nd in i.nodes}
+                    ready = [i for i in live if i.ready_time <= now]
+                    slots_total = sum(len(i.slots) for i in ready)
+                    slots_busy = sum(1 for i in ready
+                                     for end in i.slots if end > now)
+                    signals.append(LoadSignals(
+                        m, len(q), slots_total, slots_busy,
+                        len(nodes_busy), self.slots,
+                        recent_ttft=recent_ttft[m]))
+                    recent_ttft[m] = []
+                for act in self.autoscaler.decide(now, signals):
+                    if isinstance(act, ScaleUp):
+                        provision(act.model, act.n_new, now)
+                # scale-in (keep-alive via the autoscaler) + GC of
+                # drained pipelines
                 for iid in list(instances):
                     inst = instances[iid]
                     idle = (active.get(iid, 0) == 0
@@ -287,7 +322,8 @@ class Simulator:
                     if inst.draining and idle:
                         del instances[iid]      # pipeline fully switched
                         continue
-                    if idle and now - inst.last_active > self.keepalive:
+                    if idle and self.autoscaler.should_retire(
+                            now, inst.last_active):
                         if inst.owns_gpus:
                             for nd in inst.nodes:
                                 if inst.model in self.cluster.nodes[nd].gpu:
@@ -295,9 +331,11 @@ class Simulator:
                                                          inst.model)
                         result.instance_events.append(
                             (now, "down:" + inst.kind, inst.model))
+                        log.on_scale(now, "down", inst.model, inst.kind)
                         del instances[iid]
                 dispatch(now)
 
         self.cluster.finalize(horizon)
         result.gpu_seconds = self.cluster.gpu_seconds
+        log.gpu_seconds = self.cluster.gpu_seconds
         return result

@@ -192,10 +192,17 @@ class ModelManager:
     def promote(self, model: str, now: float) -> Optional[ModelShard]:
         """Host → GPU (locality-driven warm start): move the packed shard
         back to the GPU tier; the caller re-unpacks tensors and pays the
-        host→GPU transfer (``HardwareProfile.fetch_seconds``)."""
+        host→GPU transfer (``HardwareProfile.fetch_seconds``).
+
+        A payload-less cache entry (metadata-only warmth, e.g. a demoted
+        shard whose buffers were never received) is treated as COLD: it
+        cannot produce a servable replica, so the stale entry is dropped
+        and the caller must take a real fetch path instead."""
         if model not in self.host_cache:
             return None
-        shard = self.host_cache.pop(model) or ModelShard(model)
+        shard = self.host_cache.pop(model)
+        if shard is None or not shard.buffers:
+            return None
         self.admit(model, shard.n_blocks, now, shard=shard)
         return shard
 

@@ -88,13 +88,15 @@ def multi_model_trace(n_models: int, per_model_rpm: float, duration: float,
     reqs = []
     rid = 0
     for m in range(n_models):
-        t = m * period / n_models if periodic else 0.0
-        while True:
-            t += period if periodic else rng.exponential(period)
-            if t >= duration:
-                break
+        # periodic: the FIRST arrival lands at the stagger offset
+        # m·period/n_models itself (advancing before the first emit would
+        # silence every model for a whole period and emit one fewer
+        # request than per_model_rpm × duration promises)
+        t = m * period / n_models if periodic else rng.exponential(period)
+        while t < duration:
             reqs.append(Request(rid, f"model-{m:02d}", t, prompt_len,
                                 out_tokens))
             rid += 1
+            t += period if periodic else rng.exponential(period)
     reqs.sort(key=lambda r: r.t_arrive)
     return [dataclasses.replace(r, req_id=i) for i, r in enumerate(reqs)]

@@ -1,0 +1,349 @@
+"""Closed-loop autoscaler (§6/§7.5): trigger rules, cooldown/keep-alive
+pacing, and the SAME ``Autoscaler`` class driving both runtimes — the
+live cluster's trace replay (real JAX tokens on the simulated clock) and
+the calibrated discrete-event simulator.
+
+Also the regression tests for this PR's serving-metrics bugfix batch:
+``Scheduler.submit`` preserving the original submit tick across handoffs,
+payload-less host-cache warmth treated as cold in the live cluster, the
+periodic multi-model trace emitting from the first period, and the
+EOS/eager interplay with the resume queue.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import init_params
+from repro.serving.autoscaler import (Autoscaler, AutoscalerConfig,
+                                      LoadSignals, ScaleDown, ScaleUp)
+from repro.serving.baselines import POLICIES, LambdaScalePolicy
+from repro.serving.cluster import LiveCluster
+from repro.serving.engine import ContinuousBatchingEngine, InferenceEngine
+from repro.serving.scheduler import Scheduler, SeqState
+from repro.serving.simulator import Simulator
+from repro.serving.tiers import HardwareProfile
+from repro.serving.workload import (Request, constant_stress,
+                                    multi_model_trace)
+
+MAX_LEN = 48
+_CTX = {}
+
+
+def _ctx():
+    if not _CTX:
+        cfg = reduced(get_config("stablelm-1.6b"), d_model=64)
+        params = init_params(cfg, jax.random.PRNGKey(1))
+        _CTX["m"] = (cfg, params)
+        _CTX["ref"] = InferenceEngine(cfg, params, max_len=MAX_LEN)
+    return _CTX
+
+
+def _reference(prompt, n_tok):
+    toks = _ctx()["ref"].generate(
+        {"tokens": jnp.asarray(prompt, jnp.int32)[None]}, n_tok,
+        cache_len=MAX_LEN)
+    return list(map(int, toks[0]))
+
+
+def _prompt(rng, length):
+    vocab = _ctx()["m"][0].vocab_size
+    return list(map(int, rng.integers(0, vocab, size=length)))
+
+
+# ------------------------------------------------------- controller (unit)
+def _sig(model="m", queue=0, total=8, busy=0, nodes=1, spi=8, **kw):
+    return LoadSignals(model, queue, total, busy, nodes, spi, **kw)
+
+
+def test_spike_scaleup_cooldown_idle_scaledown():
+    """The satellite-task scenario end to end: a spike triggers scale-up,
+    the up-cooldown paces repeats, idle replicas past keep-alive scale
+    down (respecting min_replicas), and the down-cooldown paces that."""
+    asc = Autoscaler(AutoscalerConfig(cooldown_up=1.0, cooldown_down=1.0,
+                                      keepalive=5.0, min_replicas=1))
+    # t=0: cold spike — no capacity at all bypasses the cooldown
+    acts = asc.decide(0.0, [_sig(queue=20, total=0, busy=0, nodes=0)])
+    assert acts == [ScaleUp("m", 3, 4, "queue")]   # ceil(20/8) = 3
+    # t=0.4: still queued but a scale plan is mid-multicast — hold
+    assert asc.decide(0.4, [_sig(queue=12, total=8, busy=8, nodes=3,
+                                 scaling_in_flight=True)]) == []
+    # t=0.6: plan done, queue remains — inside the 1 s up-cooldown
+    assert asc.decide(0.6, [_sig(queue=12, total=24, busy=20,
+                                 nodes=3)]) == []
+    # t=1.5: cooldown expired — scales again for the residual queue
+    acts = asc.decide(1.5, [_sig(queue=40, total=24, busy=24, nodes=3)])
+    assert acts == [ScaleUp("m", 2, 4, "queue")]   # ceil(40/8)=5, minus 3
+    # t=3: idle — but node 7 hasn't been idle for keepalive yet
+    assert asc.decide(3.0, [_sig(queue=0, busy=0, nodes=5, n_replicas=5,
+                                 idle_nodes=[(7, 1.0)])]) == []
+    # t=9: two replicas idle past keep-alive; min_replicas floors at 1...
+    acts = asc.decide(9.0, [_sig(queue=0, busy=0, nodes=2, n_replicas=2,
+                                 idle_nodes=[(7, 6.0), (3, 8.0)])])
+    assert acts == [ScaleDown("m", (7,), "keepalive")]
+    # ...and the down-cooldown paces the next release
+    assert asc.decide(9.5, [_sig(queue=0, busy=0, nodes=1, n_replicas=2,
+                                 idle_nodes=[(3, 9.0)])]) == []
+
+
+def test_utilization_and_slo_triggers():
+    """Slot saturation and a violated TTFT SLO each add proactive
+    headroom even when nothing is queued yet."""
+    asc = Autoscaler(AutoscalerConfig(util_high=0.9))
+    acts = asc.decide(0.0, [_sig(queue=0, total=8, busy=8, nodes=1)])
+    assert acts == [ScaleUp("m", 1, 4, "util")]
+    asc = Autoscaler(AutoscalerConfig(ttft_slo=0.5))
+    acts = asc.decide(0.0, [_sig(queue=0, total=8, busy=2, nodes=1,
+                                 recent_ttft=(0.1, 0.2, 2.0, 1.5))])
+    assert acts == [ScaleUp("m", 1, 4, "slo")]
+    # SLO satisfied → no action
+    assert asc.decide(5.0, [_sig(queue=0, total=8, busy=2, nodes=1,
+                                 recent_ttft=(0.1, 0.2))]) == []
+
+
+def test_max_nodes_caps_fleet():
+    asc = Autoscaler(AutoscalerConfig(max_nodes=4))
+    acts = asc.decide(0.0, [_sig(queue=100, total=8, busy=8, nodes=3)])
+    assert acts == [ScaleUp("m", 1, 4, "queue")]
+    assert asc.decide(1.0, [_sig(queue=100, total=8, busy=8,
+                                 nodes=4)]) == []
+
+
+# ----------------------------------------------- closed loop, live cluster
+def test_replay_closed_loop_on_live_cluster():
+    """Acceptance: the autoscaler drives the live runtime end to end —
+    a bursty trace scales the model up from its host-warm copy mid-replay
+    (k-way multicast), every request finishes with real greedy tokens,
+    and the idle tail scales back down to the host-memory tier."""
+    cfg, params = _ctx()["m"]
+    lc = LiveCluster(n_nodes=6, n_slots=2, max_len=MAX_LEN)
+    lc.register("m", cfg, params, n_blocks=2, warm_nodes=[0])
+
+    rng = np.random.default_rng(0)
+    trace = [Request(i, "m", 0.01 + 0.002 * i, int(rng.integers(4, 8)),
+                     int(rng.integers(3, 6))) for i in range(10)]
+    asc = Autoscaler(AutoscalerConfig(cooldown_up=0.05, cooldown_down=0.02,
+                                      keepalive=0.1, min_replicas=1,
+                                      max_k=2))
+    log = lc.replay(trace, autoscaler=asc, tick_seconds=0.002,
+                    tail_seconds=0.5)
+    s = log.summary()
+    assert s["n_finished"] == len(trace)
+    assert s["scale_ups"] >= 1 and s["scale_downs"] >= 1
+    assert all(m.ttft is not None and m.ttft >= 0
+               for m in log.requests.values())
+    assert all(m.out_tokens == r.out_tokens
+               for m, r in zip((log.requests[r.req_id] for r in trace),
+                               trace))
+    assert s["gpu_seconds"] > 0
+    # scaled down to the floor; released replicas fell back to the host
+    # tier WITH their packed payload (a later scale finds them warm)
+    assert len(lc.serving["m"].locals_) == asc.config.min_replicas
+    assert lc._host_payload_nodes("m")
+    # the scale-up event is attributed to the host tier (§5 locality)
+    up = log.scale_ups()[0]
+    assert "tier=host" in up.detail
+
+
+def test_replay_tokens_exact_vs_reference():
+    """Replay is the same serving path as manual scale/submit: greedy
+    tokens equal the static reference engine for every request."""
+    cfg, params = _ctx()["m"]
+    lc = LiveCluster(n_nodes=4, n_slots=2, max_len=MAX_LEN)
+    lc.register("m", cfg, params, n_blocks=2, hot_nodes=[0])
+    rng = np.random.default_rng(5)
+    prompts = {i: _prompt(rng, int(rng.choice([4, 6]))) for i in range(6)}
+    trace = [Request(i, "m", 0.002 * i, len(prompts[i]), 5)
+             for i in range(6)]
+    asc = Autoscaler(AutoscalerConfig(cooldown_up=0.01, keepalive=10.0))
+    log = lc.replay(trace, autoscaler=asc, tick_seconds=0.002,
+                    prompt_fn=lambda r: prompts[r.req_id])
+    assert log.summary()["n_finished"] == 6
+    out = lc.results("m")
+    for i in range(6):
+        assert out[i] == _reference(prompts[i], 5), i
+
+
+# ------------------------------------------------ closed loop, simulator
+def test_same_autoscaler_drives_simulator():
+    """The identical Autoscaler instance class drives the discrete-event
+    simulator: it makes the sizing decisions, the policy provisions."""
+    hw = HardwareProfile()
+    asc = Autoscaler(AutoscalerConfig(keepalive=5.0))
+    reqs = constant_stress(30.0, 3.0, model="llama2-13b", seed=2)
+    res = Simulator(LambdaScalePolicy(hw), 12, hw, autoscaler=asc).run(reqs)
+    assert len(res.ttft) == len(reqs)
+    assert asc.decisions, "the autoscaler made no decisions"
+    assert any(isinstance(a, ScaleUp) for _, a in asc.decisions)
+    s = res.metrics.summary()
+    assert s["n_finished"] == len(reqs)
+    assert s["gpu_seconds"] == res.gpu_seconds > 0
+    assert s["scale_ups"] >= 1
+
+
+def test_autoscale_p99_ordering_on_spike():
+    """Acceptance: under a bursty spike, closed-loop λScale has strictly
+    better p99 TTFT than the non-multicast baselines (ServerlessLLM-like
+    serial loading, NCCL-like group-init broadcast)."""
+    hw = HardwareProfile()
+    reqs = constant_stress(60.0, 4.0, model="llama2-13b", seed=7)
+    p99 = {}
+    for name in ("lambdascale", "serverlessllm", "nccl"):
+        asc = Autoscaler(AutoscalerConfig(keepalive=5.0))
+        res = Simulator(POLICIES[name](hw), 12, hw, autoscaler=asc).run(reqs)
+        p99[name] = res.metrics.summary()["ttft_p99"]
+    assert p99["lambdascale"] < p99["serverlessllm"]
+    assert p99["lambdascale"] < p99["nccl"]
+
+
+# ------------------------------------------------------- regression: #1
+def test_submit_tick_preserved_across_handoff():
+    """A never-prefilled sequence re-submitted after a drain/handoff must
+    keep its ORIGINAL submit tick — the queueing delay the TTFT metric
+    measures — not be re-stamped by the adopting scheduler."""
+    a = Scheduler(1)
+    for _ in range(3):
+        a.next_tick()                      # advance A's clock to tick 3
+    s0 = SeqState(0, [5], 4)
+    s1 = SeqState(1, [5, 5], 4)
+    a.submit(s0)
+    a.submit(s1)
+    t = a.next_tick()                      # s0 takes the only slot
+    for slot, _seq in t.admit:
+        a.on_prefilled(slot, 1)
+    assert s1.submit_tick == 3             # queued at tick 3, never ran
+    a.drain()
+    handed = a.handoff()
+    assert s1 in handed
+    b = Scheduler(2)                       # fresh instance at tick 0
+    b.submit(s1)                           # adopt() path for fresh seqs
+    assert s1.submit_tick == 3, \
+        "handoff re-submission must not overwrite the original submit tick"
+    # arrival time for the metrics layer also survives the handoff
+    s2 = SeqState(2, [5], 4, t_arrive=1.25)
+    b.submit(s2)
+    assert s2.t_arrive == 1.25
+
+
+# ------------------------------------------------------- regression: #2
+def test_payload_less_warmth_is_cold_in_live_cluster():
+    """A host-cache LRU entry without a packed payload (simulator-style
+    metadata warmth) must NOT be promoted into an empty, never-complete
+    GPU shard: the live cluster treats it as cold and takes a real fetch
+    path instead."""
+    cfg, params = _ctx()["m"]
+    lc = LiveCluster(n_nodes=3, max_len=MAX_LEN)
+    lc.register("m", cfg, params, n_blocks=2)
+    # stale metadata-only warmth on node 0 (e.g. a demoted shard whose
+    # buffers were never received)
+    lc.nodes[0].host_cache.touch("m", 0.0)
+    assert lc.state.warm_nodes("m") == [0]
+    rep = lc.scale("m", 1)
+    assert rep.source_tier == "ssd"        # NOT host, NOT remote
+    lc.run_to_completion()
+    assert len(lc.complete_nodes("m")) == 2
+    # and the runtime can actually serve from the result
+    rng = np.random.default_rng(2)
+    prompt = _prompt(rng, 5)
+    rid = lc.submit("m", prompt, 4)
+    lc.drain_serving()
+    assert lc.results("m")[rid] == _reference(prompt, 4)
+
+
+def test_promote_after_evict_regression():
+    """Promote-after-evict: once the LRU drops a model's payload, a later
+    scale must fall back to a real fetch path instead of fabricating an
+    empty shard from the stale warmth."""
+    cfg, params = _ctx()["m"]
+    lc = LiveCluster(n_nodes=3, max_len=MAX_LEN)
+    lc.register("m", cfg, params, n_blocks=2, warm_nodes=[0])
+    # evict m's payload from node 0's host LRU (capacity 3)
+    for other in ("x", "y", "z"):
+        lc.nodes[0].host_cache.touch(other, 1.0)
+    assert "m" not in lc.nodes[0].host_cache
+    rep = lc.scale("m", 1)
+    assert rep.source_tier == "ssd"
+    lc.run_to_completion()
+    assert len(lc.complete_nodes("m")) == 2
+
+
+# ------------------------------------------------------- regression: #3
+def test_multi_model_trace_periodic_first_period():
+    """periodic=True must emit each model's first request at its stagger
+    offset m·period/n_models — not stay silent for a whole period — and
+    deliver exactly per_model_rpm × minutes requests per model."""
+    n_models, rpm, duration = 4, 1.0, 120.0
+    reqs = multi_model_trace(n_models, rpm, duration, periodic=True)
+    period = 60.0 / rpm
+    by_model = {}
+    for r in reqs:
+        by_model.setdefault(r.model, []).append(r.t_arrive)
+    assert len(by_model) == n_models
+    for m in range(n_models):
+        ts = sorted(by_model[f"model-{m:02d}"])
+        assert len(ts) == int(rpm * duration / 60.0), ts
+        assert ts[0] == m * period / n_models     # first period not silent
+        assert all(abs(b - a - period) < 1e-9 for a, b in zip(ts, ts[1:]))
+
+
+# --------------------------------------- EOS / eager with the resume queue
+def test_parked_eos_sequence_finished_while_parked():
+    """A handed-off sequence whose last token is already EOS must retire
+    from the resume queue WITHOUT taking a slot — placing it in DECODE
+    would advance it one token past its stop token."""
+    cfg, params = _ctx()["m"]
+    rng = np.random.default_rng(21)
+    p_live = _prompt(rng, 5)
+    ref_live = _reference(p_live, 6)
+    p_done = _prompt(rng, 4)
+    ref_done = _reference(p_done, 8)
+    eos = ref_done[2]
+    stop_at = ref_done.index(eos) + 1      # greedy may repeat: first hit
+    done = SeqState(7, p_done, 8, generated=ref_done[:stop_at],
+                    eos_id=eos)
+    assert done.finished
+
+    b = ContinuousBatchingEngine(cfg, params, n_slots=1, max_len=MAX_LEN)
+    live = SeqState(3, p_live, 6, generated=ref_live[:1])  # mid-decode
+    # live takes the only slot; the finished one parks in the resume queue
+    b.adopt([(live, None), (done, None)])
+    assert b.sched.resume_queue == [done]
+    out = b.run()
+    assert out[7] == ref_done[:stop_at], \
+        "parked-finished must not decode more"
+    assert out[3] == ref_live
+    assert b.sched.stats["adopted"] == 1   # the finished one never adopted
+    assert not b._parked                    # its parked cache was dropped
+
+
+def test_eager_delatches_after_last_eos_retires():
+    """The per-tick host sync (eager mode) must switch back OFF once the
+    last EOS-carrying sequence retires, while non-EOS sequences continue
+    undisturbed to exact-token completion."""
+    cfg, params = _ctx()["m"]
+    rng = np.random.default_rng(23)
+    p_eos = _prompt(rng, 4)
+    ref_eos = _reference(p_eos, 8)
+    eos = ref_eos[1]                        # stops after 2 tokens
+    assert ref_eos.index(eos) == 1
+    p_long = _prompt(rng, 5)
+    ref_long = _reference(p_long, 8)
+
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=2, max_len=MAX_LEN,
+                                   max_prefill_per_tick=2)
+    eng.submit(p_eos, 8, req_id=0, eos_id=eos)
+    eng.submit(p_long, 8, req_id=1)
+    assert eng._eager
+    eager_trace = []
+    while eng.step():
+        eager_trace.append((len(eng.sched.finished), eng._eager))
+    eng.flush()
+    out = {rid: s.generated for rid, s in eng.sched.finished.items()}
+    assert out[0] == ref_eos[:2]            # stopped at EOS
+    assert out[1] == ref_long               # unaffected, ran to the end
+    # eager while the EOS sequence was live, sync-free after it retired
+    assert any(e for done, e in eager_trace if done == 0)
+    assert any(not e for done, e in eager_trace if done >= 1), \
+        "engine must de-latch to the sync-free path after the last EOS " \
+        "sequence retires"
+    assert not eng._eager

@@ -19,7 +19,8 @@ from repro.serving.cluster import LiveCluster
 from repro.serving.engine import ContinuousBatchingEngine, InferenceEngine
 from repro.serving.simulator import Simulator
 from repro.serving.baselines import LambdaScalePolicy
-from repro.serving.tiers import ClusterState, HardwareProfile, ModelManager
+from repro.serving.tiers import (ClusterState, HardwareProfile, ModelManager,
+                                 ModelShard)
 from repro.serving.workload import constant_stress
 
 MAX_LEN = 48
@@ -243,9 +244,15 @@ def test_model_manager_tier_transitions_and_lru():
     assert mm.host_cache.models() == {"b", "c"}
     assert [e[0] for e in mm.host_cache.evictions] == ["a"]
     assert cs.gpu_seconds == 1.5
-    # promotion pulls a model back out of the host tier
-    assert mm.promote("b", 3.0) is not None
-    assert mm.gpu_model == "b" and "b" not in mm.host_cache
+    # promotion of metadata-only warmth (no packed payload) is a COLD
+    # miss: it cannot produce a servable shard, so the stale entry drops
+    assert mm.promote("b", 3.0) is None
+    assert "b" not in mm.host_cache and mm.gpu_free
+    # a payload-carrying shard promotes for real
+    mm.host_cache.touch("d", 3.5, payload=ModelShard("d", 1, buffers={0: b"x"}))
+    shard = mm.promote("d", 4.0)
+    assert shard is not None and shard.complete
+    assert mm.gpu_model == "d" and "d" not in mm.host_cache
 
 
 def test_model_manager_default_factory_not_shared():

@@ -1,0 +1,202 @@
+"""Paged KV cache vs pooled stripes: throughput, residency, handoff.
+
+Three measurements on the same reduced model:
+
+1. **Serving throughput** — the identical heavy-tail trace through a
+   paged and a striped (pooled) ``ContinuousBatchingEngine``; tokens/s
+   for each (min over repeats, compile excluded).  On CPU the paged
+   path pays an XLA gather per attention layer per tick, so expect a
+   fraction of striped throughput at toy scale — the TPU target runs
+   the Pallas paged kernel instead; ``relative_throughput`` is gated by
+   ``benchmarks.diff`` so the ratio cannot silently degrade further.
+2. **KV residency** — per-tick resident KV bytes.  The pooled engine
+   reserves ``slots × max_len`` stripes up front; the paged engine's
+   residency is ``allocated pages × page bytes`` and tracks live tokens.
+3. **Handoff, both ends of §4.4** — drain an engine mid-generation and
+   compare the wire bytes of page-granular ``PackedKV`` payloads against
+   the pooled whole-cache gather at equal output; then drive a real
+   ``LiveCluster.scale_down`` handoff under a fast and a crippled
+   inter-node link so the per-request recompute-vs-transfer policy picks
+   opposite paths, and report the decision mix and priced latency.  The
+   analytic crossover link bandwidth (transfer cheaper above, recompute
+   cheaper below) is reported for the full-size config.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core.mode_switch import recompute_cost
+from repro.models import init_params, payload_nbytes
+from repro.serving.cluster import LiveCluster
+from repro.serving.engine import ContinuousBatchingEngine
+from repro.serving.tiers import HardwareProfile
+
+SLOTS = 4
+MAX_LEN = 64
+PAGE_SIZE = 16
+N_REQUESTS = 16
+REPEATS = 3
+
+
+def _trace(vocab: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(N_REQUESTS):
+        plen = int(rng.integers(6, 17))
+        otok = int(min(2 + rng.geometric(0.10), 40))
+        out.append((list(map(int, rng.integers(0, vocab, size=plen))), otok))
+    return out
+
+
+def _page_bytes(eng: ContinuousBatchingEngine) -> float:
+    """Bytes ONE page occupies across every attention layer's pool."""
+    total = 0
+    for leaf in jax.tree.leaves({"trunk": eng.cache["trunk"],
+                                 "rem": eng.cache["rem"]}):
+        if leaf.ndim >= 4 and leaf.shape[-3] == eng.page_size:
+            n_pool = leaf.shape[1] if leaf.ndim == 5 else leaf.shape[0]
+            total += leaf.nbytes / n_pool
+    return total
+
+
+def _pooled_kv_bytes(eng: ContinuousBatchingEngine) -> float:
+    """Resident KV bytes of the striped cache (attention leaves only)."""
+    total = 0
+    for layer in list(eng.cache["trunk"]) + list(eng.cache["rem"]):
+        if isinstance(layer, dict) and "k" in layer:
+            total += layer["k"].nbytes + layer["v"].nbytes
+    return total
+
+
+def _drive(eng, trace, sample=None):
+    for i, (prompt, n) in enumerate(trace):
+        eng.submit(prompt, n, req_id=i)
+    n_steps = 0
+    while eng.step():
+        n_steps += 1
+        if sample is not None:
+            sample(eng)
+    eng.flush()
+    return n_steps
+
+
+def _mid_generation(cfg, params, trace, *, paged: bool):
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=SLOTS,
+                                   max_len=MAX_LEN, paged=paged,
+                                   page_size=PAGE_SIZE,
+                                   max_prefill_per_tick=SLOTS)
+    for i, (prompt, n) in enumerate(trace[:SLOTS]):
+        eng.submit(prompt, n, req_id=i)
+    for _ in range(6):
+        eng.step()
+    eng.drain()
+    return eng.handoff()
+
+
+def run(report) -> None:
+    cfg = reduced(get_config("qwen2.5-3b"), d_model=64)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    trace = _trace(cfg.vocab_size)
+    total_tokens = sum(n for _, n in trace)
+
+    # ---- 1+2: throughput and residency ---------------------------------
+    times = {True: [], False: []}
+    peak_pages = mean_pages = 0.0
+    for rep in range(REPEATS):
+        for paged in (False, True):
+            eng = ContinuousBatchingEngine(cfg, params, n_slots=SLOTS,
+                                           max_len=MAX_LEN, paged=paged,
+                                           page_size=PAGE_SIZE)
+            samples = []
+            t0 = time.perf_counter()
+            _drive(eng, trace,
+                   sample=(lambda e: samples.append(e.pages.n_allocated))
+                   if paged else None)
+            times[paged].append(time.perf_counter() - t0)
+            if paged and rep == REPEATS - 1:
+                peak_pages = max(samples)
+                mean_pages = sum(samples) / len(samples)
+                page_bytes = _page_bytes(eng)
+            if not paged and rep == REPEATS - 1:
+                pooled_bytes = _pooled_kv_bytes(eng)
+    tps_pooled = total_tokens / min(times[False])
+    tps_paged = total_tokens / min(times[True])
+    report("paged/tokens_per_sec", tps_paged, "")
+    report("paged/pooled_tokens_per_sec", tps_pooled, "")
+    report("paged/relative_throughput", tps_paged / tps_pooled,
+           "paged vs striped, same trace")
+    report("paged/kv_bytes_peak", peak_pages * page_bytes,
+           f"{peak_pages:.0f} pages x {page_bytes:.0f} B")
+    report("paged/kv_bytes_mean", mean_pages * page_bytes, "")
+    report("paged/kv_bytes_pooled", pooled_bytes,
+           f"slots x max_len stripes ({SLOTS} x {MAX_LEN})")
+    report("paged/residency_vs_pooled", peak_pages * page_bytes /
+           pooled_bytes, "peak resident ratio (<1 = packing wins)")
+
+    # ---- 3a: handoff wire bytes at equal output ------------------------
+    paged_pairs = _mid_generation(cfg, params, trace, paged=True)
+    pooled_pairs = _mid_generation(cfg, params, trace, paged=False)
+    pb = sum(payload_nbytes(c) for _, c in paged_pairs)
+    qb = sum(payload_nbytes(c) for _, c in pooled_pairs)
+    report("handoff/paged_wire_bytes", pb,
+           f"{len(paged_pairs)} reqs, live pages only")
+    report("handoff/pooled_wire_bytes", qb, "whole-cache gather")
+    report("handoff/bytes_ratio", pb / qb, "<1 = page-granular wins")
+
+    # ---- 3b: recompute-vs-transfer at both ends of the link ------------
+    # pick the two link speeds around the REDUCED model's own crossover
+    # (bytes-per-token over recompute-seconds-per-token), so the policy
+    # provably flips: one end ships pages, the other re-prefills
+    per_tok_bytes = page_bytes / PAGE_SIZE
+    bw_toy = per_tok_bytes / recompute_cost(cfg, 1, 1,
+                                            HardwareProfile().peak_flops)
+    report("crossover/reduced_link_bw", bw_toy,
+           "toy model crossover used to place the two test links")
+
+    def cluster_handoff(hw):
+        lc = LiveCluster(n_nodes=2, hw=hw, n_slots=SLOTS, max_len=MAX_LEN,
+                         page_size=PAGE_SIZE)
+        lc.register("m", cfg, params, n_blocks=4, hot_nodes=[0, 1])
+        eng = lc.serving["m"].locals_[1]
+        for i, (prompt, n) in enumerate(trace[:SLOTS]):
+            eng.submit(prompt, n, req_id=i)
+        for _ in range(6):
+            eng.step()
+        lc.scale_down("m", [1])
+        lc.drain_serving()
+        return lc.handoff_log
+
+    fast = cluster_handoff(HardwareProfile(link_bw=10.0 * bw_toy))
+    slow = cluster_handoff(HardwareProfile(link_bw=0.1 * bw_toy))
+    for name, log in (("fast_link", fast), ("slow_link", slow)):
+        xfers = [d for d in log if d.chosen == "transfer"]
+        recs = [d for d in log if d.chosen == "recompute"]
+        report(f"handoff/{name}_transfers", len(xfers), "")
+        report(f"handoff/{name}_recomputes", len(recs), "")
+        report(f"handoff/{name}_latency", sum(d.t_chosen for d in log),
+               "priced resume latency, all requests")
+        report(f"handoff/{name}_bytes_moved",
+               sum(d.payload_bytes for d in xfers), "")
+
+    # ---- 3c: analytic crossover for the full-size model ----------------
+    full = get_config("qwen2.5-3b")
+    hw = HardwareProfile()
+    n_attn = sum(1 for i in range(full.n_layers)
+                 if full.mixer_of(i).startswith("attn"))
+    kv_bytes_tok = 2 * n_attn * full.n_kv_heads * full.d_head * 4
+    t_rec_tok = recompute_cost(full, 1, 1, hw.peak_flops)
+    bw_star = kv_bytes_tok / t_rec_tok
+    report("crossover/link_bw_bytes_per_s", bw_star,
+           "transfer cheaper above, recompute below (qwen2.5-3b fp32 KV)")
+    report("crossover/profile_link_bw", hw.link_bw,
+           "transfer" if hw.link_bw > bw_star else "recompute")
+
+
+if __name__ == "__main__":
+    def report(name, value, derived=""):
+        print(f"{name},{value:.6g},{derived}")
+    run(report)

@@ -1,0 +1,126 @@
+"""Perf-trajectory gate: diff two ``BENCH_*.json`` sets for regressions.
+
+Compares every benchmark module present in BOTH directories and flags
+rows whose name matches a watched metric pattern (tail latency and GPU
+cost by default) when the candidate value exceeds baseline × threshold.
+Exit status is non-zero iff a regression is found, so the nightly bench
+CI job fails loudly against the committed baseline while still uploading
+artifacts.  Rows present on only one side are reported but never fail
+the gate (new benchmarks land without a baseline).
+
+    python -m benchmarks.diff --baseline . --candidate bench-out \
+        [--threshold 1.5] [--watch p99 --watch gpu_seconds] \
+        [--watch-up relative_throughput]
+
+``--watch`` metrics are lower-is-better (latencies, costs): candidate >
+baseline × threshold fails.  ``--watch-up`` metrics are higher-is-better
+(throughputs): candidate < baseline ÷ threshold fails.  A candidate
+value of 0 on a lower-is-better metric or a missing/crashed module never
+counts as a regression of itself.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, Tuple
+
+DEFAULT_WATCH = ("p99", "gpu_seconds")
+# relative_throughput is the paged/striped ratio measured in ONE run —
+# machine-independent, unlike absolute tokens/s across CI runners
+DEFAULT_WATCH_UP = ("relative_throughput",)
+
+
+def load_rows(path: str) -> Dict[str, float]:
+    with open(path) as f:
+        data = json.load(f)
+    if "error" in data:
+        return {}
+    return {r["name"]: float(r["value"]) for r in data.get("rows", [])
+            if isinstance(r.get("value"), (int, float))}
+
+
+def watched(name: str, patterns) -> bool:
+    low = name.lower()
+    return any(p.lower() in low for p in patterns)
+
+
+def compare(baseline_dir: str, candidate_dir: str, threshold: float,
+            patterns, patterns_up=()) -> Tuple[list, list]:
+    """Returns (regressions, notes): regressions are
+    (module, metric, base, cand, ratio) where ratio > threshold means
+    'worse by that factor' in the metric's own direction."""
+    regressions, notes = [], []
+    base_files = {os.path.basename(p): p for p in
+                  glob.glob(os.path.join(baseline_dir, "BENCH_*.json"))}
+    cand_files = {os.path.basename(p): p for p in
+                  glob.glob(os.path.join(candidate_dir, "BENCH_*.json"))}
+    for name in sorted(set(base_files) | set(cand_files)):
+        if name not in base_files:
+            notes.append(f"{name}: no committed baseline (new benchmark)")
+            continue
+        if name not in cand_files:
+            notes.append(f"{name}: missing from candidate run")
+            continue
+        base = load_rows(base_files[name])
+        cand = load_rows(cand_files[name])
+        if not base or not cand:
+            notes.append(f"{name}: crashed/empty on one side — skipped")
+            continue
+        for metric, bval in sorted(base.items()):
+            down = watched(metric, patterns)
+            up = watched(metric, patterns_up)
+            if not (down or up) or metric not in cand:
+                continue
+            cval = cand[metric]
+            if bval <= 0.0 or (up and cval <= 0.0):
+                continue
+            # "worse-by" factor in the metric's own direction
+            ratio = cval / bval if down else bval / cval
+            if ratio > threshold:
+                regressions.append((name, metric, bval, cval, ratio))
+            else:
+                notes.append(f"{name}: {metric} {bval:.6g} -> {cval:.6g} "
+                             f"({ratio:.2f}x worse-by) ok")
+    return regressions, notes
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True,
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--candidate", required=True,
+                    help="directory holding the fresh run's BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="fail when candidate > baseline * threshold")
+    ap.add_argument("--watch", action="append", default=None,
+                    help="lower-is-better metric-name substrings "
+                         f"(default: {', '.join(DEFAULT_WATCH)})")
+    ap.add_argument("--watch-up", action="append", default=None,
+                    help="higher-is-better metric-name substrings "
+                         f"(default: {', '.join(DEFAULT_WATCH_UP)})")
+    args = ap.parse_args()
+    patterns = args.watch or list(DEFAULT_WATCH)
+    patterns_up = args.watch_up or list(DEFAULT_WATCH_UP)
+
+    regressions, notes = compare(args.baseline, args.candidate,
+                                 args.threshold, patterns, patterns_up)
+    for note in notes:
+        print(f"  {note}")
+    if regressions:
+        print(f"\n{len(regressions)} regression(s) beyond "
+              f"{args.threshold:.2f}x:")
+        for mod, metric, b, c, r in regressions:
+            print(f"  {mod}: {metric} {b:.6g} -> {c:.6g} "
+                  f"({r:.2f}x worse)")
+        return 1
+    print(f"\nno regressions beyond {args.threshold:.2f}x "
+          f"(watched down: {', '.join(patterns)}; "
+          f"up: {', '.join(patterns_up)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,6 +17,12 @@ perf trajectory across PRs can be diffed without parsing stdout.  Modules:
   mmodel   bench_multimodel     (§5 tiers: cold/warm/hot scale-up latency)
   autoscale bench_autoscale     (§7.5 closed loop: tail latency + cost
                                  per policy under bursty traces)
+  paged    bench_paged          (paged KV: residency, tokens/s, page-
+                                 granular handoff + §4.4 crossover)
+
+``benchmarks.diff`` compares two directories of these JSON summaries and
+exits non-zero on tail-latency/GPU-cost regressions (the nightly CI gate
+against the committed baseline).
 
 A crashing module does not abort the sweep: the remaining modules still
 run and write their JSON, the failure is recorded in
@@ -34,7 +40,7 @@ import traceback
 from benchmarks import (bench_autoscale, bench_cache,
                         bench_continuous_batching, bench_engine, bench_kway,
                         bench_latency, bench_multicast, bench_multimodel,
-                        bench_num_blocks, bench_optimizations,
+                        bench_num_blocks, bench_optimizations, bench_paged,
                         bench_roofline, bench_trace, bench_throughput)
 
 MODULES = {
@@ -44,7 +50,7 @@ MODULES = {
     "optimizations": bench_optimizations, "num_blocks": bench_num_blocks,
     "roofline": bench_roofline, "engine": bench_engine,
     "cbatch": bench_continuous_batching, "mmodel": bench_multimodel,
-    "autoscale": bench_autoscale,
+    "autoscale": bench_autoscale, "paged": bench_paged,
 }
 
 

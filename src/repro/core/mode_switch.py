@@ -13,7 +13,7 @@ same code path (``forward(build_cache=True)``).
 """
 from __future__ import annotations
 
-from typing import TYPE_CHECKING, Dict, List, Sequence
+from typing import TYPE_CHECKING, Any, Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
 
@@ -46,8 +46,8 @@ def recompute_cache(cfg: ModelConfig, params, batch: Dict, *,
 
 
 def handoff_requests(cfg: ModelConfig, params,
-                     seqs: Sequence["SeqState"], *, cache_len: int
-                     ) -> Dict[int, dict]:
+                     seqs: Sequence["SeqState"], *, cache_len: int,
+                     page_size: Optional[int] = None) -> Dict[int, Any]:
     """Rebuild decode caches for sequences handed off by a draining
     instance (scheduler ``handoff()`` → local ``adopt()``).
 
@@ -55,15 +55,21 @@ def handoff_requests(cfg: ModelConfig, params,
     over prompt + generated-so-far (all but the last token, which is the
     next decode input), positioned exactly where the draining instance
     stopped — the request re-enters DECODE, never the prefill queue.
-    Returns req_id -> batch-1 cache.
+    Returns req_id -> batch-1 cache, or, when ``page_size`` is given,
+    req_id -> ``PackedKV``: only the live pages, packed contiguously in
+    the same wire form a live paged handoff ships — so recomputed and
+    transferred state adopt through one code path.
     """
-    out: Dict[int, dict] = {}
+    out: Dict[int, Any] = {}
     for seq in seqs:
         toks = seq.tokens_so_far
         assert len(toks) >= 2, "nothing decoded yet — resubmit instead"
         batch = {"tokens": jnp.asarray(toks[:-1], jnp.int32)[None]}
-        out[seq.req_id] = recompute_cache(cfg, params, batch,
-                                          cache_len=cache_len)
+        cache = recompute_cache(cfg, params, batch, cache_len=cache_len)
+        if page_size is not None:
+            from repro.models import pack_single_cache
+            cache = pack_single_cache(cfg, cache, page_size)
+        out[seq.req_id] = cache
     return out
 
 

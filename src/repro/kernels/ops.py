@@ -8,7 +8,8 @@ accumulators).
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.mlstm_chunk import mlstm_chunkwise
+from repro.kernels.paged_attention import paged_decode_attention
 from repro.kernels.rglru_scan import rglru_scan
 
-__all__ = ["flash_attention", "decode_attention", "rglru_scan",
-           "mlstm_chunkwise"]
+__all__ = ["flash_attention", "decode_attention", "paged_decode_attention",
+           "rglru_scan", "mlstm_chunkwise"]

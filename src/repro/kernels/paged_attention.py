@@ -1,0 +1,113 @@
+"""Pallas TPU paged decode attention: one query token against a shared
+page pool addressed through a per-sequence page table.
+
+The paged serving decode hot spot.  K/V for every live sequence sit in a
+single pool of fixed-size token pages (``repro.models.cache_ops.PageTable``
+allocates them); the kernel walks one sequence's page list — delivered as
+a scalar-prefetch operand so the BlockSpec index map resolves each grid
+step to the page the sequence owns — and applies online softmax per page
+block.  The grid is static at (B·H, max_pages), so a short sequence still
+iterates max_pages blocks; but every unallocated table entry resolves to
+the ONE trash page (which stays hot after its first fetch), so *distinct*
+HBM page traffic is bounded by the sequence's live pages rather than a
+per-slot ``max_len`` stripe — the paged layout's point (§5 pre-allocation
+without stripes).  Bounding the grid itself by the batch-max live page
+count (a dynamic grid) is left for the TPU-tuning pass.
+
+Layouts: q (B,H,dh); k_pages/v_pages (P, ps, KVH, dh) — the LAST page
+(index P-1) is the engine's trash page and never appears in a table;
+page_table (B, MP) int32 page ids, -1 = unallocated; lens (B,) int32
+live token counts (current position + 1).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, ps: int, window, scale: float,
+            n_pblocks: int, heads: int):
+    ip = pl.program_id(1)
+    b = pl.program_id(0) // heads
+
+    @pl.when(ip == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (dh,)
+    k = k_ref[0, :, 0].astype(jnp.float32)            # (ps, dh)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(k, q, (((1,), (0,)), ((), ())))   # (ps,)
+    n = len_ref[b]
+    t = ip * ps + jax.lax.iota(jnp.int32, ps)         # token positions
+    valid = (t < n) & (pt_ref[b, ip] >= 0)
+    if window is not None:
+        valid &= (n - 1) - t < window
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = m_scr[0, 0]
+    m_new = jnp.maximum(m_prev, s.max())
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[0, 0] = l_scr[0, 0] * corr + p.sum()
+    acc_scr[0, ...] = acc_scr[0, ...] * corr + jax.lax.dot_general(
+        p, v, (((0,), (0,)), ((), ())))
+    m_scr[0, 0] = m_new
+
+    @pl.when(ip == n_pblocks - 1)
+    def _fin():
+        o_ref[0, ...] = (acc_scr[0] /
+                         jnp.maximum(l_scr[0, 0], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, page_table, lens, *,
+                           window=None, interpret: bool = True):
+    """q: (B,H,dh); k/v_pages: (P,ps,KVH,dh); page_table: (B,MP) int32
+    (-1 = unallocated, mapped to the trash page P-1 and masked);
+    lens: (B,) int32 -> (B,H,dh)."""
+    B, H, dh = q.shape
+    P, ps, KVH, _ = k_pages.shape
+    g = H // KVH
+    MP = page_table.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+    kernel = functools.partial(_kernel, ps=ps, window=window, scale=scale,
+                               n_pblocks=MP, heads=H)
+
+    def kv_map(bh, ip, pt, ln):
+        # unallocated entries resolve to the trash page so the DMA stays
+        # in bounds; the kernel masks those tokens out via pt >= 0
+        pid = pt[bh // H, ip]
+        return (jnp.where(pid >= 0, pid, P - 1), 0, (bh % H) // g, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B * H, MP),
+        in_specs=[
+            pl.BlockSpec((1, dh), lambda bh, ip, pt, ln: (bh, 0)),
+            pl.BlockSpec((1, ps, 1, dh), kv_map),
+            pl.BlockSpec((1, ps, 1, dh), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, dh), lambda bh, ip, pt, ln: (bh, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * H, dh), q.dtype),
+        interpret=interpret,
+    )(page_table, lens, q.reshape(B * H, dh), k_pages, v_pages)
+    return out.reshape(B, H, dh)

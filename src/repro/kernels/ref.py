@@ -48,6 +48,32 @@ def decode_attention_ref(q, k, v, spos, pos, *, window=None):
     return o.reshape(B, H, dh).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pages, v_pages, page_table, lens, *,
+                               window=None):
+    """Single-token decode against a paged KV pool.
+
+    q: (B,H,dh); k/v_pages: (P,ps,KVH,dh) with the last page reserved as
+    trash; page_table: (B,MP) int32 page ids (-1 = unallocated);
+    lens: (B,) live token counts.  Returns (B,H,dh)."""
+    B, H, dh = q.shape
+    P, ps, KVH, _ = k_pages.shape
+    g = H // KVH
+    MP = page_table.shape[1]
+    pt = jnp.where(page_table >= 0, page_table, P - 1)
+    k = k_pages[pt].reshape(B, MP * ps, KVH, dh)
+    v = v_pages[pt].reshape(B, MP * ps, KVH, dh)
+    t = jnp.arange(MP * ps)[None]                     # token positions
+    valid = (t < lens[:, None]) & (jnp.repeat(page_table, ps, axis=1) >= 0)
+    if window is not None:
+        valid &= (lens[:, None] - 1) - t < window
+    qg = q.reshape(B, KVH, g, dh).astype(jnp.float32) / math.sqrt(dh)
+    s = jnp.einsum("bkgd,bwkd->bkgw", qg, k.astype(jnp.float32))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgw,bwkd->bkgd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, dh).astype(q.dtype)
+
+
 def rglru_scan_ref(a, b, h0):
     """Linear recurrence h_t = a_t * h_{t-1} + b_t (all (B,S,d), h0 (B,d))."""
     B, S, d = a.shape

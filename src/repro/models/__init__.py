@@ -1,8 +1,14 @@
-from repro.models.cache_ops import (batch_axes, cache_batch_concat,
-                                    cache_gather, cache_scatter)
+from repro.models.cache_ops import (PackedKV, PageTable, batch_axes,
+                                    cache_batch_concat, cache_gather,
+                                    cache_scatter, pages_for,
+                                    payload_nbytes)
 from repro.models.model import (decode_step, forward, init_cache,
-                                init_params, make_batch)
+                                init_paged_cache, init_params, make_batch,
+                                pack_single_cache, paged_adopt_scatter,
+                                paged_pack, paged_prefill_scatter)
 
 __all__ = ["init_params", "forward", "decode_step", "init_cache",
            "make_batch", "batch_axes", "cache_scatter", "cache_gather",
-           "cache_batch_concat"]
+           "cache_batch_concat", "PageTable", "PackedKV", "pages_for",
+           "payload_nbytes", "init_paged_cache", "paged_prefill_scatter",
+           "paged_pack", "paged_adopt_scatter", "pack_single_cache"]

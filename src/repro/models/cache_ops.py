@@ -1,27 +1,41 @@
-"""Batched decode-cache gather/scatter over KV-cache slots.
+"""Decode-cache storage layers: slot gather/scatter and the paged pool.
 
-The continuous-batching engine keeps ONE pooled decode cache of batch
-size ``n_slots`` and scatters freshly-prefilled single-sequence caches
-into free slots (and gathers a slot back out at mode-switch handoff).
-Cache pytrees mix leaf layouts — trunk leaves carry a leading
-pattern-repetition axis before batch, KV leaves are (B, W, kv, dh),
-recurrent states (B, d), scalars are unbatched — so the batch axis is
-*detected* per leaf by comparing the pooled tree against a batch-1
-reference of the same config: the unique axis where the sizes differ is
-the batch axis; leaves with identical shapes are shared/unbatched and
-marked with ``-1`` (a sentinel rather than None so the axes tree has the
-same pytree structure as the cache and maps cleanly under ``tree.map``).
+The continuous-batching engine historically kept ONE pooled decode cache
+of batch size ``n_slots`` with a full ``max_len`` stripe per slot and
+scattered freshly-prefilled single-sequence caches into free slots (and
+gathered a slot back out at mode-switch handoff).  Cache pytrees mix
+leaf layouts — trunk leaves carry a leading pattern-repetition axis
+before batch, KV leaves are (B, W, kv, dh), recurrent states (B, d),
+scalars are unbatched — so the batch axis is *detected* per leaf by
+comparing the pooled tree against a batch-1 reference of the same
+config: the unique axis where the sizes differ is the batch axis; leaves
+with identical shapes are shared/unbatched and marked with ``-1`` (a
+sentinel rather than None so the axes tree has the same pytree structure
+as the cache and maps cleanly under ``tree.map``).
 
-All three operations are pure jnp and trace cleanly under ``jax.jit``
-with a *traced* slot index (``dynamic_update_slice_in_dim``), so the
-engine fuses prefill + scatter into one compiled executable.
+The *paged* layer replaces the per-slot stripes: attention K/V live in a
+shared pool of fixed-size token pages allocated on demand, so resident
+KV bytes scale with live tokens instead of ``slots × max_len`` and a
+handoff ships only a sequence's live pages (``PackedKV``).  ``PageTable``
+is the block allocator — host-side free list + per-slot page lists +
+worst-case reservations for admission control — whose device-side table
+(`(n_slots, max_pages)` int32, -1 = unallocated) the jitted decode
+executables consume.  The scheduler gates admissions on the same object
+(``repro.serving.scheduler``), so a request is only admitted when its
+worst-case page demand fits.
+
+The slot gather/scatter operations are pure jnp and trace cleanly under
+``jax.jit`` with a *traced* slot index (``dynamic_update_slice_in_dim``),
+so the engine fuses prefill + scatter into one compiled executable.
 """
 from __future__ import annotations
 
-from typing import Any, List
+import dataclasses
+from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 UNBATCHED = -1
 
@@ -30,17 +44,33 @@ def batch_axes(pool_cache: Any, single_cache: Any) -> Any:
     """Pytree of per-leaf batch-axis indices (UNBATCHED for shared leaves).
 
     ``pool_cache`` and ``single_cache`` must be structurally identical
-    caches built for batch sizes B>1 and 1 respectively."""
+    caches built for batch sizes B>1 and 1 respectively.  Raises a
+    ``ValueError`` (never a silent wrong answer) when the batch axis of
+    a leaf cannot be identified unambiguously."""
     def axis(p, s):
-        assert p.ndim == s.ndim, (p.shape, s.shape)
+        if p.ndim != s.ndim:
+            raise ValueError(
+                f"cache leaves have different ranks: {p.shape} vs {s.shape}")
         diff = [i for i, (a, b) in enumerate(zip(p.shape, s.shape))
                 if a != b]
         if not diff:
             return UNBATCHED
-        assert len(diff) == 1 and s.shape[diff[0]] == 1, \
-            f"ambiguous batch axis: {p.shape} vs {s.shape}"
+        if len(diff) > 1 or s.shape[diff[0]] != 1:
+            raise ValueError(
+                f"ambiguous batch axis for leaf {p.shape} vs {s.shape}: "
+                f"axes {diff} differ and the reference is not batch-1 "
+                f"there — the pool's slot count may equal another axis "
+                f"size (e.g. n_slots == max_len), or the two caches were "
+                f"built with different non-batch dimensions")
         return diff[0]
-    return jax.tree.map(axis, pool_cache, single_cache)
+    axes = jax.tree.map(axis, pool_cache, single_cache)
+    if all(a == UNBATCHED for a in jax.tree.leaves(axes)) \
+            and jax.tree.leaves(axes):
+        raise ValueError(
+            "cannot detect the batch axis: pool and reference caches have "
+            "identical shapes on every leaf (was the pool built with "
+            "n_slots=1?); build the detection pool with n_slots >= 2")
+    return axes
 
 
 def cache_scatter(pool_cache: Any, seq_cache: Any, slot, axes: Any) -> Any:
@@ -70,3 +100,198 @@ def cache_batch_concat(seq_caches: List[Any], axes: Any) -> Any:
             return leaves[0]
         return jnp.concatenate(leaves, axis=ax)
     return jax.tree.map(cat, axes, *seq_caches)
+
+
+# ===================================================== paged KV allocation
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``n_tokens`` (ceil division)."""
+    return -(-max(n_tokens, 0) // page_size)
+
+
+class PageTable:
+    """Block allocator over a shared pool of fixed-size token pages.
+
+    One instance per paged engine: the scheduler reserves worst-case
+    pages at admission (so a live sequence can never hit page exhaustion
+    mid-decode), the engine allocates lazily as tokens actually arrive
+    (``ensure``), and retirement/handoff releases both.  Resident KV
+    bytes therefore scale with *live tokens* while admission control
+    stays safe.
+
+    ``device_table()`` exposes the allocation state as the
+    ``(n_slots, max_pages)`` int32 array (-1 = unallocated) the jitted
+    paged-attention executables index; it is re-uploaded only when an
+    allocation actually changed.
+    """
+
+    def __init__(self, n_pages: int, page_size: int, n_slots: int,
+                 max_pages: int):
+        if n_pages <= 0 or page_size <= 0:
+            raise ValueError("n_pages and page_size must be positive")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.n_slots = n_slots
+        self.max_pages = max_pages
+        self._free: List[int] = list(range(n_pages))
+        self._slot_pages: List[List[int]] = [[] for _ in range(n_slots)]
+        self._owner: List[Optional[int]] = [None] * n_pages
+        self._reserved: List[int] = [0] * n_slots     # pages, worst case
+        self._np_table = np.full((n_slots, max_pages), -1, np.int32)
+        self._version = 0
+        self._dev_version = -1
+        self._dev_table: Optional[jnp.ndarray] = None
+
+    # ------------------------------------------------------------ queries
+    @property
+    def n_allocated(self) -> int:
+        return self.n_pages - len(self._free)
+
+    @property
+    def n_reserved(self) -> int:
+        """Total worst-case claim: allocated pages plus reservations not
+        yet backed by an allocation."""
+        return sum(max(r, len(p)) for r, p in
+                   zip(self._reserved, self._slot_pages))
+
+    def slot_pages(self, slot: int) -> List[int]:
+        return list(self._slot_pages[slot])
+
+    def can_admit(self, n_tokens: int) -> bool:
+        """Would a sequence of ``n_tokens`` worst-case tokens fit beside
+        every outstanding reservation?"""
+        need = pages_for(n_tokens, self.page_size)
+        if need > self.max_pages:
+            return False
+        return need <= self.n_pages - self.n_reserved
+
+    # --------------------------------------------------------- allocation
+    def reserve(self, slot: int, n_tokens: int) -> None:
+        """Claim worst-case capacity for the sequence entering ``slot``
+        (admission control; no pages move)."""
+        self._reserved[slot] = max(pages_for(n_tokens, self.page_size),
+                                   len(self._slot_pages[slot]))
+
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Allocate pages until ``slot`` can hold ``n_tokens`` tokens.
+        Returns True when the device table changed."""
+        pages = self._slot_pages[slot]
+        need = pages_for(n_tokens, self.page_size)
+        if need > self.max_pages:
+            raise RuntimeError(
+                f"slot {slot} needs {need} pages but max_pages="
+                f"{self.max_pages} (request exceeds the engine's max_len)")
+        changed = False
+        while len(pages) < need:
+            if not self._free:
+                raise RuntimeError(
+                    f"page pool exhausted: {self.n_pages} pages, "
+                    f"{self.n_reserved} reserved — admission control "
+                    f"should have prevented this")
+            pid = self._free.pop()
+            assert self._owner[pid] is None, f"page {pid} double-allocated"
+            self._owner[pid] = slot
+            self._np_table[slot, len(pages)] = pid
+            pages.append(pid)
+            changed = True
+        if changed:
+            self._version += 1
+        return changed
+
+    def release(self, slot: int) -> List[int]:
+        """Free every page of ``slot`` (retirement / handoff) and drop
+        its reservation; returns the freed page ids."""
+        pages = self._slot_pages[slot]
+        for pid in pages:
+            if self._owner[pid] != slot:
+                raise RuntimeError(
+                    f"double free: page {pid} not owned by slot {slot} "
+                    f"(owner={self._owner[pid]})")
+            self._owner[pid] = None
+            self._free.append(pid)
+        freed, self._slot_pages[slot] = pages, []
+        self._reserved[slot] = 0
+        if freed:
+            self._np_table[slot, :] = -1
+            self._version += 1
+        return freed
+
+    # ------------------------------------------------------------- device
+    def device_table(self) -> jnp.ndarray:
+        if self._dev_version != self._version:
+            # copy: jnp.asarray zero-copies host int32 buffers on CPU, and
+            # later in-place allocator mutations would race JAX's async
+            # dispatch (computations read their operands asynchronously)
+            self._dev_table = jnp.asarray(self._np_table.copy())
+            self._dev_version = self._version
+        return self._dev_table
+
+    def check_invariants(self) -> None:
+        """No page leaked, none double-owned (property tests)."""
+        owned = [pid for pages in self._slot_pages for pid in pages]
+        assert len(owned) == len(set(owned)), "page owned by two slots"
+        assert len(owned) + len(self._free) == self.n_pages, \
+            "pages leaked or duplicated in the free list"
+        assert set(owned).isdisjoint(self._free), \
+            "allocated page also on the free list"
+        for pid, owner in enumerate(self._owner):
+            if owner is not None:
+                assert pid in self._slot_pages[owner]
+
+
+# ------------------------------------------------------- page-granular KV
+@dataclasses.dataclass
+class PackedKV:
+    """A sequence's live KV state packed page-granularly for the wire.
+
+    ``kv`` mirrors the paged cache structure for ONE sequence: attention
+    entries hold only the sequence's live pages, contiguous and in
+    position order (shape (..., n_live_pages, page_size, kv, dh));
+    recurrent/xLSTM state leaves ride along batch-1.  ``nbytes`` is what
+    a handoff actually moves — the pricing input for the
+    recompute-vs-transfer decision (§4.4) — and ``wire()`` materializes
+    the single contiguous buffer a real transport would send.
+    """
+    n_tokens: int
+    page_size: int
+    kv: Any
+
+    @property
+    def n_pages(self) -> int:
+        return pages_for(self.n_tokens, self.page_size)
+
+    @property
+    def nbytes(self) -> int:
+        return int(sum(leaf.nbytes for leaf in jax.tree.leaves(self.kv)))
+
+    def wire(self) -> Tuple[np.ndarray, List[Tuple[Tuple[int, ...], Any]]]:
+        """Flatten to one contiguous uint8 buffer + per-leaf (shape,
+        dtype) spec (leaf order = ``jax.tree.leaves`` order)."""
+        leaves = jax.tree.leaves(self.kv)
+        spec = [(tuple(leaf.shape), leaf.dtype) for leaf in leaves]
+        buf = np.concatenate(
+            [np.asarray(leaf).reshape(-1).view(np.uint8) for leaf in leaves]
+        ) if leaves else np.zeros((0,), np.uint8)
+        return buf, spec
+
+    def from_wire(self, buf: np.ndarray,
+                  spec: List[Tuple[Tuple[int, ...], Any]]) -> "PackedKV":
+        """Rebuild the payload from a wire buffer (same treedef as self)."""
+        leaves, off = [], 0
+        for shape, dtype in spec:
+            n = int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+            leaves.append(jnp.asarray(
+                buf[off:off + n].view(dtype).reshape(shape)))
+            off += n
+        treedef = jax.tree.structure(self.kv)
+        return PackedKV(self.n_tokens, self.page_size,
+                        jax.tree.unflatten(treedef, leaves))
+
+
+def payload_nbytes(payload: Any) -> int:
+    """Wire bytes of a handoff payload: a ``PackedKV`` (page-granular),
+    a raw cache pytree (pooled whole-cache gather), or None."""
+    if payload is None:
+        return 0
+    if isinstance(payload, PackedKV):
+        return payload.nbytes
+    return int(sum(leaf.nbytes for leaf in jax.tree.leaves(payload)))

@@ -227,6 +227,58 @@ def decode_attention(p, x, cache, cfg, positions, *, rope=True,
     return out, {"k": k, "v": v, "pos": spos}
 
 
+def paged_decode_attention(p, x, pool, cfg, positions, page_table, *,
+                           rope=True, window: Optional[int] = None,
+                           impl: str = "xla"):
+    """Single-token decode against the shared page pool.
+
+    x: (B,1,d) with B == n_slots; positions: (B,) int32;
+    pool: {"k","v"} of shape (P, page_size, kv, dh) where the LAST page
+    is the trash page (absorbs writes from FREE slots whose page-table
+    row is cleared); page_table: (B, MP) int32 page ids, -1 empty.
+
+    The new token's K/V land in the page covering ``positions`` (the
+    engine guarantees it is allocated for live slots), then attention
+    runs over the sequence's own pages only — tokens on unallocated
+    table entries or beyond ``positions`` are masked exactly like the
+    pooled path, so greedy tokens match the striped cache bit-for-bit
+    when page_size divides the pool width.  ``impl="pallas"`` routes the
+    gather+softmax through the Pallas paged kernel
+    (``repro.kernels.paged_attention``) instead of XLA gather + sdpa.
+    Returns (out (B,1,d), new_pool)."""
+    B = x.shape[0]
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    pos2 = positions[:, None]                              # (B,1)
+    q, k_new, v_new = _qkv(p, x, cfg, pos2, rope)          # (B,1,·,dh)
+    P, ps = pool["k"].shape[0], pool["k"].shape[1]
+    MP = page_table.shape[1]
+    bidx = jnp.arange(B)
+    pidx = jnp.clip(positions // ps, 0, MP - 1)
+    pg = page_table[bidx, pidx]
+    pg = jnp.where(pg >= 0, pg, P - 1)                     # FREE → trash
+    off = positions % ps
+    k_pool = pool["k"].at[pg, off].set(k_new[:, 0])
+    v_pool = pool["v"].at[pg, off].set(v_new[:, 0])
+    if impl == "pallas":
+        from repro.kernels.paged_attention import \
+            paged_decode_attention as _pallas_paged
+        o = _pallas_paged(q[:, 0], k_pool, v_pool, page_table,
+                          positions + 1, window=window)[:, None]
+    else:
+        pt = jnp.where(page_table >= 0, page_table, P - 1)
+        kg = k_pool[pt].reshape(B, MP * ps, kv, dh)
+        vg = v_pool[pt].reshape(B, MP * ps, kv, dh)
+        t = jnp.arange(MP * ps)[None]                      # positions
+        valid = (t <= pos2) & (jnp.repeat(page_table, ps, axis=1) >= 0)
+        if window is not None:
+            valid &= pos2 - t < window
+        o = _sdpa(q, kg, vg, valid[:, None, :], cfg)
+    out = o.reshape(B, 1, h * dh) @ p["wo"]
+    if cfg.out_bias:
+        out = out + p["bo"]
+    return out, {"k": k_pool, "v": v_pool}
+
+
 def kv_cache_from_prefill(cfg, k, v, positions, max_len, *, window=None):
     """Convert full-sequence prefill K/V (B,S,kv,dh) into a decode cache."""
     B, S = k.shape[0], k.shape[1]

@@ -184,8 +184,13 @@ def _apply_layer_full(p: Params, x, cfg: ModelConfig, entry: str, positions,
 
 # ========================================================== layer (decode)
 def _apply_layer_decode(p: Params, x, cfg: ModelConfig, entry: str,
-                        positions, cache):
-    """Single-token layer application. x: (B,1,d); positions (B,)."""
+                        positions, cache, *, page_table=None,
+                        attn_impl: str = "xla"):
+    """Single-token layer application. x: (B,1,d); positions (B,).
+
+    ``page_table`` switches attention layers to the paged pool layout
+    (``cache`` then holds {"k","v"} page pools instead of per-slot
+    stripes); non-attention state stays slot-indexed either way."""
     mixer, ffn = entry.split(":")
     rope = cfg.rope_pct > 0.0
     h = L.apply_norm(p["norm1"], x, cfg)
@@ -193,8 +198,14 @@ def _apply_layer_decode(p: Params, x, cfg: ModelConfig, entry: str,
         self_cache = cache["self"] if cfg.family == "encdec" else cache
         win = _mixer_window(cfg, mixer)
         # ring caches smaller than max_len imply the windowed fallback
-        a, new_self = L.decode_attention(p["attn"], h, self_cache, cfg,
-                                         positions, rope=rope, window=win)
+        if page_table is not None:
+            a, new_self = L.paged_decode_attention(
+                p["attn"], h, self_cache, cfg, positions, page_table,
+                rope=rope, window=win, impl=attn_impl)
+        else:
+            a, new_self = L.decode_attention(p["attn"], h, self_cache, cfg,
+                                             positions, rope=rope,
+                                             window=win)
         x = x + a
         if cfg.family == "encdec":
             hx = L.apply_norm(p["norm_x"], x, cfg)
@@ -316,11 +327,16 @@ def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray],
 
 
 # ============================================================== decode step
-def decode_step(cfg: ModelConfig, params: Params, cache, tokens, positions
-                ) -> Tuple[jnp.ndarray, Any]:
+def decode_step(cfg: ModelConfig, params: Params, cache, tokens, positions,
+                *, attn_impl: str = "xla") -> Tuple[jnp.ndarray, Any]:
     """tokens: (B,) int32 — last generated token; positions: (B,) int32.
-    Returns (logits (B, V), new_cache)."""
+    Returns (logits (B, V), new_cache).
+
+    A cache carrying a ``"pages"`` table (``init_paged_cache``) decodes
+    attention layers against the shared page pool; otherwise the classic
+    per-slot striped layout is used."""
     B = tokens.shape[0]
+    page_table = cache.get("pages")
     pos2 = positions[:, None]
     x = _embed_tokens(cfg, params, tokens[:, None], pos2)
 
@@ -329,7 +345,9 @@ def decode_step(cfg: ModelConfig, params: Params, cache, tokens, positions
         new_caches = []
         for pi, entry in enumerate(cfg.layer_pattern):
             xc, nc = _apply_layer_decode(lp_tuple[pi], xc, cfg, entry,
-                                         positions, c_tuple[pi])
+                                         positions, c_tuple[pi],
+                                         page_table=page_table,
+                                         attn_impl=attn_impl)
             new_caches.append(nc)
         return xc, tuple(new_caches)
 
@@ -339,11 +357,16 @@ def decode_step(cfg: ModelConfig, params: Params, cache, tokens, positions
     for ri, lp in enumerate(params["rem"]):
         entry = cfg.layer_pattern[ri % cfg.pattern_len]
         x, nc = _apply_layer_decode(lp, x, cfg, entry, positions,
-                                    cache["rem"][ri])
+                                    cache["rem"][ri],
+                                    page_table=page_table,
+                                    attn_impl=attn_impl)
         new_rem.append(nc)
     logits = _unembed(cfg, params, x)[:, 0]
-    return logits, {"trunk": new_trunk, "rem": tuple(new_rem),
-                    "pos": positions + 1}
+    out_cache = {"trunk": new_trunk, "rem": tuple(new_rem),
+                 "pos": positions + 1}
+    if page_table is not None:
+        out_cache["pages"] = page_table
+    return logits, out_cache
 
 
 # ================================================================== caches
@@ -383,6 +406,208 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32):
         for ri in range(cfg.n_remainder_layers))
     return {"trunk": tuple(trunk), "rem": rem,
             "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+# ============================================================ paged caches
+# Attention K/V live in a shared pool of fixed-size token pages addressed
+# through one per-slot page table (shared by every attention layer — the
+# same token occupies the same page slot in each layer's pool, so one
+# allocation covers the whole stack).  Non-attention state (RG-LRU /
+# xLSTM) is O(d) per slot, not O(tokens), and stays slot-indexed.
+def _is_paged_entry(entry: str) -> bool:
+    return entry.split(":")[0] in ("attn", "attn_full")
+
+
+def _layer_entries(cfg: ModelConfig):
+    """Yield ("trunk", i, entry) / ("rem", i, entry) in cache order."""
+    for pi, entry in enumerate(cfg.layer_pattern):
+        yield "trunk", pi, entry
+    for ri in range(cfg.n_remainder_layers):
+        yield "rem", ri, cfg.layer_pattern[ri % cfg.pattern_len]
+
+
+def init_paged_cache(cfg: ModelConfig, n_slots: int, *, n_pages: int,
+                     page_size: int, max_pages: int, dtype=jnp.float32):
+    """Zeroed paged decode cache: per-layer page pools carry ONE extra
+    trash page (index n_pages) that absorbs writes from FREE slots, and
+    the top level holds the shared device page table."""
+    if cfg.family == "encdec":
+        raise ValueError("paged caches cover decoder-only families "
+                         "(cross-attention K/V is fixed-size per slot)")
+    reps = cfg.n_pattern_reps
+    kv, dh = cfg.n_kv_heads, cfg.d_head
+
+    def one(entry):
+        if _is_paged_entry(entry):
+            return {"k": jnp.zeros((n_pages + 1, page_size, kv, dh), dtype),
+                    "v": jnp.zeros((n_pages + 1, page_size, kv, dh), dtype)}
+        return _init_layer_cache(cfg, entry, n_slots, 0, dtype)
+
+    trunk = []
+    for entry in cfg.layer_pattern:
+        trunk.append(jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None], (reps,) + t.shape),
+            one(entry)))
+    rem = tuple(one(cfg.layer_pattern[ri % cfg.pattern_len])
+                for ri in range(cfg.n_remainder_layers))
+    return {"trunk": tuple(trunk), "rem": rem,
+            "pos": jnp.zeros((n_slots,), jnp.int32),
+            "pages": jnp.full((n_slots, max_pages), -1, jnp.int32)}
+
+
+def _page_targets(spos, pt_row, page_size, n_pool_pages):
+    """Map stored positions (W,) to (page, offset) write targets; entries
+    with spos < 0 (empty ring slots) land on the trash page."""
+    pg = pt_row[jnp.clip(spos, 0, None) // page_size]
+    pg = jnp.where((spos >= 0) & (pg >= 0), pg, n_pool_pages - 1)
+    return pg, spos % page_size
+
+
+def paged_prefill_scatter(cfg: ModelConfig, cache, single_cache, slot,
+                          pt_row):
+    """Scatter a freshly-built batch-1 (ring-layout) decode cache into
+    the paged pool for ``slot``.  Pure jnp, traces with a traced slot and
+    page-table row, so the engine fuses prefill + scatter into one
+    executable — and doubles as the pooled→paged converter at adoption
+    time (mode-switch recomputation hands back a ring cache)."""
+    new_cache = {"pos": jax.lax.dynamic_update_slice(
+        cache["pos"], single_cache["pos"].astype(cache["pos"].dtype),
+        (slot,)), "pages": cache["pages"]}
+    trunk, rem = list(cache["trunk"]), list(cache["rem"])
+    for where, i, entry in _layer_entries(cfg):
+        dst = trunk[i] if where == "trunk" else rem[i]
+        src = (single_cache["trunk"] if where == "trunk"
+               else single_cache["rem"])[i]
+        if _is_paged_entry(entry):
+            ps = dst["k"].shape[-3]
+            P = dst["k"].shape[-4] if where == "rem" else dst["k"].shape[1]
+            if where == "trunk":
+                spos = src["pos"][0, 0]                       # (W,)
+                pg, off = _page_targets(spos, pt_row, ps, P)
+                upd = {"k": dst["k"].at[:, pg, off].set(src["k"][:, 0]),
+                       "v": dst["v"].at[:, pg, off].set(src["v"][:, 0])}
+            else:
+                spos = src["pos"][0]
+                pg, off = _page_targets(spos, pt_row, ps, P)
+                upd = {"k": dst["k"].at[pg, off].set(src["k"][0]),
+                       "v": dst["v"].at[pg, off].set(src["v"][0])}
+        else:
+            ax = 1 if where == "trunk" else 0
+            upd = jax.tree.map(
+                lambda d, s: jax.lax.dynamic_update_slice_in_dim(
+                    d, s.astype(d.dtype), slot, axis=ax), dst, src)
+        if where == "trunk":
+            trunk[i] = upd
+        else:
+            rem[i] = upd
+    new_cache["trunk"] = tuple(trunk)
+    new_cache["rem"] = tuple(rem)
+    return new_cache
+
+
+def paged_pack(cfg: ModelConfig, cache, slot: int, page_ids,
+               n_tokens: int, page_size: int):
+    """Gather ``slot``'s live pages (and its slot-state leaves) out of
+    the paged cache into a page-granular handoff payload.  ``page_size``
+    is the owning engine's — it cannot be inferred for models with no
+    attention layers (pure-recurrent caches carry no pools)."""
+    from repro.models.cache_ops import PackedKV
+    ids = jnp.asarray(list(page_ids), jnp.int32)
+    trunk, rem = [], []
+    for where, i, entry in _layer_entries(cfg):
+        src = (cache["trunk"] if where == "trunk" else cache["rem"])[i]
+        if _is_paged_entry(entry):
+            assert src["k"].shape[-3] == page_size, \
+                (src["k"].shape, page_size)
+            if where == "trunk":
+                out = {"k": src["k"][:, ids], "v": src["v"][:, ids]}
+            else:
+                out = {"k": src["k"][ids], "v": src["v"][ids]}
+        else:
+            ax = 1 if where == "trunk" else 0
+            out = jax.tree.map(
+                lambda s: jax.lax.dynamic_slice_in_dim(s, slot, 1, axis=ax),
+                src)
+        (trunk if where == "trunk" else rem).append(out)
+    return PackedKV(int(n_tokens), page_size,
+                    {"trunk": tuple(trunk), "rem": tuple(rem)})
+
+
+def paged_adopt_scatter(cfg: ModelConfig, cache, packed, slot: int,
+                        page_ids):
+    """Copy-on-adopt: write a handed-off ``PackedKV`` into freshly
+    allocated pages of THIS engine's pool (never aliasing the source)."""
+    ids = jnp.asarray(list(page_ids), jnp.int32)
+    new_cache = {"pos": cache["pos"].at[slot].set(packed.n_tokens),
+                 "pages": cache["pages"]}
+    trunk, rem = list(cache["trunk"]), list(cache["rem"])
+    for where, i, entry in _layer_entries(cfg):
+        dst = trunk[i] if where == "trunk" else rem[i]
+        src = packed.kv["trunk" if where == "trunk" else "rem"][i]
+        if _is_paged_entry(entry):
+            if where == "trunk":
+                upd = {"k": dst["k"].at[:, ids].set(
+                           src["k"].astype(dst["k"].dtype)),
+                       "v": dst["v"].at[:, ids].set(
+                           src["v"].astype(dst["v"].dtype))}
+            else:
+                upd = {"k": dst["k"].at[ids].set(
+                           src["k"].astype(dst["k"].dtype)),
+                       "v": dst["v"].at[ids].set(
+                           src["v"].astype(dst["v"].dtype))}
+        else:
+            ax = 1 if where == "trunk" else 0
+            upd = jax.tree.map(
+                lambda d, s: jax.lax.dynamic_update_slice_in_dim(
+                    d, s.astype(d.dtype), slot, axis=ax), dst, src)
+        if where == "trunk":
+            trunk[i] = upd
+        else:
+            rem[i] = upd
+    new_cache["trunk"] = tuple(trunk)
+    new_cache["rem"] = tuple(rem)
+    return new_cache
+
+
+def pack_single_cache(cfg: ModelConfig, single_cache, page_size: int):
+    """Repack a batch-1 (ring-layout) decode cache into the page-granular
+    wire form — ``core.mode_switch.handoff_requests`` uses this so a
+    recomputed cache ships (or adopts) exactly like a live-gathered one."""
+    from repro.models.cache_ops import PackedKV, pages_for
+    n_tokens = int(single_cache["pos"][0])
+    n_pages = max(pages_for(n_tokens, page_size), 1)
+    width = n_pages * page_size
+    trunk, rem = [], []
+    for where, i, entry in _layer_entries(cfg):
+        src = (single_cache["trunk"] if where == "trunk"
+               else single_cache["rem"])[i]
+        if _is_paged_entry(entry):
+            if where == "trunk":
+                spos = src["pos"][0, 0]                        # (W,)
+                idx = jnp.where(spos >= 0, spos, width)        # W → dropped
+
+                def lin(leaf):
+                    arr = jnp.zeros((leaf.shape[0], width + 1) +
+                                    leaf.shape[3:], leaf.dtype)
+                    arr = arr.at[:, idx].set(leaf[:, 0])
+                    return arr[:, :width].reshape(
+                        (leaf.shape[0], n_pages, page_size) + leaf.shape[3:])
+            else:
+                spos = src["pos"][0]
+                idx = jnp.where(spos >= 0, spos, width)
+
+                def lin(leaf):
+                    arr = jnp.zeros((width + 1,) + leaf.shape[2:],
+                                    leaf.dtype)
+                    arr = arr.at[idx].set(leaf[0])
+                    return arr[:width].reshape(
+                        (n_pages, page_size) + leaf.shape[2:])
+            out = {"k": lin(src["k"]), "v": lin(src["v"])}
+        else:
+            out = src                                          # batch-1
+        (trunk if where == "trunk" else rem).append(out)
+    return PackedKV(n_tokens, page_size,
+                    {"trunk": tuple(trunk), "rem": tuple(rem)})
 
 
 # ============================================================== batch maker

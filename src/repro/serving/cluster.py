@@ -37,15 +37,20 @@ from repro.configs.base import ModelConfig
 from repro.core.blocks import (BlockSpec, block_assignment, pack_model,
                                unflatten_params, unpack_block)
 from repro.core.ewl import ScalePlan, plan_scale
+from repro.core.mode_switch import recompute_cost
 from repro.core.partial_exec import (apply_layer_range, embed_from_flat,
                                      head_from_flat, layer_range_of_units)
 from repro.core.pipeline import ExecutionPipeline
+from repro.models import PackedKV, payload_nbytes
 from repro.serving.autoscaler import Autoscaler, LoadSignals, ScaleDown, \
     ScaleUp
-from repro.serving.engine import ContinuousBatchingEngine
+from repro.serving.engine import DEFAULT_PAGE_SIZE, ContinuousBatchingEngine
 from repro.serving.metrics import MetricsLog
+from repro.serving.simulator import SimModel
 from repro.serving.tiers import ClusterState, HardwareProfile, ModelShard
 from repro.serving.workload import Request
+
+DEFAULT_TICK_SECONDS = 0.002     # replay decode clock when no roofline
 
 if TYPE_CHECKING:                                    # pragma: no cover
     # runtime import happens lazily in _on_scale_progress:
@@ -145,11 +150,32 @@ class ScaleReport:
         return self.t_first_serve - self.t_request
 
 
+@dataclasses.dataclass(frozen=True)
+class HandoffDecision:
+    """One request's §4.4 resume-path pricing at a drain/handoff: ship the
+    packed live KV over the link, or recompute it from tokens — whichever
+    the ``HardwareProfile`` prices cheaper.  The audit trail
+    (``LiveCluster.handoff_log``) is what ``bench_paged`` reports."""
+    model: str
+    req_id: int
+    n_tokens: int
+    payload_bytes: int               # wire bytes the payload WOULD move
+    t_transfer: float
+    t_recompute: float
+    chosen: str                      # "transfer" | "recompute" | "fresh"
+
+    @property
+    def t_chosen(self) -> float:
+        return {"transfer": self.t_transfer,
+                "recompute": self.t_recompute}.get(self.chosen, 0.0)
+
+
 # ----------------------------------------------------------------- cluster
 class LiveCluster:
     def __init__(self, *, n_nodes: int, hw: Optional[HardwareProfile] = None,
                  n_slots: int = 4, max_len: int = 96,
-                 max_prefill_per_tick: int = 1):
+                 max_prefill_per_tick: int = 1, paged: bool = True,
+                 page_size: int = DEFAULT_PAGE_SIZE):
         self.hw = hw or HardwareProfile()
         self.state = ClusterState(n_nodes, self.hw)
         self.nodes = self.state.nodes
@@ -157,6 +183,9 @@ class LiveCluster:
         self.n_slots = n_slots
         self.max_len = max_len
         self.max_prefill_per_tick = max_prefill_per_tick
+        self.paged = paged
+        self.page_size = page_size
+        self.handoff_log: List[HandoffDecision] = []
         self.clock = 0.0
         self.models: Dict[str, ModelDeployment] = {}
         self.serving: Dict[str, ModelServing] = {}
@@ -219,7 +248,8 @@ class LiveCluster:
             params = unflatten_params(dep.cfg, shard.flat)
             sv.locals_[node_id] = ContinuousBatchingEngine(
                 dep.cfg, params, n_slots=self.n_slots, max_len=self.max_len,
-                max_prefill_per_tick=self.max_prefill_per_tick)
+                max_prefill_per_tick=self.max_prefill_per_tick,
+                paged=self.paged, page_size=self.page_size)
         return sv.locals_[node_id]
 
     def _pipeline_forward(self, model: str, pipe: ExecutionPipeline,
@@ -358,7 +388,7 @@ class LiveCluster:
                     assert target is not None, \
                         f"{model}: scale_down of the last replica with " \
                         f"in-flight requests"
-                    target.adopt(pairs)
+                    target.adopt(self._price_handoff(model, pairs))
             self.state.release(nd, self.clock, model)
 
     # ------------------------------------------------------------- control
@@ -467,7 +497,46 @@ class LiveCluster:
         target = self.serving[model].locals_.get(pinst.members[0]) \
             or self._adoption_target(model)
         assert target is not None, "mode switch with no local replica"
-        target.adopt(pairs)
+        target.adopt(self._price_handoff(model, pairs))
+
+    def _price_handoff(self, model: str, pairs: Sequence[Tuple]
+                       ) -> List[Tuple]:
+        """Per-request recompute-vs-transfer decision at a handoff (§4.4).
+
+        A payload-carrying pair prices the packed wire bytes over the
+        inter-node link against re-prefilling the tokens on the adopting
+        replica, takes the cheaper path (dropping the payload when
+        recomputation wins — the engine rebuilds it at restore time),
+        and charges the simulated clock; payload-less pairs (λPipe
+        sources) can only recompute.  ``PackedKV`` payloads that DO ship
+        round-trip through their contiguous wire buffer, so the byte
+        movement the log prices is the byte movement that happens."""
+        cfg = self.models[model].cfg
+        out: List[Tuple] = []
+        total = 0.0
+        for seq, payload in pairs:
+            n_tok = max(seq.pos - 1, 0) if seq.generated else 0
+            pbytes = payload_nbytes(payload)
+            t_rec = recompute_cost(cfg, n_tok, 1, self.hw.peak_flops) \
+                if seq.generated else 0.0
+            if payload is None:
+                chosen = "recompute" if seq.generated else "fresh"
+                t_xfer = float("inf") if seq.generated else 0.0
+            else:
+                t_xfer = pbytes / self.hw.link_bw
+                if t_rec < t_xfer:
+                    chosen, payload = "recompute", None
+                else:
+                    chosen = "transfer"
+                    if isinstance(payload, PackedKV):
+                        payload = payload.from_wire(*payload.wire())
+            self.handoff_log.append(HandoffDecision(
+                model, seq.req_id, n_tok, pbytes,
+                t_xfer, t_rec, chosen))
+            total += self.handoff_log[-1].t_chosen
+            out.append((seq, payload))
+        self.clock += total
+        return out
 
     # ------------------------------------------------------------- serving
     def submit(self, model: str, prompt: Sequence[int],
@@ -675,7 +744,7 @@ class LiveCluster:
                     log.on_finish(rid, now, len(seq.generated))
 
     def replay(self, trace: Sequence[Request], *, autoscaler: Autoscaler,
-               tick_seconds: float = 0.002,
+               tick_seconds: Optional[float] = None,
                autoscale_dt: Optional[float] = None,
                tail_seconds: float = 0.0,
                metrics: Optional[MetricsLog] = None,
@@ -689,7 +758,13 @@ class LiveCluster:
         tier) / ``scale_down()`` (release to the host-memory tier), and
         multicast schedule steps execute exactly when their simulated
         time arrives (``step_due``).  Each scheduler tick advances every
-        live sequence one token and costs ``tick_seconds`` on the clock.
+        live sequence one token; its clock cost defaults to the
+        roofline per-token time of the busiest live model
+        (``SimModel.tok_time`` — the same decode pricing the
+        discrete-event simulator uses, so live and simulated TTFT are
+        directly comparable), falling back to ``DEFAULT_TICK_SECONDS``
+        on idle ticks.  Passing ``tick_seconds`` pins the old constant
+        cost instead.
 
         Requests carry real token prompts (``prompt_fn(request)`` or a
         deterministic per-request draw) through the real engines; the
@@ -701,8 +776,24 @@ class LiveCluster:
         the host-memory tier) is observable within the replay.
         """
         log = metrics or MetricsLog()
-        dt_ctrl = autoscale_dt if autoscale_dt is not None \
-            else 5 * tick_seconds
+        # roofline decode clock (None = default): per-model tok_time on
+        # THIS cluster's hardware profile, evaluated per tick below
+        tok_time = {m: SimModel.from_config(dep.cfg).tok_time(self.hw)
+                    for m, dep in self.models.items()}
+        base_dt = tick_seconds if tick_seconds is not None \
+            else DEFAULT_TICK_SECONDS
+        dt_ctrl = autoscale_dt if autoscale_dt is not None else 5 * base_dt
+
+        def tick_cost() -> float:
+            if tick_seconds is not None:
+                return tick_seconds
+            busy = [tok_time[m] for m, sv in self.serving.items()
+                    if any(e.sched.in_flight
+                           for e in sv.locals_.values())
+                    or any(p.engine.sched.in_flight
+                           for p in sv.live_pipes())]
+            return max(busy) if busy else base_dt
+
         arrivals = sorted(trace, key=lambda r: r.t_arrive)
         for r in arrivals:
             assert r.model in self.models, f"unregistered model {r.model}"
@@ -748,7 +839,7 @@ class LiveCluster:
                     break
             else:
                 t_drained = None
-            now += tick_seconds
+            now += tick_cost()
             self.clock = max(self.clock, now)
         else:
             raise RuntimeError(

@@ -4,9 +4,17 @@ The single-replica ("local mode") execution path of λScale's model
 manager.  ``InferenceEngine`` is the static loop kept as the reference
 implementation (and the baseline the continuous-batching benchmark beats);
 ``ContinuousBatchingEngine`` executes the request-level schedule from
-``repro.serving.scheduler`` over a pooled KV cache: new arrivals are
+``repro.serving.scheduler`` over a shared KV store: new arrivals are
 prefilled into free slots while every in-flight sequence keeps decoding,
 and finished sequences free their slot mid-generation.
+
+The KV store is *paged* by default (``paged=True``): attention K/V live
+in a pool of fixed-size token pages addressed through a per-slot page
+table (``repro.models.cache_ops.PageTable``), so resident KV bytes scale
+with live tokens rather than ``slots × max_len``, and a mode-switch
+handoff ships only a sequence's live pages (``PackedKV``).
+``paged=False`` keeps the original per-slot full-length stripes — the
+baseline ``benchmarks/bench_paged.py`` measures against.
 
 Pipelined (execute-while-load) execution uses
 ``repro.distributed.pipeline.PipelinedEngine`` for the trunk; mode
@@ -22,10 +30,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import (batch_axes, cache_gather, cache_scatter,
-                          decode_step, forward, init_cache)
+from repro.models import (PackedKV, PageTable, batch_axes, cache_gather,
+                          cache_scatter, decode_step, forward, init_cache,
+                          init_paged_cache, pack_single_cache,
+                          paged_adopt_scatter, paged_pack,
+                          paged_prefill_scatter, pages_for)
 from repro.serving.scheduler import (DEFAULT_SLOTS, Scheduler, SeqState,
                                      SlotState)
+
+DEFAULT_PAGE_SIZE = 16           # tokens per KV page
 
 
 class InferenceEngine:
@@ -110,6 +123,31 @@ def _cb_executables(cfg: ModelConfig, max_len: int):
     return jax.jit(prefill_scatter), jax.jit(step), axes
 
 
+@functools.lru_cache(maxsize=None)
+def _paged_executables(cfg: ModelConfig, max_len: int, page_size: int,
+                       n_pages: int, max_pages: int, attn_impl: str):
+    """Jitted (prefill+page-scatter, paged decode+argmax) shared across
+    engines of the same pool geometry — the paged analogue of
+    ``_cb_executables``.  The page table rides inside the cache pytree,
+    so allocation changes between ticks never recompile."""
+
+    def prefill_scatter(params, cache, last_tok, tokens, slot):
+        out = forward(cfg, params, {"tokens": tokens}, build_cache=True,
+                      cache_len=max_len, moe_cf=None)
+        first = jnp.argmax(out["logits"][:, -1], -1).astype(jnp.int32)
+        last_tok = jax.lax.dynamic_update_slice(last_tok, first, (slot,))
+        pt_row = cache["pages"][slot]
+        return last_tok, paged_prefill_scatter(cfg, cache, out["cache"],
+                                               slot, pt_row)
+
+    def step(params, cache, last_tok):
+        logits, cache = decode_step(cfg, params, cache, last_tok,
+                                    cache["pos"], attn_impl=attn_impl)
+        return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+    return jax.jit(prefill_scatter), jax.jit(step)
+
+
 class ContinuousBatchingEngine:
     """Slot-pool engine executing the continuous-batching schedule.
 
@@ -127,16 +165,40 @@ class ContinuousBatchingEngine:
 
     def __init__(self, cfg: ModelConfig, params, *,
                  n_slots: int = DEFAULT_SLOTS, max_len: int = 512,
-                 max_prefill_per_tick: int = 1):
+                 max_prefill_per_tick: int = 1, paged: bool = True,
+                 page_size: int = DEFAULT_PAGE_SIZE,
+                 n_pages: Optional[int] = None, attn_impl: str = "xla"):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
-        self.sched = Scheduler(n_slots,
-                               max_prefill_per_tick=max_prefill_per_tick)
-        self.cache = init_cache(cfg, n_slots, max_len)
-        self._prefill_scatter, self._step, self._axes = \
-            _cb_executables(cfg, max_len)
+        # encdec keeps fixed-size cross-attention K/V per slot; it stays
+        # on the striped layout (the runtime excludes it anyway)
+        self.paged = paged and cfg.family != "encdec"
+        if self.paged:
+            self.page_size = page_size
+            self.max_pages = pages_for(max_len, page_size)
+            self.n_pages = n_pages or n_slots * self.max_pages
+            self.pages = PageTable(self.n_pages, page_size, n_slots,
+                                   self.max_pages)
+            self.sched = Scheduler(
+                n_slots, max_prefill_per_tick=max_prefill_per_tick,
+                pages=self.pages)
+            self.cache = init_paged_cache(
+                cfg, n_slots, n_pages=self.n_pages, page_size=page_size,
+                max_pages=self.max_pages)
+            self.cache["pages"] = self.pages.device_table()
+            self._prefill_scatter, self._step = _paged_executables(
+                cfg, max_len, page_size, self.n_pages, self.max_pages,
+                attn_impl)
+            self._axes = None
+        else:
+            self.pages = None
+            self.sched = Scheduler(
+                n_slots, max_prefill_per_tick=max_prefill_per_tick)
+            self.cache = init_cache(cfg, n_slots, max_len)
+            self._prefill_scatter, self._step, self._axes = \
+                _cb_executables(cfg, max_len)
         self._last_tok = jnp.zeros((n_slots,), jnp.int32)
         self._next_id = 0
         # lazily-resolved token ids: (seq, index, slot, device_array).
@@ -161,6 +223,11 @@ class ContinuousBatchingEngine:
             raise ValueError(
                 f"request needs {len(prompt) + max_new_tokens} cache slots "
                 f"but the pool was built with max_len={self.max_len}")
+        if self.paged and pages_for(len(prompt) + max_new_tokens,
+                                    self.page_size) > self.n_pages:
+            raise ValueError(
+                f"request needs more pages than the whole pool holds "
+                f"({self.n_pages} × {self.page_size} tokens)")
         if eos_id is not None:
             self._eager = True
         self.sched.submit(SeqState(req_id, list(prompt), max_new_tokens,
@@ -187,19 +254,53 @@ class ContinuousBatchingEngine:
 
     def _do_prefill(self, slot: int, seq: SeqState) -> None:
         tokens = jnp.asarray(seq.tokens_so_far, jnp.int32)[None]
+        if self.paged:
+            self.pages.ensure(slot, len(seq.tokens_so_far))
+            self.cache["pages"] = self.pages.device_table()
         self._last_tok, self.cache = self._prefill_scatter(
             self.params, self.cache, self._last_tok, tokens, slot)
         self.sched.on_prefilled(slot, self._record(seq, slot,
                                                    self._last_tok))
 
-    def _restore(self, slot: int, seq: SeqState, cache: Any) -> None:
-        """Scatter a handed-off sequence's cache into ``slot`` and stage
-        its last generated token as the next decode input."""
-        if cache is None:       # pipelined source kept no decode cache
-            from repro.core.mode_switch import handoff_requests
-            cache = handoff_requests(self.cfg, self.params, [seq],
-                                     cache_len=self.max_len)[seq.req_id]
-        self.cache = cache_scatter(self.cache, cache, slot, self._axes)
+    def _restore(self, slot: int, seq: SeqState, payload: Any) -> None:
+        """Restore a handed-off sequence's KV state into ``slot`` and
+        stage its last generated token as the next decode input.
+
+        Payload kinds: a ``PackedKV`` (page-granular wire form), a raw
+        batch-1 cache (striped engines), or None — the source kept no
+        decode cache (λPipe) or the adoption path priced recomputation
+        cheaper than the transfer; either way the cache is rebuilt once
+        from the tokens (§4.4) and never re-enters the prefill queue."""
+        if self.paged:
+            if payload is None:
+                from repro.core.mode_switch import handoff_requests
+                payload = handoff_requests(
+                    self.cfg, self.params, [seq], cache_len=self.max_len,
+                    page_size=self.page_size)[seq.req_id]
+            elif not isinstance(payload, PackedKV):
+                payload = pack_single_cache(self.cfg, payload,
+                                            self.page_size)
+            if payload.page_size != self.page_size:
+                raise ValueError(
+                    f"page-size mismatch at adoption: payload "
+                    f"{payload.page_size} vs pool {self.page_size}")
+            self.pages.ensure(slot, payload.n_tokens)
+            self.cache["pages"] = self.pages.device_table()
+            ids = self.pages.slot_pages(slot)[:payload.n_pages]
+            self.cache = paged_adopt_scatter(self.cfg, self.cache, payload,
+                                             slot, ids)
+        else:
+            if payload is None:     # pipelined source kept no decode cache
+                from repro.core.mode_switch import handoff_requests
+                payload = handoff_requests(
+                    self.cfg, self.params, [seq],
+                    cache_len=self.max_len)[seq.req_id]
+            elif isinstance(payload, PackedKV):
+                raise ValueError(
+                    "page-granular payload handed to a striped engine — "
+                    "adopt into a paged engine or hand off with None")
+            self.cache = cache_scatter(self.cache, payload, slot,
+                                       self._axes)
         self._last_tok = self._last_tok.at[slot].set(seq.generated[-1])
 
     def step(self) -> bool:
@@ -230,6 +331,12 @@ class ContinuousBatchingEngine:
         # so freshly-prefilled rows must be scattered after it, not before
         # (their ignored pseudo-step would otherwise corrupt pos/KV).
         if tick.decode:
+            if self.paged:
+                # the incoming token's page must exist before the jitted
+                # step writes K/V at position seq.pos - 1
+                for slot in tick.decode:
+                    self.pages.ensure(slot, self.sched.slots[slot].pos)
+                self.cache["pages"] = self.pages.device_table()
             self._last_tok, self.cache = self._step(self.params, self.cache,
                                                     self._last_tok)
             for slot in tick.decode:
@@ -253,20 +360,33 @@ class ContinuousBatchingEngine:
         self.sched.drain()
 
     def handoff(self) -> List[Tuple[SeqState, Any]]:
-        """Export in-flight sequences with their live slot caches.
+        """Export in-flight sequences with their live KV state.
 
-        Sequences still queued (never prefilled) carry ``None`` caches."""
+        A paged engine packs only each sequence's live pages into a
+        ``PackedKV`` wire payload (page-granular handoff); a striped
+        engine gathers the whole ``max_len`` slot stripe.  Sequences
+        still queued (never prefilled) carry ``None``."""
         self.flush()          # adopters need concrete token ids (§4.4)
         out: List[Tuple[SeqState, Any]] = []
         live = {i: s for i, s in enumerate(self.sched.slots)
                 if s is not None and not s.finished
                 and self.sched.state[i] is not SlotState.FREE}
         for slot, seq in live.items():
-            out.append((seq, cache_gather(self.cache, slot, self._axes)))
+            if self.paged:
+                # the cache holds seq.pos - 1 tokens: the last generated
+                # token is the next decode input, not yet written
+                n_tok = seq.pos - 1
+                ids = self.pages.slot_pages(slot)[
+                    :pages_for(n_tok, self.page_size)]
+                out.append((seq, paged_pack(self.cfg, self.cache, slot,
+                                            ids, n_tok, self.page_size)))
+            else:
+                out.append((seq, cache_gather(self.cache, slot,
+                                              self._axes)))
         have = {s.req_id for s, _ in out}
-        for seq in self.sched.handoff():
+        for seq in self.sched.handoff():     # releases slots (and pages)
             if seq.req_id not in have:
-                # parked sequences keep the cache they arrived with
+                # parked sequences keep the payload they arrived with
                 out.append((seq, self._parked.pop(seq.req_id, None)))
         return out
 
@@ -287,12 +407,25 @@ class ContinuousBatchingEngine:
         started = [(s, c) for s, c in pairs if s.generated]
         fresh = [s for s, c in pairs if not s.generated]
         free = self.sched.free_slots()
-        for (seq, cache), slot in zip(started, free):
-            self._restore(slot, seq, cache)
-            self.sched.adopt(seq, slot)
-        for seq, cache in started[len(free):]:
-            self._parked[seq.req_id] = cache
-            self.sched.enqueue_resume(seq)
+        placed = 0
+        parked_any = False
+        for seq, payload in started:
+            # a paged pool admits by page budget as well as by slot: an
+            # adoption that doesn't fit parks and resumes as pages free
+            # up.  Once one pair parks, every later pair parks too —
+            # same no-small-request-bypass FCFS the scheduler applies on
+            # this PageTable (resume order == handoff order).
+            if not parked_any and placed < len(free) and (
+                    not self.paged
+                    or self.pages.can_admit(seq.total_tokens)):
+                slot = free[placed]
+                placed += 1
+                self._restore(slot, seq, payload)
+                self.sched.adopt(seq, slot)
+            else:
+                parked_any = True
+                self._parked[seq.req_id] = payload
+                self.sched.enqueue_resume(seq)
         for seq in fresh:
             self.sched.submit(seq)
 

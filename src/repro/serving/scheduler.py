@@ -28,7 +28,10 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
+
+if TYPE_CHECKING:                                    # pragma: no cover
+    from repro.models.cache_ops import PageTable
 
 # ------------------------------------------------------ shared constants
 # These ground the discrete-event simulator in the real engine: the
@@ -84,6 +87,13 @@ class SeqState:
         return len(self.prompt) + len(self.generated)
 
     @property
+    def total_tokens(self) -> int:
+        """Worst-case KV footprint (prompt + full generation budget) —
+        what page-aware admission reserves so a live sequence can never
+        hit pool exhaustion mid-decode."""
+        return len(self.prompt) + self.max_new_tokens
+
+    @property
     def tokens_so_far(self) -> List[int]:
         return self.prompt + self.generated
 
@@ -125,9 +135,14 @@ class Scheduler:
     """
 
     def __init__(self, n_slots: int = DEFAULT_SLOTS, *,
-                 max_prefill_per_tick: int = MAX_PREFILL_PER_TICK):
+                 max_prefill_per_tick: int = MAX_PREFILL_PER_TICK,
+                 pages: Optional["PageTable"] = None):
         self.n_slots = n_slots
         self.max_prefill_per_tick = max_prefill_per_tick
+        # paged-KV admission control: a sequence is only admitted (or
+        # resumed) when its worst-case page demand fits beside every
+        # outstanding reservation; slots release their pages on retire
+        self.pages = pages
         self.slots: List[Optional[SeqState]] = [None] * n_slots
         self.state: List[SlotState] = [SlotState.FREE] * n_slots
         self.queue: List[SeqState] = []
@@ -154,6 +169,8 @@ class Scheduler:
         seq.handoffs += 1
         self.slots[slot] = seq
         self.state[slot] = SlotState.DECODE
+        if self.pages is not None:
+            self.pages.reserve(slot, seq.total_tokens)
         self.stats["adopted"] += 1
 
     def enqueue_resume(self, seq: SeqState) -> None:
@@ -194,15 +211,23 @@ class Scheduler:
                     self.stats["retired"] += 1
                 if not self.resume_queue:
                     break
+                if self.pages is not None and not self.pages.can_admit(
+                        self.resume_queue[0].total_tokens):
+                    break                    # pages free up as slots retire
                 seq = self.resume_queue.pop(0)
                 self.adopt(seq, slot)
                 resume.append((slot, seq))
             for slot in self.free_slots():
                 if not self.queue or len(admit) >= self.max_prefill_per_tick:
                     break
+                if self.pages is not None and not self.pages.can_admit(
+                        self.queue[0].total_tokens):
+                    break                    # FCFS: no small-request bypass
                 seq = self.queue.pop(0)
                 self.slots[slot] = seq
                 self.state[slot] = SlotState.PREFILL
+                if self.pages is not None:
+                    self.pages.reserve(slot, seq.total_tokens)
                 admit.append((slot, seq))
                 self.stats["admitted"] += 1
         decode = self.live_slots()
@@ -234,6 +259,8 @@ class Scheduler:
                 self.finished[seq.req_id] = seq
                 self.slots[i] = None
                 self.state[i] = SlotState.FREE
+                if self.pages is not None:
+                    self.pages.release(i)
                 self.stats["retired"] += 1
 
     # --------------------------------------------------------- mode switch
@@ -256,6 +283,8 @@ class Scheduler:
                 out.append(seq)
             self.slots[i] = None
             self.state[i] = SlotState.FREE
+            if self.pages is not None:
+                self.pages.release(i)    # engine packed live pages already
         out.extend(self.resume_queue)
         self.resume_queue = []
         out.extend(self.queue)

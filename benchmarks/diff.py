@@ -14,23 +14,28 @@ the gate (new benchmarks land without a baseline).
 
 ``--watch`` metrics are lower-is-better (latencies, costs): candidate >
 baseline × threshold fails.  ``--watch-up`` metrics are higher-is-better
-(throughputs): candidate < baseline ÷ threshold fails.  A candidate
-value of 0 on a lower-is-better metric or a missing/crashed module never
-counts as a regression of itself.
+(throughputs, SLO attainment): candidate < baseline ÷ threshold fails.
+A candidate value of 0 on a lower-is-better metric or a missing/crashed
+module never counts as a regression of itself.  A NaN on EITHER side of
+a watched metric is a hard failure: NaN compares False against every
+threshold, so it would otherwise sail through the gate exactly when the
+benchmark silently stopped producing the metric (empty percentile list).
 """
 from __future__ import annotations
 
 import argparse
 import glob
 import json
+import math
 import os
 import sys
 from typing import Dict, Tuple
 
 DEFAULT_WATCH = ("p99", "gpu_seconds")
 # relative_throughput is the paged/striped ratio measured in ONE run —
-# machine-independent, unlike absolute tokens/s across CI runners
-DEFAULT_WATCH_UP = ("relative_throughput",)
+# machine-independent, unlike absolute tokens/s across CI runners —
+# and slo_attainment (overall + per-class) is a fraction, equally so
+DEFAULT_WATCH_UP = ("relative_throughput", "slo_attainment")
 
 
 def load_rows(path: str) -> Dict[str, float]:
@@ -75,6 +80,14 @@ def compare(baseline_dir: str, candidate_dir: str, threshold: float,
             if not (down or up) or metric not in cand:
                 continue
             cval = cand[metric]
+            # NaN on either side is a hard failure, not a skip: it means
+            # the benchmark stopped producing the metric (e.g. an empty
+            # percentile list) and every threshold comparison against it
+            # is False — the exact hole a regression gate exists to plug
+            if math.isnan(bval) or math.isnan(cval):
+                regressions.append((name, metric, bval, cval,
+                                    float("nan")))
+                continue
             if bval <= 0.0 or (up and cval <= 0.0):
                 continue
             # "worse-by" factor in the metric's own direction

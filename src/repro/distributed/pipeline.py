@@ -112,14 +112,16 @@ class PipelinedEngine:
     def __init__(self, cfg: ModelConfig,
                  forward_fn: Callable[[jnp.ndarray], jnp.ndarray], *,
                  n_slots: int = DEFAULT_SLOTS, max_len: int = 512,
-                 pad_to: int = 16, max_prefill_per_tick: int = 2):
+                 pad_to: int = 16, max_prefill_per_tick: int = 2,
+                 policy=None):
         self.cfg = cfg
         self.forward_fn = forward_fn
         self.n_slots = n_slots
         self.max_len = max_len
         self.pad_to = pad_to
         self.sched = Scheduler(n_slots,
-                               max_prefill_per_tick=max_prefill_per_tick)
+                               max_prefill_per_tick=max_prefill_per_tick,
+                               policy=policy)
         self._next_id = 0
 
     @classmethod
@@ -139,13 +141,14 @@ class PipelinedEngine:
     def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
                req_id: Optional[int] = None,
                eos_id: Optional[int] = None,
-               t_arrive: Optional[float] = None) -> int:
+               t_arrive: Optional[float] = None, slo=None) -> int:
         if req_id is None:
             req_id = self._next_id
         self._next_id = max(self._next_id, req_id) + 1
         assert len(prompt) + max_new_tokens <= self.max_len
         self.sched.submit(SeqState(req_id, list(prompt), max_new_tokens,
-                                   eos_id=eos_id, t_arrive=t_arrive))
+                                   eos_id=eos_id, t_arrive=t_arrive,
+                                   slo=slo))
         return req_id
 
     # ---------------------------------------------------------- execution

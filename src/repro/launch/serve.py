@@ -10,6 +10,7 @@ calibrated simulator.
   PYTHONPATH=src python -m repro.launch.serve --live --nodes 8 --requests 12
   PYTHONPATH=src python -m repro.launch.serve --autoscale --nodes 6 \
       --requests 16
+  PYTHONPATH=src python -m repro.launch.serve --slo --nodes 6 --requests 20
 """
 from __future__ import annotations
 
@@ -25,9 +26,12 @@ from repro.serving import ContinuousBatchingEngine, InferenceEngine
 from repro.serving.autoscaler import Autoscaler, AutoscalerConfig
 from repro.serving.baselines import POLICIES
 from repro.serving.cluster import LiveCluster
+from repro.serving.placement import PlacementArbiter
+from repro.serving.scheduler import AdmissionPolicy, EDFPolicy
 from repro.serving.simulator import Simulator
 from repro.serving.tiers import HardwareProfile
-from repro.serving.workload import Request, constant_stress
+from repro.serving.workload import (BATCH, INTERACTIVE, Request,
+                                    constant_stress)
 
 
 def mixed_trace(n: int, prompt: int, tokens: int, seed: int = 0):
@@ -163,6 +167,50 @@ def run_autoscale(args) -> None:
           f"(host-warm fallback on {lc._host_payload_nodes('m')})")
 
 
+def run_slo(args) -> None:
+    """Mixed-class demo of the request control plane: the SAME bursty
+    two-model trace (interactive + batch SLO classes) replayed twice on
+    the live runtime — FCFS admission with independent scaling vs EDF
+    admission with the SLO-pressure-weighted placement arbiter — and the
+    per-class TTFT tails / SLO attainment printed side by side.  Greedy
+    tokens are identical across the two runs; only who waits changes."""
+    cfg = reduced(get_config(args.arch), d_model=args.d_model, vocab=2048)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    inter, batch = INTERACTIVE.scaled(0.02), BATCH.scaled(0.02)
+    rng = np.random.default_rng(3)
+    n = max(args.requests, 8)
+    trace = []
+    for i in range(n):       # batch half arrives first — worst for FCFS
+        slo = batch if i < n // 2 else inter
+        out = int(rng.integers(5, 8)) if slo is batch \
+            else int(rng.integers(3, 5))
+        trace.append(Request(i, "a" if i % 2 == 0 else "b",
+                             0.004 + 0.0003 * i, max(4, args.prompt // 16),
+                             out, slo=slo))
+    conditions = {
+        "fcfs+independent": (AdmissionPolicy(),
+                             PlacementArbiter(slo_weighted=False)),
+        "edf+arbiter": (EDFPolicy(), PlacementArbiter()),
+    }
+    for name, (admission, arbiter) in conditions.items():
+        lc = LiveCluster(n_nodes=args.nodes, n_slots=2,
+                         max_len=max(4, args.prompt // 16) + 8 + 8,
+                         admission=admission, arbiter=arbiter)
+        lc.register("a", cfg, params, n_blocks=2, warm_copies=1)
+        lc.register("b", cfg, params, n_blocks=2, warm_copies=1)
+        asc = Autoscaler(AutoscalerConfig(cooldown_up=0.05, keepalive=0.2,
+                                          max_k=2, max_nodes=1))
+        log = lc.replay(trace, autoscaler=asc, tick_seconds=0.002,
+                        tail_seconds=0.1)
+        s = log.summary()
+        p99i = s["ttft_p99_interactive"] * 1e3
+        p99b = s["ttft_p99_batch"] * 1e3
+        print(f"{name:18s} interactive p99={p99i:6.1f}ms  "
+              f"batch p99={p99b:6.1f}ms  "
+              f"attainment={s['slo_attainment']:.2f} "
+              f"(interactive {s['slo_attainment_interactive']:.2f})")
+
+
 def run_sim(args) -> None:
     hw = HardwareProfile()
     reqs = constant_stress(args.rps, args.duration, model=args.model,
@@ -187,6 +235,9 @@ def main() -> None:
     ap.add_argument("--autoscale", action="store_true",
                     help="closed-loop trace replay: autoscaler drives "
                          "scale-up/EWL/scale-down on the live cluster")
+    ap.add_argument("--slo", action="store_true",
+                    help="mixed-SLO-class demo: FCFS+independent vs "
+                         "EDF+placement-arbiter on the same live trace")
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--d-model", type=int, default=256)
     ap.add_argument("--requests", type=int, default=8)
@@ -200,6 +251,8 @@ def main() -> None:
     args = ap.parse_args()
     if args.sim:
         run_sim(args)
+    elif args.slo:
+        run_slo(args)
     elif args.autoscale:
         run_autoscale(args)
     elif args.live:

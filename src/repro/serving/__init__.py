@@ -7,12 +7,18 @@ from repro.serving.cluster import (LiveCluster, ModelDeployment, ScaleReport)
 from repro.serving.metrics import (MetricsLog, RequestMetric, ScaleEvent,
                                    percentile)
 from repro.serving.engine import ContinuousBatchingEngine, InferenceEngine
-from repro.serving.scheduler import (DEFAULT_SLOTS, Scheduler, SeqState,
-                                     SlotState, instance_slot_count)
+from repro.serving.placement import PlacementArbiter, slo_pressure_of
+from repro.serving.scheduler import (ADMISSION_POLICIES, DEFAULT_SLOTS,
+                                     AdmissionPolicy, EDFPolicy, Pending,
+                                     Scheduler, SeqState, SlotState,
+                                     StrictPriorityPolicy,
+                                     instance_slot_count)
 from repro.serving.simulator import SimModel, SimResult, Simulator
 from repro.serving.tiers import (H800, ClusterState, HardwareProfile,
                                  LRUCache, ModelManager, ModelShard)
-from repro.serving.workload import (Request, burstgpt_like, constant_stress,
+from repro.serving.workload import (BATCH, INTERACTIVE, SLO_CLASSES,
+                                    STANDARD, Request, SLOClass, assign_slo,
+                                    burstgpt_like, constant_stress,
                                     multi_model_trace)
 
 __all__ = [
@@ -20,6 +26,8 @@ __all__ = [
     "MetricsLog", "RequestMetric", "ScaleEvent", "percentile",
     "InferenceEngine", "ContinuousBatchingEngine", "Scheduler", "SeqState",
     "SlotState", "DEFAULT_SLOTS", "instance_slot_count",
+    "AdmissionPolicy", "EDFPolicy", "StrictPriorityPolicy", "Pending",
+    "ADMISSION_POLICIES", "PlacementArbiter", "slo_pressure_of",
     "Simulator", "SimResult", "SimModel",
     "LiveCluster", "ModelDeployment", "ScaleReport",
     "HardwareProfile", "H800", "ClusterState", "ModelManager", "ModelShard",
@@ -27,4 +35,6 @@ __all__ = [
     "LambdaScalePolicy", "ServerlessLLMPolicy", "FaaSNetPolicy",
     "NCCLPolicy", "IdealPolicy", "Request", "burstgpt_like",
     "constant_stress", "multi_model_trace",
+    "SLOClass", "SLO_CLASSES", "INTERACTIVE", "STANDARD", "BATCH",
+    "assign_slo",
 ]

@@ -44,6 +44,8 @@ class LoadSignals:
     n_replicas: int = 0              # standalone local replicas
     recent_ttft: Sequence[float] = ()    # TTFTs seen since last decision
     idle_nodes: Sequence[Tuple[int, float]] = ()  # (node, idle seconds)
+    slo_pressure: float = 0.0        # MetricsLog.slo_pressure at decision
+    recent_arrivals: int = 0         # arrivals since the last decision
 
     @property
     def utilization(self) -> float:
@@ -89,6 +91,19 @@ class AutoscalerConfig:
     max_k: int = DEFAULT_MAX_K       # multicast fan-out cap (§4.2)
     min_replicas: int = 0            # floor kept through idle periods
     max_nodes: Optional[int] = None  # per-model fleet cap
+    # SLO-pressure trigger: +1 node while the priority-weighted deadline
+    # urgency of waiting requests (LoadSignals.slo_pressure, fed from
+    # MetricsLog) exceeds the threshold
+    pressure_high: Optional[float] = None
+    # predictive pre-warm (opt-in): Holt/EWMA short-horizon forecast of
+    # the per-model arrival rate (fed from MetricsLog arrivals via
+    # LoadSignals.recent_arrivals).  When the arrivals predicted over
+    # the next ``forecast_horizon`` seconds exceed the currently-free
+    # slot pool, scale up BEFORE the queue forms — replicas are ready at
+    # burst onset instead of paying first-burst TTFT (ROADMAP item).
+    forecast: bool = False
+    forecast_alpha: float = 0.5      # EWMA smoothing for level and trend
+    forecast_horizon: float = 2.0    # seconds of lookahead
 
 
 # -------------------------------------------------------------- controller
@@ -100,6 +115,11 @@ class Autoscaler:
         self._last_up: Dict[str, float] = {}
         self._last_down: Dict[str, float] = {}
         self.decisions: List[Tuple[float, Action]] = []
+        # Holt/EWMA forecast state per model: smoothed arrival rate
+        # (req/s), its trend (req/s²), and the last observation time
+        self._rate: Dict[str, float] = {}
+        self._trend: Dict[str, float] = {}
+        self._last_obs: Dict[str, float] = {}
 
     # ------------------------------------------------------------- policy
     def desired_new_nodes(self, sig: LoadSignals) -> Tuple[int, str]:
@@ -125,10 +145,47 @@ class Autoscaler:
                 percentile(sig.recent_ttft, 95) > c.ttft_slo:
             boost += 1
             reason = (reason + "+slo").lstrip("+")
+        if c.pressure_high is not None and \
+                sig.slo_pressure >= c.pressure_high:
+            boost += 1
+            reason = (reason + "+pressure").lstrip("+")
         n_new = base + boost
         if c.max_nodes is not None:
             n_new = min(n_new, c.max_nodes - sig.nodes_busy)
         return max(n_new, 0), reason
+
+    # ------------------------------------------------------- pre-warming
+    def _forecast_new_nodes(self, now: float, sig: LoadSignals
+                            ) -> int:
+        """Predictive pre-warm (opt-in): update the Holt/EWMA arrival-
+        rate model from this decision window's arrivals and return the
+        extra nodes needed so the arrivals predicted over the horizon
+        fit the free slot pool.  Returns 0 while the forecast sees no
+        shortfall — the reactive triggers still apply."""
+        c = self.config
+        m = sig.model
+        last = self._last_obs.get(m)
+        self._last_obs[m] = now
+        if last is None or now <= last:
+            return 0
+        dt = now - last
+        r = sig.recent_arrivals / dt
+        level = self._rate.get(m, r)
+        trend = self._trend.get(m, 0.0)
+        a = c.forecast_alpha
+        new_level = a * r + (1 - a) * (level + trend * dt)
+        self._trend[m] = a * (new_level - level) / dt + (1 - a) * trend
+        self._rate[m] = new_level
+        # predicted arrivals across the horizon (trend extrapolated,
+        # clamped non-negative) vs the slots currently free
+        h = c.forecast_horizon
+        pred_rate = max(new_level + self._trend[m] * h, 0.0)
+        pred_arrivals = 0.5 * (max(new_level, 0.0) + pred_rate) * h
+        free = max(sig.slots_total - sig.slots_busy, 0)
+        shortfall = pred_arrivals - free
+        if shortfall <= 0:
+            return 0
+        return math.ceil(shortfall / sig.slots_per_instance)
 
     def decide(self, now: float,
                signals: Sequence[LoadSignals]) -> List[Action]:
@@ -138,6 +195,13 @@ class Autoscaler:
         for sig in signals:
             m = sig.model
             n_new, reason = self.desired_new_nodes(sig)
+            if c.forecast:
+                fb = self._forecast_new_nodes(now, sig)
+                if fb > n_new:               # forecast sees more demand
+                    n_new = fb
+                    reason = (reason + "+forecast").lstrip("+")
+                if c.max_nodes is not None:
+                    n_new = min(n_new, c.max_nodes - sig.nodes_busy)
             if n_new > 0 and not sig.scaling_in_flight:
                 # cold start bypasses the cooldown: a model with zero
                 # capacity and waiting requests cannot afford to pace

@@ -31,6 +31,7 @@ from typing import Dict, List
 
 from repro.core.blocks import elbow_block_count
 from repro.core.ewl import plan_scale
+from repro.serving.placement import PlacementArbiter
 from repro.serving.simulator import SimModel
 from repro.serving.tiers import ClusterState, HardwareProfile
 
@@ -44,11 +45,22 @@ class BasePolicy:
     def __init__(self, hw: HardwareProfile, n_blocks: int = DEFAULT_BLOCKS):
         self.hw = hw
         self.n_blocks = n_blocks
+        # destination picking routes through the placement arbiter; the
+        # Simulator overwrites this with its (shared) instance so live
+        # cluster and simulator rank scale-out nodes identically
+        self.arbiter = PlacementArbiter()
 
     # ---------------------------------------------------------------- util
     def _block_time(self, sm: SimModel) -> float:
         return sm.bytes / self.n_blocks / self.hw.link_bw \
             + self.hw.step_overhead
+
+    def _dests(self, cluster: ClusterState, model: str, n: int) -> List[int]:
+        """Arbiter-ranked free destinations (§5 locality) for a
+        scale-out — first-free order when no arbiter is attached."""
+        if self.arbiter is None:
+            return cluster.free_nodes()[:max(n, 0)]
+        return self.arbiter.pick_dests(cluster, model, n)
 
     def _acquire_source(self, cluster: ClusterState, model: str,
                         sm: SimModel, now: float):
@@ -139,7 +151,7 @@ class LambdaScalePolicy(BasePolicy):
             n_new -= 1
         if n_new <= 0:
             return specs
-        dests = cluster.free_nodes()[:n_new]
+        dests = self._dests(cluster, model, n_new)
         if not dests:
             return specs
         k = max(1, min(len(sources), self.max_k))
@@ -211,7 +223,7 @@ class FaaSNetPolicy(BasePolicy):
         specs += s_specs
         if s_specs:
             n_new -= 1
-        dests = cluster.free_nodes()[:n_new]
+        dests = self._dests(cluster, model, n_new)
         tb = self._block_time(sm)
         for i, nd in enumerate(dests):
             cluster.occupy(nd, model, now)
@@ -235,7 +247,7 @@ class NCCLPolicy(BasePolicy):
         specs += s_specs
         if s_specs:
             n_new -= 1
-        dests = cluster.free_nodes()[:n_new]
+        dests = self._dests(cluster, model, n_new)
         if not dests:
             return specs
         tb = self._block_time(sm)
@@ -256,7 +268,7 @@ class IdealPolicy(BasePolicy):
 
     def provision(self, cluster, model, sm, n_new, now):
         specs = []
-        for nd in cluster.free_nodes()[:n_new]:
+        for nd in self._dests(cluster, model, n_new):
             cluster.occupy(nd, model, now)
             specs.append({"nodes": [nd], "kind": "local", "ready": now,
                           "drain_at": None, "owns_gpus": True})

@@ -46,9 +46,11 @@ from repro.serving.autoscaler import Autoscaler, LoadSignals, ScaleDown, \
     ScaleUp
 from repro.serving.engine import DEFAULT_PAGE_SIZE, ContinuousBatchingEngine
 from repro.serving.metrics import MetricsLog
+from repro.serving.placement import PlacementArbiter
+from repro.serving.scheduler import AdmissionPolicy
 from repro.serving.simulator import SimModel
 from repro.serving.tiers import ClusterState, HardwareProfile, ModelShard
-from repro.serving.workload import Request
+from repro.serving.workload import Request, SLOClass
 
 DEFAULT_TICK_SECONDS = 0.002     # replay decode clock when no roofline
 
@@ -98,8 +100,9 @@ class ModelServing:
     locals_: Dict[int, ContinuousBatchingEngine] = dataclasses.field(
         default_factory=dict)
     pipes: List[PipeInstance] = dataclasses.field(default_factory=list)
-    # (req_id, prompt, max_new, t_arrive) waiting for capacity
-    pending: List[Tuple[int, List[int], int, Optional[float]]] = \
+    # (req_id, prompt, max_new, t_arrive, slo) waiting for capacity
+    pending: List[Tuple[int, List[int], int, Optional[float],
+                        Optional[SLOClass]]] = \
         dataclasses.field(default_factory=list)
 
     def live_pipes(self) -> List[PipeInstance]:
@@ -175,7 +178,9 @@ class LiveCluster:
     def __init__(self, *, n_nodes: int, hw: Optional[HardwareProfile] = None,
                  n_slots: int = 4, max_len: int = 96,
                  max_prefill_per_tick: int = 1, paged: bool = True,
-                 page_size: int = DEFAULT_PAGE_SIZE):
+                 page_size: int = DEFAULT_PAGE_SIZE,
+                 admission: Optional[AdmissionPolicy] = None,
+                 arbiter: Optional[PlacementArbiter] = None):
         self.hw = hw or HardwareProfile()
         self.state = ClusterState(n_nodes, self.hw)
         self.nodes = self.state.nodes
@@ -185,6 +190,12 @@ class LiveCluster:
         self.max_prefill_per_tick = max_prefill_per_tick
         self.paged = paged
         self.page_size = page_size
+        # the request control plane: one AdmissionPolicy shared by every
+        # scheduler this cluster creates (FCFS default), one
+        # PlacementArbiter owning node assignment (warm packing, scale
+        # destinations, contention grants, handoff targets)
+        self.admission = admission or AdmissionPolicy()
+        self.arbiter = arbiter or PlacementArbiter()
         self.handoff_log: List[HandoffDecision] = []
         self.clock = 0.0
         self.models: Dict[str, ModelDeployment] = {}
@@ -200,11 +211,16 @@ class LiveCluster:
     # -------------------------------------------------------- registration
     def register(self, name: str, cfg: ModelConfig, params, *,
                  n_blocks: int, hot_nodes: Sequence[int] = (),
-                 warm_nodes: Sequence[int] = ()) -> ModelDeployment:
+                 warm_nodes: Sequence[int] = (),
+                 warm_copies: int = 0) -> ModelDeployment:
         """Pack ``params`` into wire blocks and (optionally) pre-place the
         model: ``hot_nodes`` get a GPU-resident replica with a live local
-        engine, ``warm_nodes`` get the packed blocks in host memory (the
-        §5 locality tier a later ``scale`` starts from)."""
+        engine; host-tier warm copies (the §5 locality tier a later
+        ``scale`` starts from) are packed across nodes by the
+        ``PlacementArbiter`` — ask for ``warm_copies=n`` and the arbiter
+        spreads them over the least-loaded host caches; ``warm_nodes``
+        remains as an explicit pin for tests/benchmarks that need a
+        specific layout."""
         assert cfg.family != "encdec", "runtime covers decoder-only families"
         stacked, specs = pack_model(cfg, params, n_blocks)
         stacked = np.asarray(stacked)
@@ -216,11 +232,18 @@ class LiveCluster:
         for nd in hot_nodes:
             self._load_full(name, nd)
             self._ensure_local(name, nd)
-        for nd in warm_nodes:
+        def warm_up(nd: int) -> None:
             shard = ModelShard(name, dep.n_blocks,
                                buffers={b: dep.registry[b]
                                         for b in range(dep.n_blocks)})
             self.nodes[nd].host_cache.touch(name, self.clock, payload=shard)
+
+        for nd in warm_nodes:
+            warm_up(nd)
+        if warm_copies:      # arbiter packing skips already-warm nodes
+            for nd in self.arbiter.place_warm(self.state, name,
+                                              warm_copies):
+                warm_up(nd)
         return dep
 
     def _unpack(self, dep: ModelDeployment, block_id: int, buf):
@@ -249,7 +272,8 @@ class LiveCluster:
             sv.locals_[node_id] = ContinuousBatchingEngine(
                 dep.cfg, params, n_slots=self.n_slots, max_len=self.max_len,
                 max_prefill_per_tick=self.max_prefill_per_tick,
-                paged=self.paged, page_size=self.page_size)
+                paged=self.paged, page_size=self.page_size,
+                policy=self.admission)
         return sv.locals_[node_id]
 
     def _pipeline_forward(self, model: str, pipe: ExecutionPipeline,
@@ -305,8 +329,10 @@ class LiveCluster:
             self._ready_at[(model, nd)] = t0
         k = max(1, min(k or DEFAULT_MAX_K, len(sources), DEFAULT_MAX_K))
         srcs = sources[:k]
-        dests = [nd for nd in self.state.free_nodes()
-                 if nd not in srcs][:max(n_new, 0)]
+        # arbiter-ranked destinations (§5 locality: warm-for-this-model
+        # first, then least host-cache collateral) instead of first-free
+        dests = self.arbiter.pick_dests(self.state, model, max(n_new, 0),
+                                        exclude=srcs)
         first_serve = [t0] if fresh_source is not None else []
         t_complete = t0
         if dests:
@@ -465,7 +491,8 @@ class LiveCluster:
                 self.models[model].cfg,
                 self._pipeline_forward(model, pipe, sc.node_map),
                 n_slots=self.n_slots, max_len=self.max_len,
-                max_prefill_per_tick=self.max_prefill_per_tick)
+                max_prefill_per_tick=self.max_prefill_per_tick,
+                policy=self.admission)
             sv.pipes.append(PipeInstance(pipe, list(pipe.nodes),
                                          [sc.node_map[n]
                                           for n in pipe.nodes], eng))
@@ -479,14 +506,17 @@ class LiveCluster:
         for pinst in self.serving[sc.model].live_pipes():
             self._drain_pipe(sc.model, pinst)
 
-    def _adoption_target(self, model: str, exclude: Optional[int] = None
+    def _adoption_target(self, model: str, exclude: Optional[int] = None,
+                         members: Sequence[int] = ()
                          ) -> Optional[ContinuousBatchingEngine]:
-        sv = self.serving[model]
-        cands = [(eng.sched.in_flight + eng.sched.pending, nd, eng)
-                 for nd, eng in sv.locals_.items() if nd != exclude]
-        if not cands:
-            return None
-        return min(cands)[2]
+        """Arbiter-ranked adoption target (locality: a replica on a
+        member node of the draining instance keeps the packed KV off the
+        link, a ready replica costs one hop, a still-fetching replica is
+        the last resort)."""
+        return self.arbiter.handoff_target(
+            self.serving[model].locals_, members=members, exclude=exclude,
+            ready=lambda nd: self._ready_at.get((model, nd), 0.0)
+            <= self.clock)
 
     def _drain_pipe(self, model: str, pinst: PipeInstance) -> None:
         pinst.drained = True
@@ -494,8 +524,7 @@ class LiveCluster:
         pairs = pinst.engine.handoff()
         if not pairs:
             return
-        target = self.serving[model].locals_.get(pinst.members[0]) \
-            or self._adoption_target(model)
+        target = self._adoption_target(model, members=pinst.members)
         assert target is not None, "mode switch with no local replica"
         target.adopt(self._price_handoff(model, pairs))
 
@@ -542,23 +571,24 @@ class LiveCluster:
     def submit(self, model: str, prompt: Sequence[int],
                max_new_tokens: int, *,
                req_id: Optional[int] = None,
-               t_arrive: Optional[float] = None) -> int:
+               t_arrive: Optional[float] = None,
+               slo: Optional[SLOClass] = None) -> int:
         """Admit a request for ``model`` into a scheduler-driven serving
         instance (ready pipelines preferred over local replicas during a
         scale-out — offload spikes to the scaling nodes); queued until
         capacity exists when the model has no instance yet.
-        ``t_arrive`` (simulated-clock arrival) rides on the sequence for
-        the metrics layer and survives handoffs."""
+        ``t_arrive`` (simulated-clock arrival) and the ``slo`` class ride
+        on the sequence for the control plane and survive handoffs."""
         if req_id is None:
             req_id = self._next_id
         self._next_id = max(self._next_id, req_id) + 1
         inst = self._route(model)
         if inst is None:
             self.serving[model].pending.append(
-                (req_id, list(prompt), max_new_tokens, t_arrive))
+                (req_id, list(prompt), max_new_tokens, t_arrive, slo))
         else:
             inst.submit(prompt, max_new_tokens, req_id=req_id,
-                        t_arrive=t_arrive)
+                        t_arrive=t_arrive, slo=slo)
         return req_id
 
     def _route(self, model: str):
@@ -600,12 +630,13 @@ class LiveCluster:
         for model, sv in self.serving.items():
             if sv.pending:
                 left = []
-                for rid, prompt, n, t_arr in sv.pending:
+                for rid, prompt, n, t_arr, slo in sv.pending:
                     inst = self._route(model)
                     if inst is None:
-                        left.append((rid, prompt, n, t_arr))
+                        left.append((rid, prompt, n, t_arr, slo))
                     else:
-                        inst.submit(prompt, n, req_id=rid, t_arrive=t_arr)
+                        inst.submit(prompt, n, req_id=rid, t_arrive=t_arr,
+                                    slo=slo)
                 did = did or len(left) < len(sv.pending)
                 sv.pending = left
             for pinst in sv.live_pipes():
@@ -638,10 +669,13 @@ class LiveCluster:
 
     def _load_signals(self, now: float,
                       last_busy: Dict[Tuple[str, int], float],
-                      recent_ttft: Dict[str, List[float]]
+                      recent_ttft: Dict[str, List[float]],
+                      log: Optional[MetricsLog] = None,
+                      arrivals: Optional[Dict[str, int]] = None
                       ) -> List[LoadSignals]:
         """Per-model load as the autoscaler vocabulary (queue depth, slot
-        utilization, committed nodes, idle replicas)."""
+        utilization, committed nodes, idle replicas, SLO pressure from
+        the metrics log, arrivals since the last decision)."""
         signals = []
         for model, sv in self.serving.items():
             queued = len(sv.pending)
@@ -671,26 +705,21 @@ class LiveCluster:
                 self.n_slots, scaling_in_flight=sc is not None,
                 n_replicas=len(sv.locals_),
                 recent_ttft=tuple(recent_ttft.get(model, ())),
-                idle_nodes=idle))
+                idle_nodes=idle,
+                slo_pressure=log.slo_pressure(model, now) if log else 0.0,
+                recent_arrivals=(arrivals or {}).get(model, 0)))
             recent_ttft[model] = []
         return signals
 
     def _apply_actions(self, actions: Sequence, now: float,
                        log: MetricsLog,
-                       last_busy: Dict[Tuple[str, int], float]) -> None:
+                       last_busy: Dict[Tuple[str, int], float],
+                       pressure: Optional[Dict[str, float]] = None) -> None:
+        press = pressure or {}
+        # scale-downs first: they release GPUs back into the free pool
+        # the scale-ups below are about to divide
         for act in actions:
-            if isinstance(act, ScaleUp):
-                # no free node means nothing to add AND no node to
-                # acquire a source on — skip entirely (logging a +0
-                # event would inflate the scale_ups metric)
-                if act.model in self.scales \
-                        or not self.state.free_nodes():
-                    continue
-                rep = self.scale(act.model, act.n_new, k=act.k)
-                log.on_scale(now, "up", act.model,
-                             f"{act.reason}: +{len(rep.dests)} nodes "
-                             f"k={rep.k} tier={rep.source_tier}")
-            elif isinstance(act, ScaleDown):
+            if isinstance(act, ScaleDown):
                 sv = self.serving[act.model]
                 # only idle standalone replicas release (their scheduler
                 # is empty, so no drain/handoff is needed)
@@ -705,6 +734,34 @@ class LiveCluster:
                     log.on_scale(now, "down", act.model,
                                  f"{act.reason}: -{len(nodes)} nodes "
                                  f"→ host tier")
+        # several models asking for nodes in the same decision round
+        # contend for the free pool: the arbiter divides it weighted by
+        # per-model SLO pressure (uncontended asks are granted in full).
+        # A cold model's scale() consumes one extra free node for its
+        # source, so its ask includes it; execution runs highest
+        # pressure first so a low-pressure model's source acquisition
+        # can never eat nodes granted to a more urgent one.
+        ups = {a.model: a for a in actions if isinstance(a, ScaleUp)
+               and a.model not in self.scales}
+        asked = {m: a.n_new + (0 if self.state.gpu_nodes(m) else 1)
+                 for m, a in ups.items()}
+        grants = self.arbiter.arbitrate(asked,
+                                        len(self.state.free_nodes()), press)
+        for m in self.arbiter.up_order(list(ups), press):
+            act = ups[m]
+            # no free node means nothing to add AND no node to acquire
+            # a source on — skip entirely (logging a +0 event would
+            # inflate the scale_ups metric)
+            if not self.state.free_nodes():
+                continue
+            cold = not self.state.gpu_nodes(m)
+            n_new = grants.get(m, act.n_new) - (1 if cold else 0)
+            if n_new < 0 or (n_new == 0 and not cold):
+                continue     # arbitrated away; capacity exists elsewhere
+            rep = self.scale(m, n_new, k=act.k)
+            log.on_scale(now, "up", m,
+                         f"{act.reason}: +{len(rep.dests)} nodes "
+                         f"k={rep.k} tier={rep.source_tier}")
 
     def _observe(self, now: float, log: MetricsLog,
                  recent_ttft: Dict[str, List[float]],
@@ -810,6 +867,7 @@ class LiveCluster:
         harvested: Dict[object, int] = {}
         last_busy: Dict[Tuple[str, int], float] = {}
         recent_ttft: Dict[str, List[float]] = {}
+        arr_count: Dict[str, int] = {}       # arrivals per control window
         idx = 0
         now = self.clock
         next_ctrl = now
@@ -819,14 +877,19 @@ class LiveCluster:
                 r = arrivals[idx]
                 idx += 1
                 prompt = prompt_fn(r)
-                log.on_arrival(r.req_id, r.model, r.t_arrive, len(prompt))
+                log.on_arrival(r.req_id, r.model, r.t_arrive, len(prompt),
+                               slo=r.slo)
+                arr_count[r.model] = arr_count.get(r.model, 0) + 1
                 self.submit(r.model, prompt, r.out_tokens, req_id=r.req_id,
-                            t_arrive=r.t_arrive)
+                            t_arrive=r.t_arrive, slo=r.slo)
             if now >= next_ctrl:
                 next_ctrl = now + dt_ctrl
-                sigs = self._load_signals(now, last_busy, recent_ttft)
+                sigs = self._load_signals(now, last_busy, recent_ttft,
+                                          log, arr_count)
+                arr_count = {}
                 self._apply_actions(autoscaler.decide(now, sigs), now, log,
-                                    last_busy)
+                                    last_busy,
+                                    {s.model: s.slo_pressure for s in sigs})
             self.step_due(now)
             self.tick()
             self._observe(now, log, recent_ttft, seen_first, seen_done,

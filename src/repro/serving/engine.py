@@ -24,7 +24,8 @@ switching hands its live slot state to this engine via
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import (TYPE_CHECKING, Any, Dict, List, Optional, Sequence,
+                    Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -35,8 +36,11 @@ from repro.models import (PackedKV, PageTable, batch_axes, cache_gather,
                           init_paged_cache, pack_single_cache,
                           paged_adopt_scatter, paged_pack,
                           paged_prefill_scatter, pages_for)
-from repro.serving.scheduler import (DEFAULT_SLOTS, Scheduler, SeqState,
-                                     SlotState)
+from repro.serving.scheduler import (DEFAULT_SLOTS, AdmissionPolicy,
+                                     Scheduler, SeqState, SlotState)
+
+if TYPE_CHECKING:                                    # pragma: no cover
+    from repro.serving.workload import SLOClass
 
 DEFAULT_PAGE_SIZE = 16           # tokens per KV page
 
@@ -167,7 +171,8 @@ class ContinuousBatchingEngine:
                  n_slots: int = DEFAULT_SLOTS, max_len: int = 512,
                  max_prefill_per_tick: int = 1, paged: bool = True,
                  page_size: int = DEFAULT_PAGE_SIZE,
-                 n_pages: Optional[int] = None, attn_impl: str = "xla"):
+                 n_pages: Optional[int] = None, attn_impl: str = "xla",
+                 policy: Optional[AdmissionPolicy] = None):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -183,7 +188,7 @@ class ContinuousBatchingEngine:
                                    self.max_pages)
             self.sched = Scheduler(
                 n_slots, max_prefill_per_tick=max_prefill_per_tick,
-                pages=self.pages)
+                pages=self.pages, policy=policy)
             self.cache = init_paged_cache(
                 cfg, n_slots, n_pages=self.n_pages, page_size=page_size,
                 max_pages=self.max_pages)
@@ -195,7 +200,8 @@ class ContinuousBatchingEngine:
         else:
             self.pages = None
             self.sched = Scheduler(
-                n_slots, max_prefill_per_tick=max_prefill_per_tick)
+                n_slots, max_prefill_per_tick=max_prefill_per_tick,
+                policy=policy)
             self.cache = init_cache(cfg, n_slots, max_len)
             self._prefill_scatter, self._step, self._axes = \
                 _cb_executables(cfg, max_len)
@@ -215,7 +221,8 @@ class ContinuousBatchingEngine:
     def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
                req_id: Optional[int] = None,
                eos_id: Optional[int] = None,
-               t_arrive: Optional[float] = None) -> int:
+               t_arrive: Optional[float] = None,
+               slo: Optional["SLOClass"] = None) -> int:
         if req_id is None:
             req_id = self._next_id
         self._next_id = max(self._next_id, req_id) + 1
@@ -231,7 +238,8 @@ class ContinuousBatchingEngine:
         if eos_id is not None:
             self._eager = True
         self.sched.submit(SeqState(req_id, list(prompt), max_new_tokens,
-                                   eos_id=eos_id, t_arrive=t_arrive))
+                                   eos_id=eos_id, t_arrive=t_arrive,
+                                   slo=slo))
         return req_id
 
     # ------------------------------------------------------------ execution
@@ -365,7 +373,9 @@ class ContinuousBatchingEngine:
         A paged engine packs only each sequence's live pages into a
         ``PackedKV`` wire payload (page-granular handoff); a striped
         engine gathers the whole ``max_len`` slot stripe.  Sequences
-        still queued (never prefilled) carry ``None``."""
+        still queued (never prefilled) carry ``None``.  The export list
+        is ordered by the admission policy (who gets the adopting
+        instance's free slots first); FCFS keeps slot order."""
         self.flush()          # adopters need concrete token ids (§4.4)
         out: List[Tuple[SeqState, Any]] = []
         live = {i: s for i, s in enumerate(self.sched.slots)
@@ -383,6 +393,9 @@ class ContinuousBatchingEngine:
             else:
                 out.append((seq, cache_gather(self.cache, slot,
                                               self._axes)))
+        out = [out[i] for i in
+               sorted(range(len(out)),
+                      key=lambda i: self.sched.policy_key(out[i][0], i))]
         have = {s.req_id for s, _ in out}
         for seq in self.sched.handoff():     # releases slots (and pages)
             if seq.req_id not in have:
@@ -406,6 +419,12 @@ class ContinuousBatchingEngine:
             self._eager = True
         started = [(s, c) for s, c in pairs if s.generated]
         fresh = [s for s, c in pairs if not s.generated]
+        # the ADOPTING scheduler's policy decides who takes the free
+        # slots and who parks (stable: FCFS keeps the handoff order)
+        started = [started[i] for i in
+                   sorted(range(len(started)),
+                          key=lambda i: self.sched.policy_key(
+                              started[i][0], i))]
         free = self.sched.free_slots()
         placed = 0
         parked_any = False

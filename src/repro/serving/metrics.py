@@ -19,7 +19,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence
+
+if TYPE_CHECKING:                                    # pragma: no cover
+    from repro.serving.workload import SLOClass
 
 
 def percentile(xs: Sequence[float], q: float) -> float:
@@ -29,6 +32,26 @@ def percentile(xs: Sequence[float], q: float) -> float:
         return float("nan")
     i = min(len(ss) - 1, max(0, int(math.ceil(q / 100 * len(ss))) - 1))
     return ss[i]
+
+
+def slo_pressure_of(queue, now: float) -> float:
+    """SLO pressure of a set of waiting requests (items exposing
+    ``t_arrive`` and ``slo``): priority-weighted fraction of each TTFT
+    deadline already consumed.  Classless requests contribute nothing —
+    this is specifically the *SLO* pressure the placement arbiter and
+    autoscaler weigh, not queue depth (signalled separately).  The ONE
+    definition of the formula: ``MetricsLog.slo_pressure`` (live
+    cluster) and the simulator's queue view both delegate here, so the
+    two runtimes can never drift apart on arbitration weights."""
+    p = 0.0
+    for r in queue:
+        slo = getattr(r, "slo", None)
+        if slo is None:
+            continue
+        waited = max(now - r.t_arrive, 0.0)
+        if math.isfinite(slo.ttft_deadline) and slo.ttft_deadline > 0:
+            p += (1 + slo.priority) * waited / slo.ttft_deadline
+    return p
 
 
 @dataclasses.dataclass
@@ -41,12 +64,21 @@ class RequestMetric:
     t_first_token: Optional[float] = None
     t_finish: Optional[float] = None
     out_tokens: int = 0
+    slo: Optional["SLOClass"] = None
 
     @property
     def ttft(self) -> Optional[float]:
         if self.t_first_token is None:
             return None
         return self.t_first_token - self.t_arrive
+
+    @property
+    def met_slo(self) -> bool:
+        """True iff the first token landed inside the class deadline.
+        A request with no first token yet counts as a miss — a stuck
+        request must not inflate attainment."""
+        return (self.slo is not None and self.ttft is not None
+                and self.ttft <= self.slo.ttft_deadline)
 
     @property
     def e2e(self) -> Optional[float]:
@@ -72,11 +104,21 @@ class MetricsLog:
         self.requests: Dict[int, RequestMetric] = {}
         self.scale_events: List[ScaleEvent] = []
         self.gpu_seconds: float = 0.0
+        self._any_slo = False        # fast path for slo_pressure scans
+        # classed requests not yet known to have a first token — the
+        # working set slo_pressure scans (pruned lazily as first tokens
+        # land, so the scan stays O(waiting), not O(all requests ever))
+        self._open: Dict[str, set] = {}
 
     # ------------------------------------------------------- observations
     def on_arrival(self, req_id: int, model: str, t: float,
-                   prompt_len: int = 0) -> None:
-        self.requests[req_id] = RequestMetric(req_id, model, t, prompt_len)
+                   prompt_len: int = 0,
+                   slo: Optional["SLOClass"] = None) -> None:
+        self.requests[req_id] = RequestMetric(req_id, model, t, prompt_len,
+                                              slo=slo)
+        if slo is not None:
+            self._any_slo = True
+            self._open.setdefault(model, set()).add(req_id)
 
     def on_first_token(self, req_id: int, t: float) -> None:
         m = self.requests[req_id]
@@ -118,10 +160,51 @@ class MetricsLog:
         return [rid for rid, m in self.requests.items()
                 if m.t_finish is None]
 
+    # ------------------------------------------------- SLO-class queries
+    def by_class(self) -> Dict[str, List[RequestMetric]]:
+        """SLO class name → its requests (classless requests excluded)."""
+        out: Dict[str, List[RequestMetric]] = {}
+        for m in self.requests.values():
+            if m.slo is not None:
+                out.setdefault(m.slo.name, []).append(m)
+        return out
+
+    def slo_attainment(self, cls: Optional[str] = None) -> float:
+        """Fraction of classed requests whose first token met their TTFT
+        deadline (optionally restricted to one class); nan when the run
+        carried no classed requests."""
+        ms = [m for m in self.requests.values() if m.slo is not None
+              and (cls is None or m.slo.name == cls)]
+        if not ms:
+            return float("nan")
+        return sum(1 for m in ms if m.met_slo) / len(ms)
+
+    def slo_pressure(self, model: str, now: float) -> float:
+        """Priority-weighted deadline urgency of ``model``'s requests
+        that have arrived but seen no first token by ``now`` — the
+        weight the ``PlacementArbiter`` divides contended free nodes by
+        and an optional autoscaler trigger.  Delegates to
+        ``slo_pressure_of`` (one formula for both runtimes) over the
+        ``_open`` working set, pruning requests whose first token has
+        landed by ``now`` (monotone control clocks make the prune
+        final; a request served in the future stays until then)."""
+        open_ids = self._open.get(model)
+        if not open_ids:
+            return 0.0
+        served = [rid for rid in open_ids
+                  if (m := self.requests[rid]).t_first_token is not None
+                  and m.t_first_token <= now]
+        open_ids.difference_update(served)
+        waiting = [m for rid in open_ids
+                   if (m := self.requests[rid]).t_arrive <= now]
+        return slo_pressure_of(waiting, now)
+
     def summary(self) -> Dict[str, float]:
-        """The comparison row every runtime reports (BENCH_autoscale)."""
+        """The comparison row every runtime reports (BENCH_autoscale).
+        Runs with classed requests additionally report per-class SLO
+        attainment and per-class TTFT p99 (``BENCH_slo``)."""
         ttfts = self.ttfts()
-        return {
+        out = {
             "n_requests": len(self.requests),
             "n_finished": len(self.requests) - len(self.unfinished),
             "ttft_mean": sum(ttfts) / len(ttfts) if ttfts else float("nan"),
@@ -134,6 +217,14 @@ class MetricsLog:
             "scale_ups": float(len(self.scale_ups())),
             "scale_downs": float(len(self.scale_downs())),
         }
+        classed = self.by_class()
+        if classed:
+            out["slo_attainment"] = self.slo_attainment()
+            for name, ms in sorted(classed.items()):
+                out[f"slo_attainment_{name}"] = self.slo_attainment(name)
+                out[f"ttft_p99_{name}"] = percentile(
+                    [m.ttft for m in ms if m.ttft is not None], 99)
+        return out
 
 
 def merge(logs: Sequence[MetricsLog]) -> MetricsLog:
@@ -145,5 +236,8 @@ def merge(logs: Sequence[MetricsLog]) -> MetricsLog:
         out.requests.update(lg.requests)
         out.scale_events.extend(lg.scale_events)
         out.gpu_seconds += lg.gpu_seconds
+        out._any_slo = out._any_slo or lg._any_slo
+        for model, ids in lg._open.items():
+            out._open.setdefault(model, set()).update(ids)
     out.scale_events.sort(key=lambda e: e.t)
     return out

@@ -23,15 +23,27 @@ Draining (mode switch, §4.4): a draining instance admits nothing new;
 its in-flight sequences are exported by ``handoff()`` and re-enter a
 local replica directly in DECODE — the request never re-runs its
 completed prefill phase.
+
+Admission order is a pluggable ``AdmissionPolicy`` (the request control
+plane): FCFS is the baseline, ``EDFPolicy`` orders by absolute TTFT
+deadline (the request's ``SLOClass``), and ``StrictPriorityPolicy``
+orders by class priority with aging so low classes never starve.  The
+policy orders *everything the scheduler orders* — fresh admissions, the
+resume queue of handed-off sequences, and the export order at drain
+time (which decides who gets the adopting instance's free slots first).
+A policy only reorders; it never drops or duplicates, so the admitted
+set is always a permutation of FCFS's (tested).
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
+import math
 from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 
 if TYPE_CHECKING:                                    # pragma: no cover
     from repro.models.cache_ops import PageTable
+    from repro.serving.workload import SLOClass
 
 # ------------------------------------------------------ shared constants
 # These ground the discrete-event simulator in the real engine: the
@@ -50,6 +62,74 @@ def instance_slot_count(kind: str, n_nodes: int,
     a g-stage pipeline keeps all g nodes busy on different in-flight
     batches, so it exposes g× the per-replica slots."""
     return base * (n_nodes if kind == "pipeline" else 1)
+
+
+# ------------------------------------------------------- admission policies
+@dataclasses.dataclass(frozen=True)
+class Pending:
+    """One waiting request as an admission policy sees it — a neutral
+    view both runtimes can build (the ``Scheduler`` from ``SeqState``,
+    the discrete-event simulator from ``workload.Request``):
+
+      ``order``     arrival rank within the queue (FCFS tie-break);
+      ``priority``  SLO class priority (0 when classless);
+      ``deadline``  absolute TTFT deadline (inf when classless);
+      ``waited``    time waited so far, in the caller's clock units
+                    (scheduler ticks or simulated seconds — aging knobs
+                    are in the consumer's units).
+    """
+    order: int
+    priority: int = 0
+    deadline: float = math.inf
+    waited: float = 0.0
+
+
+class AdmissionPolicy:
+    """FCFS baseline: admit in arrival order.  Subclasses override
+    ``key``; the smallest key is admitted next.  Policies are stateless
+    and shareable across every scheduler/instance of a cluster run."""
+    name = "fcfs"
+
+    def key(self, p: Pending) -> Tuple:
+        return (p.order,)
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}()"
+
+
+class EDFPolicy(AdmissionPolicy):
+    """Earliest-deadline-first over the absolute TTFT deadline carried
+    by each request's ``SLOClass``; classless requests (deadline inf)
+    fall back to FCFS order among themselves, behind any deadline."""
+    name = "edf"
+
+    def key(self, p: Pending) -> Tuple:
+        return (p.deadline, p.order)
+
+
+class StrictPriorityPolicy(AdmissionPolicy):
+    """Highest class priority first, with aging: a request's effective
+    priority grows by one level per ``aging`` units waited, so a
+    low-class request outranks fresh high-class arrivals after at most
+    ``(max_priority - priority) * aging`` waiting — the starvation bound
+    the property tests assert.  ``aging=inf`` is pure strict priority."""
+    name = "priority"
+
+    def __init__(self, aging: float = math.inf):
+        assert aging > 0
+        self.aging = aging
+
+    def key(self, p: Pending) -> Tuple:
+        eff = p.priority + (p.waited / self.aging
+                            if math.isfinite(self.aging) else 0.0)
+        return (-eff, p.order)
+
+    def __repr__(self) -> str:
+        return f"StrictPriorityPolicy(aging={self.aging})"
+
+
+ADMISSION_POLICIES = {"fcfs": AdmissionPolicy, "edf": EDFPolicy,
+                      "priority": StrictPriorityPolicy}
 
 
 # -------------------------------------------------------------- sequences
@@ -79,7 +159,21 @@ class SeqState:
     submit_tick: Optional[int] = None
     first_token_tick: Optional[int] = None
     t_arrive: Optional[float] = None     # simulated-clock arrival (metrics)
+    slo: Optional["SLOClass"] = None     # service class (control plane)
     handoffs: int = 0
+
+    @property
+    def deadline(self) -> float:
+        """Absolute TTFT deadline on the simulated clock; inf when the
+        request carries no SLO class (or arrived outside a timed replay,
+        where no clock anchors the deadline)."""
+        if self.slo is None or self.t_arrive is None:
+            return math.inf
+        return self.t_arrive + self.slo.ttft_deadline
+
+    @property
+    def priority(self) -> int:
+        return self.slo.priority if self.slo is not None else 0
 
     @property
     def pos(self) -> int:
@@ -128,17 +222,20 @@ class Tick:
 class Scheduler:
     """Continuous batching over a fixed slot pool.
 
-    The policy is FCFS admission with bounded prefills per tick
-    (``max_prefill_per_tick``) so a queue of new arrivals cannot starve
-    decode of in-flight sequences — each tick advances every live slot
-    by one token *and* admits at most a few newcomers.
+    Admission order is the pluggable ``policy`` (FCFS default); bounded
+    prefills per tick (``max_prefill_per_tick``) mean a queue of new
+    arrivals cannot starve decode of in-flight sequences — each tick
+    advances every live slot by one token *and* admits at most a few
+    newcomers, the policy deciding *which* newcomers.
     """
 
     def __init__(self, n_slots: int = DEFAULT_SLOTS, *,
                  max_prefill_per_tick: int = MAX_PREFILL_PER_TICK,
-                 pages: Optional["PageTable"] = None):
+                 pages: Optional["PageTable"] = None,
+                 policy: Optional[AdmissionPolicy] = None):
         self.n_slots = n_slots
         self.max_prefill_per_tick = max_prefill_per_tick
+        self.policy = policy or AdmissionPolicy()
         # paged-KV admission control: a sequence is only admitted (or
         # resumed) when its worst-case page demand fits beside every
         # outstanding reservation; slots release their pages on retire
@@ -184,6 +281,30 @@ class Scheduler:
             raise RuntimeError("draining instance admits no new requests")
         self.resume_queue.append(seq)
 
+    # ----------------------------------------------------- policy ordering
+    def policy_key(self, seq: SeqState, order: int) -> Tuple:
+        """The admission policy's sort key for ``seq`` at this tick.
+        Waiting time is measured in scheduler ticks (the only clock the
+        scheduler owns); deadlines ride on the sequence itself.
+        ``submit_tick`` is preserved across handoffs for TTFT accounting
+        and belongs to the SOURCE scheduler's clock, so it can exceed
+        this scheduler's ``tick_count`` — clamp to zero rather than let
+        a negative wait rank a handed-off sequence below fresh arrivals
+        (aging restarts at adoption; it never goes backwards)."""
+        waited = max(0, self.tick_count - (seq.submit_tick
+                                           if seq.submit_tick is not None
+                                           else self.tick_count))
+        return self.policy.key(Pending(order, seq.priority,
+                                       seq.deadline, waited))
+
+    def _pick(self, queue: List[SeqState]) -> int:
+        """Index of the sequence the policy admits next (queue list
+        order is arrival order, so the index doubles as the FCFS rank)."""
+        if len(queue) <= 1:
+            return 0
+        return min(range(len(queue)),
+                   key=lambda i: self.policy_key(queue[i], i))
+
     # ------------------------------------------------------------ tick
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.state) if s is SlotState.FREE]
@@ -204,26 +325,28 @@ class Scheduler:
             # that finished *while parked* (its last handed-off token was
             # EOS) retires directly — placing it in DECODE would advance
             # it one token past its stop token.
+            for seq in [s for s in self.resume_queue if s.finished]:
+                self.resume_queue.remove(seq)
+                self.finished[seq.req_id] = seq
+                self.stats["retired"] += 1
             for slot in self.free_slots():
-                while self.resume_queue and self.resume_queue[0].finished:
-                    seq = self.resume_queue.pop(0)
-                    self.finished[seq.req_id] = seq
-                    self.stats["retired"] += 1
                 if not self.resume_queue:
                     break
+                qi = self._pick(self.resume_queue)
                 if self.pages is not None and not self.pages.can_admit(
-                        self.resume_queue[0].total_tokens):
+                        self.resume_queue[qi].total_tokens):
                     break                    # pages free up as slots retire
-                seq = self.resume_queue.pop(0)
+                seq = self.resume_queue.pop(qi)
                 self.adopt(seq, slot)
                 resume.append((slot, seq))
             for slot in self.free_slots():
                 if not self.queue or len(admit) >= self.max_prefill_per_tick:
                     break
+                qi = self._pick(self.queue)
                 if self.pages is not None and not self.pages.can_admit(
-                        self.queue[0].total_tokens):
-                    break                    # FCFS: no small-request bypass
-                seq = self.queue.pop(0)
+                        self.queue[qi].total_tokens):
+                    break        # the policy's head blocks: no size bypass
+                seq = self.queue.pop(qi)
                 self.slots[slot] = seq
                 self.state[slot] = SlotState.PREFILL
                 if self.pages is not None:
@@ -273,9 +396,13 @@ class Scheduler:
         """Export live slot state for adoption by another instance.
 
         Returns every in-flight sequence (queued-but-unstarted ones are
-        included last — they carry no cache and simply re-queue).  The
-        slots are freed; this instance can be torn down once the caller
-        has adopted the sequences."""
+        included last — they carry no cache and simply re-queue).  Each
+        segment is ordered by the admission policy: the adopting
+        instance places sequences into free slots in list order, so the
+        policy decides who resumes decoding first and who parks when
+        the adopter is short on slots (FCFS keeps slot/queue order).
+        The slots are freed; this instance can be torn down once the
+        caller has adopted the sequences."""
         self._retire_finished()      # completed-but-unretired stay here
         out: List[SeqState] = []
         for i, seq in enumerate(self.slots):
@@ -285,11 +412,18 @@ class Scheduler:
             self.state[i] = SlotState.FREE
             if self.pages is not None:
                 self.pages.release(i)    # engine packed live pages already
-        out.extend(self.resume_queue)
+        out = self.handoff_order(out)
+        out.extend(self.handoff_order(self.resume_queue))
         self.resume_queue = []
-        out.extend(self.queue)
+        out.extend(self.handoff_order(self.queue))
         self.queue = []
         return out
+
+    def handoff_order(self, seqs: List[SeqState]) -> List[SeqState]:
+        """Policy-ordered view of ``seqs`` (stable: FCFS is identity)."""
+        return [seqs[i] for i in
+                sorted(range(len(seqs)),
+                       key=lambda i: self.policy_key(seqs[i], i))]
 
     # ------------------------------------------------------------- status
     @property

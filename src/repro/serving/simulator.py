@@ -30,9 +30,10 @@ from repro.configs.base import ModelConfig
 from repro.serving.autoscaler import (Autoscaler, AutoscalerConfig,
                                       LoadSignals, ScaleUp)
 from repro.serving.metrics import MetricsLog, percentile
+from repro.serving.placement import PlacementArbiter, slo_pressure_of
 from repro.serving.scheduler import (DEFAULT_SLOTS, HOP_LATENCY,
-                                     PIPELINE_TOK_OVERHEAD,
-                                     instance_slot_count)
+                                     PIPELINE_TOK_OVERHEAD, AdmissionPolicy,
+                                     Pending, instance_slot_count)
 from repro.serving.tiers import ClusterState, HardwareProfile
 from repro.serving.workload import Request
 
@@ -143,7 +144,9 @@ class Simulator:
                  keepalive: float = 5.0,
                  autoscale_dt: float = 0.25, scale_headroom: int = 0,
                  model_configs: Optional[Dict[str, ModelConfig]] = None,
-                 autoscaler: Optional[Autoscaler] = None):
+                 autoscaler: Optional[Autoscaler] = None,
+                 admission: Optional[AdmissionPolicy] = None,
+                 arbiter: Optional[PlacementArbiter] = None):
         self.policy = policy
         self.hw = hw
         self.cluster = ClusterState(n_nodes, hw)
@@ -157,6 +160,12 @@ class Simulator:
         # sizing this simulator always used
         self.autoscaler = autoscaler or Autoscaler(AutoscalerConfig(
             headroom=scale_headroom, keepalive=keepalive))
+        # the request control plane — the SAME AdmissionPolicy /
+        # PlacementArbiter objects the live cluster consumes, so
+        # policies A/B on identical traces across runtimes
+        self.admission = admission or AdmissionPolicy()
+        self.arbiter = arbiter or PlacementArbiter()
+        self.policy.arbiter = self.arbiter   # dest picking routes through
         self._models: Dict[str, SimModel] = {}
         self._iid = itertools.count()
 
@@ -184,8 +193,10 @@ class Simulator:
         result = SimResult([], [], 0.0, [], len(requests))
         log = result.metrics
         for r in requests:
-            log.on_arrival(r.req_id, r.model, r.t_arrive, r.prompt_len)
+            log.on_arrival(r.req_id, r.model, r.t_arrive, r.prompt_len,
+                           slo=r.slo)
         recent_ttft: Dict[str, List[float]] = {m: [] for m in models}
+        arr_count: Dict[str, int] = {m: 0 for m in models}
 
         evq: List[tuple] = []
         seq = itertools.count()
@@ -206,8 +217,16 @@ class Simulator:
                 if not q:
                     continue
                 sm = self._model(m)
-                remaining: List[Request] = []
-                for req in q:
+                # the admission policy orders the wait queue (the same
+                # Pending view the live Scheduler builds); queue storage
+                # stays in arrival order so FCFS ranks are stable
+                order = sorted(range(len(q)), key=lambda i: (
+                    self.admission.key(Pending(
+                        i, q[i].slo.priority if q[i].slo else 0,
+                        q[i].deadline, now - q[i].t_arrive))))
+                served: set = set()
+                for qi in order:
+                    req = q[qi]
                     cand = None
                     for inst in instances.values():
                         if inst.model != m:
@@ -220,9 +239,9 @@ class Simulator:
                         if cand is None or key < cand[0]:
                             cand = (key, inst, si)
                     if cand is None:
-                        remaining.append(req)
                         continue
                     _, inst, si = cand
+                    served.add(qi)
                     start = max(now, inst.ready_time, inst.slots[si])
                     penalty = (len(inst.nodes) * HOP_LATENCY
                                if inst.kind == "pipeline" else 0.0)
@@ -240,7 +259,7 @@ class Simulator:
                     log.on_finish(req.req_id, done, req.out_tokens)
                     recent_ttft[m].append(ttft - req.t_arrive)
                     push(done, "req_done", (inst.inst_id, req.out_tokens))
-                queues[m] = remaining
+                queues[m] = [r for i, r in enumerate(q) if i not in served]
 
         def provision(m: str, n_new: int, now: float):
             sm = self._model(m)
@@ -268,6 +287,7 @@ class Simulator:
             now, _, kind, payload = heapq.heappop(evq)
             if kind == "arrival":
                 queues[payload.model].append(payload)
+                arr_count[payload.model] += 1
                 dispatch(now)
             elif kind == "req_done":
                 iid, toks = payload
@@ -290,10 +310,11 @@ class Simulator:
                 signals: List[LoadSignals] = []
                 for m, q in queues.items():
                     # only models with demand pressure signal the
-                    # controller (a queue, or recent TTFTs the SLO
-                    # trigger may act on) — headroom must not provision
-                    # capacity for a model receiving no requests
-                    if not q and not recent_ttft[m]:
+                    # controller (a queue, recent TTFTs the SLO trigger
+                    # may act on, or fresh arrivals the forecast tracks)
+                    # — headroom must not provision capacity for a model
+                    # receiving no requests
+                    if not q and not recent_ttft[m] and not arr_count[m]:
                         continue
                     # capacity = occupied nodes (a mid-load λPipe pipeline
                     # counts its member nodes: they are provisioning
@@ -308,11 +329,28 @@ class Simulator:
                     signals.append(LoadSignals(
                         m, len(q), slots_total, slots_busy,
                         len(nodes_busy), self.slots,
-                        recent_ttft=recent_ttft[m]))
+                        recent_ttft=recent_ttft[m],
+                        slo_pressure=slo_pressure_of(q, now),
+                        recent_arrivals=arr_count[m]))
                     recent_ttft[m] = []
-                for act in self.autoscaler.decide(now, signals):
-                    if isinstance(act, ScaleUp):
-                        provision(act.model, act.n_new, now)
+                    arr_count[m] = 0
+                # concurrent scale-ups contend for the free pool: the
+                # arbiter divides it by SLO pressure (an uncontended ask
+                # is granted in full — identical to the pre-arbiter
+                # path), and granted models provision highest-pressure
+                # first so a low-pressure model's cold-start source
+                # never consumes nodes granted to a more urgent one
+                # (here the source IS part of n_new — the policies
+                # decrement it — unlike LiveCluster.scale)
+                ups = {act.model: act
+                       for act in self.autoscaler.decide(now, signals)
+                       if isinstance(act, ScaleUp)}
+                press = {s.model: s.slo_pressure for s in signals}
+                grants = self.arbiter.arbitrate(
+                    {m: a.n_new for m, a in ups.items()},
+                    len(self.cluster.free_nodes()), press)
+                for m in self.arbiter.up_order(list(ups), press):
+                    provision(m, grants.get(m, ups[m].n_new), now)
                 # scale-in (keep-alive via the autoscaler) + GC of
                 # drained pipelines
                 for iid in list(instances):

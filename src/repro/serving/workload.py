@@ -1,15 +1,50 @@
 """Workload generation: bursty request traces in the shape of the paper's
 Fig 1 (Alibaba serverless inference + BurstGPT [48] Azure GPT traces).
 
+Every request can carry an ``SLOClass`` — a TTFT deadline plus a
+priority — the unit of the request control plane: admission policies
+(``serving.scheduler``) order queues by it, the placement arbiter
+(``serving.placement``) weighs scaling contention by it, and the metrics
+layer (``serving.metrics``) reports per-class SLO attainment.  DeepServe
+(arXiv:2501.14417) attaches exactly this kind of per-request class in
+production; traces here emit mixed-class streams via ``slo_mix`` /
+``assign_slo``.
+
 All generators are deterministic given a seed.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
+
+
+# --------------------------------------------------------------- SLO classes
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """A request service class: TTFT deadline (seconds on the runtime's
+    simulated clock) + scheduling priority (higher = more urgent).  The
+    deadline is what EDF admission orders by and what per-class SLO
+    attainment is measured against; the priority is what strict-priority
+    admission and the placement arbiter's pressure weighting use."""
+    name: str
+    ttft_deadline: float
+    priority: int = 0
+
+    def scaled(self, factor: float) -> "SLOClass":
+        """Same class with the deadline scaled — live-replay scenarios
+        run on millisecond clocks where the wall-clock-shaped defaults
+        would never bind."""
+        return dataclasses.replace(
+            self, ttft_deadline=self.ttft_deadline * factor)
+
+
+INTERACTIVE = SLOClass("interactive", ttft_deadline=1.0, priority=2)
+STANDARD = SLOClass("standard", ttft_deadline=5.0, priority=1)
+BATCH = SLOClass("batch", ttft_deadline=30.0, priority=0)
+SLO_CLASSES = {c.name: c for c in (INTERACTIVE, STANDARD, BATCH)}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -19,6 +54,29 @@ class Request:
     t_arrive: float
     prompt_len: int
     out_tokens: int
+    slo: Optional[SLOClass] = None
+
+    @property
+    def deadline(self) -> float:
+        """Absolute TTFT deadline (inf when the request carries no SLO)."""
+        if self.slo is None:
+            return math.inf
+        return self.t_arrive + self.slo.ttft_deadline
+
+
+def assign_slo(reqs: Sequence[Request],
+               slo_mix: Sequence[Tuple[SLOClass, float]], *,
+               seed: int = 0) -> List[Request]:
+    """Stamp each request with a class drawn from weighted ``slo_mix``
+    (deterministic given the seed) — the mixed-class stream the control
+    plane schedules."""
+    rng = np.random.default_rng(seed)
+    classes = [c for c, _ in slo_mix]
+    w = np.asarray([p for _, p in slo_mix], dtype=float)
+    w = w / w.sum()
+    picks = rng.choice(len(classes), size=len(reqs), p=w)
+    return [dataclasses.replace(r, slo=classes[int(i)])
+            for r, i in zip(reqs, picks)]
 
 
 def _poisson_arrivals(rate_fn, duration: float, rng, dt: float = 0.05
@@ -46,9 +104,12 @@ def burstgpt_like(duration: float = 1800.0, *, model: str = "llama2-13b",
                   base_rps: float = 1.0, seed: int = 0,
                   spikes: Optional[Sequence[tuple]] = None,
                   prompt_len: int = 512, out_tokens: int = 32,
+                  slo: Optional[SLOClass] = None,
+                  slo_mix: Optional[Sequence[Tuple[SLOClass, float]]] = None,
                   ) -> List[Request]:
     """30-minute bursty snippet in the shape of BurstGPT (paper §7.5):
-    order-of-magnitude spikes over a low base rate."""
+    order-of-magnitude spikes over a low base rate.  ``slo`` stamps every
+    request with one class; ``slo_mix`` draws weighted mixed classes."""
     rng = np.random.default_rng(seed)
     if spikes is None:
         spikes = [(200, 18, 12 * base_rps), (420, 10, 25 * base_rps),
@@ -61,24 +122,32 @@ def burstgpt_like(duration: float = 1800.0, *, model: str = "llama2-13b",
     for i, t in enumerate(ts):
         pl = int(rng.integers(max(8, prompt_len // 2), prompt_len * 2))
         ot = int(rng.integers(max(4, out_tokens // 2), out_tokens * 2))
-        reqs.append(Request(i, model, float(t), pl, ot))
+        reqs.append(Request(i, model, float(t), pl, ot, slo=slo))
+    if slo_mix is not None:
+        reqs = assign_slo(reqs, slo_mix, seed=seed + 1)
     return reqs
 
 
 def constant_stress(rps: float, duration: float, *, model: str,
                     prompt_len: int = 512, out_tokens: int = 16,
-                    seed: int = 0) -> List[Request]:
+                    seed: int = 0, slo: Optional[SLOClass] = None,
+                    slo_mix: Optional[Sequence[Tuple[SLOClass, float]]] = None,
+                    ) -> List[Request]:
     """Paper §7.3/§7.4 stress test: a burst of concurrent requests."""
     rng = np.random.default_rng(seed)
     ts = _poisson_arrivals(lambda t: rps, duration, rng)
-    return [Request(i, model, float(t), prompt_len, out_tokens)
+    reqs = [Request(i, model, float(t), prompt_len, out_tokens, slo=slo)
             for i, t in enumerate(ts)]
+    if slo_mix is not None:
+        reqs = assign_slo(reqs, slo_mix, seed=seed + 1)
+    return reqs
 
 
 def multi_model_trace(n_models: int, per_model_rpm: float, duration: float,
                       *, seed: int = 0, prompt_len: int = 256,
-                      out_tokens: int = 16,
-                      periodic: bool = False) -> List[Request]:
+                      out_tokens: int = 16, periodic: bool = False,
+                      slo_mix: Optional[Sequence[Tuple[SLOClass, float]]]
+                      = None) -> List[Request]:
     """Paper §2.3 setting: many models, ~1 request/min each (Fig 2/3).
 
     periodic=True reproduces the paper's deterministic rate (staggered
@@ -99,4 +168,7 @@ def multi_model_trace(n_models: int, per_model_rpm: float, duration: float,
             rid += 1
             t += period if periodic else rng.exponential(period)
     reqs.sort(key=lambda r: r.t_arrive)
-    return [dataclasses.replace(r, req_id=i) for i, r in enumerate(reqs)]
+    reqs = [dataclasses.replace(r, req_id=i) for i, r in enumerate(reqs)]
+    if slo_mix is not None:
+        reqs = assign_slo(reqs, slo_mix, seed=seed + 1)
+    return reqs

@@ -1,0 +1,81 @@
+"""Perf-trajectory gate (`benchmarks/diff.py`): direction handling and
+the NaN hole — a NaN on either side of a watched metric used to compare
+False against every threshold and silently pass the regression gate;
+it must be a hard failure instead."""
+import json
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))                     # benchmarks import
+
+from benchmarks.diff import DEFAULT_WATCH_UP, compare, load_rows
+
+
+def _write(dirpath, name, rows):
+    with open(os.path.join(dirpath, f"BENCH_{name}.json"), "w") as f:
+        json.dump({"benchmark": name, "seconds": 1.0,
+                   "rows": [{"name": k, "value": v, "derived": ""}
+                            for k, v in rows.items()]}, f)
+
+
+def _dirs(tmp_path, base_rows, cand_rows, name="x"):
+    base, cand = tmp_path / "base", tmp_path / "cand"
+    base.mkdir(), cand.mkdir()
+    _write(str(base), name, base_rows)
+    _write(str(cand), name, cand_rows)
+    return str(base), str(cand)
+
+
+def test_nan_candidate_is_hard_failure(tmp_path):
+    """The regression this PR fixes: an empty percentile list turns a
+    watched p99 into NaN, and NaN > threshold is False — the gate used
+    to pass it silently."""
+    base, cand = _dirs(tmp_path, {"m/ttft_p99": 1.0},
+                       {"m/ttft_p99": float("nan")})
+    regs, _ = compare(base, cand, 1.5, ("p99",))
+    assert len(regs) == 1
+    mod, metric, bval, cval, ratio = regs[0]
+    assert metric == "m/ttft_p99" and math.isnan(cval) \
+        and math.isnan(ratio)
+
+
+def test_nan_baseline_is_hard_failure(tmp_path):
+    base, cand = _dirs(tmp_path, {"m/ttft_p99": float("nan")},
+                       {"m/ttft_p99": 1.0})
+    regs, _ = compare(base, cand, 1.5, ("p99",))
+    assert len(regs) == 1 and math.isnan(regs[0][2])
+
+
+def test_nan_on_unwatched_metric_ignored(tmp_path):
+    base, cand = _dirs(tmp_path, {"m/other": float("nan")},
+                       {"m/other": float("nan")})
+    regs, _ = compare(base, cand, 1.5, ("p99",))
+    assert regs == []
+
+
+def test_threshold_directions(tmp_path):
+    """Lower-is-better p99 fails on growth; higher-is-better
+    slo_attainment (in the default watch-up set) fails on shrink."""
+    assert "slo_attainment" in DEFAULT_WATCH_UP
+    base, cand = _dirs(tmp_path,
+                       {"m/ttft_p99": 1.0, "m/slo_attainment": 0.9},
+                       {"m/ttft_p99": 1.2, "m/slo_attainment": 0.5})
+    regs, _ = compare(base, cand, 1.5, ("p99",), ("slo_attainment",))
+    assert [(r[1], round(r[4], 2)) for r in regs] == \
+        [("m/slo_attainment", 1.8)]       # 0.9/0.5 beyond 1.5×; p99 ok
+    # both inside the threshold → clean
+    sub = tmp_path / "b"
+    sub.mkdir()
+    base2, cand2 = _dirs(sub,
+                         {"m/ttft_p99": 1.0, "m/slo_attainment": 0.9},
+                         {"m/ttft_p99": 1.2, "m/slo_attainment": 0.8})
+    regs, _ = compare(base2, cand2, 1.5, ("p99",), ("slo_attainment",))
+    assert regs == []
+
+
+def test_load_rows_keeps_numeric_values(tmp_path):
+    _write(str(tmp_path), "y", {"a": 1.5, "b": float("nan")})
+    rows = load_rows(os.path.join(str(tmp_path), "BENCH_y.json"))
+    assert rows["a"] == 1.5 and math.isnan(rows["b"])

@@ -10,7 +10,7 @@ the gate (new benchmarks land without a baseline).
 
     python -m benchmarks.diff --baseline . --candidate bench-out \
         [--threshold 1.5] [--watch p99 --watch gpu_seconds] \
-        [--watch-up relative_throughput]
+        [--watch-up slo_attainment] [--floor relative_throughput=1.0]
 
 ``--watch`` metrics are lower-is-better (latencies, costs): candidate >
 baseline × threshold fails.  ``--watch-up`` metrics are higher-is-better
@@ -20,6 +20,13 @@ module never counts as a regression of itself.  A NaN on EITHER side of
 a watched metric is a hard failure: NaN compares False against every
 threshold, so it would otherwise sail through the gate exactly when the
 benchmark silently stopped producing the metric (empty percentile list).
+
+``--floor`` metrics (``substring=value``) are ABSOLUTE gates on the
+candidate alone: the run fails whenever the candidate value drops below
+the floor (or is NaN), baseline or no baseline — no drift, however
+gradual, can ratchet past one.  ``paged/relative_throughput`` carries a
+default floor of 1.0: the paged engine must never be slower than the
+striped baseline measured in the same run.
 """
 from __future__ import annotations
 
@@ -32,10 +39,13 @@ import sys
 from typing import Dict, Tuple
 
 DEFAULT_WATCH = ("p99", "gpu_seconds")
-# relative_throughput is the paged/striped ratio measured in ONE run —
-# machine-independent, unlike absolute tokens/s across CI runners —
-# and slo_attainment (overall + per-class) is a fraction, equally so
-DEFAULT_WATCH_UP = ("relative_throughput", "slo_attainment")
+# slo_attainment (overall + per-class) is a fraction measured in ONE
+# run — machine-independent, unlike absolute tokens/s across CI runners
+DEFAULT_WATCH_UP = ("slo_attainment",)
+# relative_throughput is the paged/striped ratio from the SAME run, so
+# it gets a hard absolute floor instead of a relative watch: the paged
+# fast path must never lose to the striped engine, full stop
+DEFAULT_FLOORS = {"relative_throughput": 1.0}
 
 
 def load_rows(path: str) -> Dict[str, float]:
@@ -53,15 +63,34 @@ def watched(name: str, patterns) -> bool:
 
 
 def compare(baseline_dir: str, candidate_dir: str, threshold: float,
-            patterns, patterns_up=()) -> Tuple[list, list]:
+            patterns, patterns_up=(), floors=None) -> Tuple[list, list]:
     """Returns (regressions, notes): regressions are
     (module, metric, base, cand, ratio) where ratio > threshold means
-    'worse by that factor' in the metric's own direction."""
+    'worse by that factor' in the metric's own direction.  Floor
+    failures reuse the tuple with base = the floor value."""
+    if floors is None:
+        floors = dict(DEFAULT_FLOORS)
     regressions, notes = [], []
     base_files = {os.path.basename(p): p for p in
                   glob.glob(os.path.join(baseline_dir, "BENCH_*.json"))}
     cand_files = {os.path.basename(p): p for p in
                   glob.glob(os.path.join(candidate_dir, "BENCH_*.json"))}
+    # absolute floors gate the CANDIDATE alone — a brand-new benchmark
+    # with no committed baseline still cannot land below one
+    for name in sorted(cand_files):
+        for metric, cval in sorted(load_rows(cand_files[name]).items()):
+            for pat, floor in sorted(floors.items()):
+                if pat.lower() not in metric.lower():
+                    continue
+                if math.isnan(cval):
+                    regressions.append((name, metric, floor, cval,
+                                        float("nan")))
+                elif cval < floor:
+                    ratio = floor / cval if cval > 0 else float("inf")
+                    regressions.append((name, metric, floor, cval, ratio))
+                else:
+                    notes.append(f"{name}: {metric} {cval:.6g} >= floor "
+                                 f"{floor:g} ok")
     for name in sorted(set(base_files) | set(cand_files)):
         if name not in base_files:
             notes.append(f"{name}: no committed baseline (new benchmark)")
@@ -114,12 +143,27 @@ def main() -> int:
     ap.add_argument("--watch-up", action="append", default=None,
                     help="higher-is-better metric-name substrings "
                          f"(default: {', '.join(DEFAULT_WATCH_UP)})")
+    ap.add_argument("--floor", action="append", default=None,
+                    metavar="SUBSTRING=VALUE",
+                    help="absolute candidate-side floor, e.g. "
+                         "relative_throughput=1.0 (default: "
+                         + ", ".join(f"{k}={v:g}"
+                                     for k, v in DEFAULT_FLOORS.items())
+                         + ")")
     args = ap.parse_args()
     patterns = args.watch or list(DEFAULT_WATCH)
     patterns_up = args.watch_up or list(DEFAULT_WATCH_UP)
+    if args.floor is None:
+        floors = dict(DEFAULT_FLOORS)
+    else:
+        floors = {}
+        for spec in args.floor:
+            pat, _, val = spec.partition("=")
+            floors[pat] = float(val)
 
     regressions, notes = compare(args.baseline, args.candidate,
-                                 args.threshold, patterns, patterns_up)
+                                 args.threshold, patterns, patterns_up,
+                                 floors)
     for note in notes:
         print(f"  {note}")
     if regressions:

@@ -1,0 +1,200 @@
+"""Paged-decode autotuner: sweep page size × KV block shape per model
+config, cache the winner on disk.
+
+The paged fast path has two free geometry knobs the model itself does
+not fix: the allocator's page size (granularity of KV residency AND of
+the kernel's gather blocks) and the fused kernel's sub-page KV block
+edge ``block_k``.  The best choice depends on head counts, head dim,
+slot count and backend — so it is *measured*, not guessed: for each
+candidate the tuner times the actual decode-step primitive (the fused
+Pallas kernel for ``attn_impl="pallas"``, the gather+sdpa expansion the
+XLA path lowers to otherwise) on a synthetic half-full pool of the
+requested geometry, and keeps the fastest.
+
+Results persist as a JSON table so only the FIRST engine built for a
+given (config geometry, pool, impl, backend) pays the sweep:
+
+    location   $REPRO_AUTOTUNE_CACHE, else ~/.cache/repro/autotune.json
+    key        schema-versioned string of every input that can change
+               the winner (head/dim geometry, slots, max_len, impl,
+               jax backend) — bumping ``_SCHEMA`` or changing any key
+               component invalidates the entry, and ``force=True``
+               re-measures in place.
+
+``measure`` is injectable so tests drive the sweep deterministically
+without timing anything.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence, Tuple
+
+_SCHEMA = 1
+DEFAULT_PAGE_SIZES = (8, 16, 32)
+# None = whole page; sub-page blocks only make sense under "pallas"
+DEFAULT_BLOCK_KS = (None, 8)
+
+
+def cache_path() -> str:
+    """Autotune table location (env-overridable for tests/CI)."""
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "autotune.json")
+
+
+def autotune_key(cfg, n_slots: int, max_len: int, attn_impl: str) -> str:
+    """Everything that can change the sweep winner, schema-versioned."""
+    import jax
+    backend = jax.default_backend()
+    return (f"v{_SCHEMA}|{cfg.n_heads}h|{cfg.n_kv_heads}kv|"
+            f"{cfg.d_head}dh|{n_slots}slots|{max_len}len|"
+            f"{attn_impl}|{backend}")
+
+
+@dataclass
+class TuneResult:
+    page_size: int
+    block_k: Optional[int]
+    # full sweep: (page_size, block_k, seconds) per candidate
+    table: List[Tuple[int, Optional[int], float]] = field(
+        default_factory=list)
+
+
+def _load(path: str) -> dict:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        if data.get("schema") == _SCHEMA:
+            return data
+    except (OSError, ValueError):
+        pass
+    return {"schema": _SCHEMA, "entries": {}}
+
+
+def _store(path: str, data: dict) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def _default_measure(cfg, n_slots: int, max_len: int, page_size: int,
+                     block_k: Optional[int], attn_impl: str,
+                     iters: int = 3) -> float:
+    """Seconds per decode-step primitive at this geometry (min over
+    ``iters`` timed calls, compile excluded by a warmup call)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models.cache_ops import pages_for
+
+    H, KVH, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    MP = pages_for(max_len, page_size)
+    P = n_slots * MP + 1                     # + trash page
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((n_slots, H, dh)), jnp.float32)
+    kn = jnp.asarray(rng.standard_normal((n_slots, KVH, dh)), jnp.float32)
+    vn = jnp.asarray(rng.standard_normal((n_slots, KVH, dh)), jnp.float32)
+    k = jnp.zeros((P, page_size, KVH, dh), jnp.float32)
+    v = jnp.zeros((P, page_size, KVH, dh), jnp.float32)
+    # staggered half-full slots, disjoint page lists
+    lens_np = np.minimum(max_len // 2 + np.arange(n_slots), max_len)
+    table_np = np.full((n_slots, MP), -1, np.int32)
+    for s in range(n_slots):
+        npg = pages_for(int(lens_np[s]), page_size)
+        table_np[s, :npg] = np.arange(s * MP, s * MP + npg)
+    table = jnp.asarray(table_np)
+    lens = jnp.asarray(lens_np, jnp.int32)
+
+    if attn_impl == "pallas":
+        from repro.kernels.paged_attention import paged_decode_step
+
+        def run():
+            out, ko, vo = paged_decode_step(q, kn, vn, k, v, table, lens,
+                                            block_k=block_k)
+            return out
+
+    else:
+        bidx = jnp.arange(n_slots)
+
+        @jax.jit
+        def _xla_step(q, kn, vn, k, v, table, lens):
+            n1 = lens - 1
+            pg = table[bidx, jnp.clip(n1 // page_size, 0, MP - 1)]
+            pg = jnp.where(pg >= 0, pg, P - 1)
+            kp = k.at[pg, n1 % page_size].set(kn)
+            vp = v.at[pg, n1 % page_size].set(vn)
+            pt = jnp.where(table >= 0, table, P - 1)
+            kg = kp[pt].reshape(n_slots, MP * page_size, KVH, dh)
+            vg = vp[pt].reshape(n_slots, MP * page_size, KVH, dh)
+            g = H // KVH
+            qg = (q.reshape(n_slots, KVH, g, dh) / math.sqrt(dh))
+            s = jnp.einsum("bkgd,bwkd->bkgw", qg, kg)
+            t = jnp.arange(MP * page_size)[None]
+            valid = ((t < lens[:, None])
+                     & (jnp.repeat(table, page_size, axis=1) >= 0))
+            s = jnp.where(valid[:, None, None, :], s, -1e30)
+            w = jax.nn.softmax(s, axis=-1)
+            return jnp.einsum("bkgw,bwkd->bkgd", w, vg)
+
+        def run():
+            return _xla_step(q, kn, vn, k, v, table, lens)
+
+    run().block_until_ready()                # compile outside the clock
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        run().block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def autotune_paged_decode(cfg, *, n_slots: int, max_len: int,
+                          attn_impl: str = "xla",
+                          page_sizes: Sequence[int] = DEFAULT_PAGE_SIZES,
+                          block_ks: Sequence[Optional[int]] = None,
+                          measure: Optional[Callable] = None,
+                          cache_file: Optional[str] = None,
+                          force: bool = False) -> TuneResult:
+    """Best (page_size, block_k) for this engine geometry, from the disk
+    cache when present (unless ``force``), measured otherwise."""
+    path = cache_file or cache_path()
+    key = autotune_key(cfg, n_slots, max_len, attn_impl)
+    data = _load(path)
+    hit = data["entries"].get(key)
+    if hit is not None and not force:
+        return TuneResult(int(hit["page_size"]),
+                          hit["block_k"],
+                          [tuple(r) for r in hit.get("table", [])])
+    measure = measure or _default_measure
+    if block_ks is None:
+        block_ks = DEFAULT_BLOCK_KS if attn_impl == "pallas" else (None,)
+    table: List[Tuple[int, Optional[int], float]] = []
+    for ps in page_sizes:
+        if max_len % ps:
+            continue          # keep prefill on the page-granular path
+        seen = set()
+        for bk in block_ks:
+            eff = bk if bk is not None and 0 < bk < ps and ps % bk == 0 \
+                else None
+            if eff in seen:
+                continue      # same effective kernel shape
+            seen.add(eff)
+            secs = measure(cfg, n_slots, max_len, ps, eff, attn_impl)
+            table.append((ps, eff, float(secs)))
+    if not table:
+        raise ValueError(f"no candidate page size divides max_len="
+                         f"{max_len} (candidates: {tuple(page_sizes)})")
+    best = min(table, key=lambda r: r[2])
+    data["entries"][key] = {"page_size": best[0], "block_k": best[1],
+                            "table": [list(r) for r in table]}
+    _store(path, data)
+    return TuneResult(best[0], best[1], table)

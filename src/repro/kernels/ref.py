@@ -74,6 +74,47 @@ def paged_decode_attention_ref(q, k_pages, v_pages, page_table, lens, *,
     return o.reshape(B, H, dh).astype(q.dtype)
 
 
+def paged_decode_step_ref(q, k_new, v_new, k_pages, v_pages, page_table,
+                          lens, *, window=None):
+    """Oracle for the fused decode step: append k_new/v_new at position
+    lens-1 of each slot's tail page, then attend.
+
+    q: (B,H,dh); k_new/v_new: (B,KVH,dh); k/v_pages: (P,ps,KVH,dh);
+    lens: (B,) token counts INCLUDING the new token.  Mirrors the fused
+    kernel's semantics exactly: only lens-1 tokens are read from storage
+    and the new token's contribution comes from the operand, so a FREE
+    slot (table row all -1, append lands on the trash page P-1) still
+    gets a well-defined output — softmax over the new token alone.
+    Returns (out (B,H,dh), k_pages', v_pages')."""
+    B, H, dh = q.shape
+    P, ps, KVH, _ = k_pages.shape
+    g = H // KVH
+    MP = page_table.shape[1]
+    n1 = jnp.maximum(lens - 1, 0)
+    bidx = jnp.arange(B)
+    pg = page_table[bidx, jnp.minimum(n1 // ps, MP - 1)]
+    pg = jnp.where(pg >= 0, pg, P - 1)                # FREE → trash
+    k_pages = k_pages.at[pg, n1 % ps].set(k_new.astype(k_pages.dtype))
+    v_pages = v_pages.at[pg, n1 % ps].set(v_new.astype(v_pages.dtype))
+    pt = jnp.where(page_table >= 0, page_table, P - 1)
+    k = k_pages[pt].reshape(B, MP * ps, KVH, dh)
+    v = v_pages[pt].reshape(B, MP * ps, KVH, dh)
+    # stored tokens + the new token concatenated as one extra kv position
+    k = jnp.concatenate([k, k_new[:, None].astype(k.dtype)], axis=1)
+    v = jnp.concatenate([v, v_new[:, None].astype(v.dtype)], axis=1)
+    t = jnp.arange(MP * ps)[None]
+    valid = (t < n1[:, None]) & (jnp.repeat(page_table, ps, axis=1) >= 0)
+    if window is not None:
+        valid &= n1[:, None] - t < window
+    valid = jnp.concatenate([valid, jnp.ones((B, 1), bool)], axis=1)
+    qg = q.reshape(B, KVH, g, dh).astype(jnp.float32) / math.sqrt(dh)
+    s = jnp.einsum("bkgd,bwkd->bkgw", qg, k.astype(jnp.float32))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgw,bwkd->bkgd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, dh).astype(q.dtype), k_pages, v_pages
+
+
 def rglru_scan_ref(a, b, h0):
     """Linear recurrence h_t = a_t * h_{t-1} + b_t (all (B,S,d), h0 (B,d))."""
     B, S, d = a.shape

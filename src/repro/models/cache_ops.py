@@ -103,9 +103,31 @@ def cache_batch_concat(seq_caches: List[Any], axes: Any) -> Any:
 
 
 # ===================================================== paged KV allocation
+DEFAULT_PAGE_SIZE = 16           # tokens per KV page
+
+
 def pages_for(n_tokens: int, page_size: int) -> int:
     """Pages needed to hold ``n_tokens`` (ceil division)."""
     return -(-max(n_tokens, 0) // page_size)
+
+
+def paged_geometry(cfg, n_slots: int, max_len: int, *,
+                   page_size=DEFAULT_PAGE_SIZE, attn_impl: str = "xla"):
+    """Resolve the paged-pool geometry knobs for one engine.
+
+    ``page_size`` may be the string ``"auto"``: the autotuner
+    (``repro.kernels.autotune``) is consulted — its sweep result is
+    cached on disk, so only the first engine built for a given
+    (config, pool, impl) pays the measurement.  Returns
+    (page_size, block_k); ``block_k`` is the Pallas sub-page KV block
+    edge (None = whole page, ignored by the XLA path)."""
+    block_k = None
+    if page_size == "auto":
+        from repro.kernels.autotune import autotune_paged_decode
+        best = autotune_paged_decode(cfg, n_slots=n_slots, max_len=max_len,
+                                     attn_impl=attn_impl)
+        page_size, block_k = best.page_size, best.block_k
+    return int(page_size), block_k
 
 
 class PageTable:
@@ -140,6 +162,7 @@ class PageTable:
         self._version = 0
         self._dev_version = -1
         self._dev_table: Optional[jnp.ndarray] = None
+        self._pending_version: Optional[int] = None
 
     # ------------------------------------------------------------ queries
     @property
@@ -223,7 +246,31 @@ class PageTable:
             # dispatch (computations read their operands asynchronously)
             self._dev_table = jnp.asarray(self._np_table.copy())
             self._dev_version = self._version
+            self._pending_version = None
         return self._dev_table
+
+    def step_operand(self):
+        """Table leaf for a jitted decode-step call: the cached device
+        array when nothing changed, otherwise a raw host copy.  An eager
+        ``jnp.asarray`` here would block the host until the PREVIOUS
+        tick's still-in-flight step drains (CPU-backend transfers
+        serialize with compute), costing hundreds of microseconds per
+        allocator change; handing jit the numpy array lets the transfer
+        ride the call's own async dispatch instead.  Pair with
+        ``note_device`` on the step output so the next clean tick reuses
+        the device-resident copy."""
+        if self._dev_version == self._version:
+            return self._dev_table
+        self._pending_version = self._version
+        return self._np_table.copy()
+
+    def note_device(self, table) -> None:
+        """Record the step output's device-resident table as current (it
+        carries the values of the last ``step_operand`` host copy)."""
+        if self._pending_version is not None:
+            self._dev_table = table
+            self._dev_version = self._pending_version
+            self._pending_version = None
 
     def check_invariants(self) -> None:
         """No page leaked, none double-owned (property tests)."""

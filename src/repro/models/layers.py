@@ -227,9 +227,34 @@ def decode_attention(p, x, cache, cfg, positions, *, rope=True,
     return out, {"k": k, "v": v, "pos": spos}
 
 
+def paged_page_context(page_table, positions, ps: int, P: int,
+                       windows=(None,)):
+    """Precompute the per-tick page-table expansions every attention
+    layer shares: the trash-clamped gather table, the new token's write
+    target, and the validity mask per distinct attention window.  The
+    model's decode step hoists this OUT of the (scanned) trunk so the
+    work happens once per tick instead of once per layer."""
+    B, MP = page_table.shape
+    bidx = jnp.arange(B)
+    pg = page_table[bidx, jnp.clip(positions // ps, 0, MP - 1)]
+    t = jnp.arange(MP * ps)[None]
+    pos2 = positions[:, None]
+    base = (t <= pos2) & (jnp.repeat(page_table, ps, axis=1) >= 0)
+    valid = {}
+    for win in set(windows):
+        valid[win] = base if win is None else base & (pos2 - t < win)
+    return {
+        "pt": jnp.where(page_table >= 0, page_table, P - 1),
+        "pg": jnp.where(pg >= 0, pg, P - 1),               # FREE → trash
+        "off": positions % ps,
+        "valid": valid,
+    }
+
+
 def paged_decode_attention(p, x, pool, cfg, positions, page_table, *,
                            rope=True, window: Optional[int] = None,
-                           impl: str = "xla"):
+                           impl: str = "xla", block_k: Optional[int] = None,
+                           page_ctx=None):
     """Single-token decode against the shared page pool.
 
     x: (B,1,d) with B == n_slots; positions: (B,) int32;
@@ -242,37 +267,35 @@ def paged_decode_attention(p, x, pool, cfg, positions, page_table, *,
     runs over the sequence's own pages only — tokens on unallocated
     table entries or beyond ``positions`` are masked exactly like the
     pooled path, so greedy tokens match the striped cache bit-for-bit
-    when page_size divides the pool width.  ``impl="pallas"`` routes the
-    gather+softmax through the Pallas paged kernel
-    (``repro.kernels.paged_attention``) instead of XLA gather + sdpa.
-    Returns (out (B,1,d), new_pool)."""
+    when page_size divides the pool width.  ``impl="pallas"`` runs the
+    FUSED decode-step kernel (``repro.kernels.paged_attention.
+    paged_decode_step``): append + gather + softmax in one launch with
+    the pools donated in place.  ``page_ctx`` (``paged_page_context``)
+    carries the tick-level table expansions so the XLA path does no
+    per-layer table work.  Returns (out (B,1,d), new_pool)."""
     B = x.shape[0]
     h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
     pos2 = positions[:, None]                              # (B,1)
     q, k_new, v_new = _qkv(p, x, cfg, pos2, rope)          # (B,1,·,dh)
     P, ps = pool["k"].shape[0], pool["k"].shape[1]
     MP = page_table.shape[1]
-    bidx = jnp.arange(B)
-    pidx = jnp.clip(positions // ps, 0, MP - 1)
-    pg = page_table[bidx, pidx]
-    pg = jnp.where(pg >= 0, pg, P - 1)                     # FREE → trash
-    off = positions % ps
-    k_pool = pool["k"].at[pg, off].set(k_new[:, 0])
-    v_pool = pool["v"].at[pg, off].set(v_new[:, 0])
     if impl == "pallas":
-        from repro.kernels.paged_attention import \
-            paged_decode_attention as _pallas_paged
-        o = _pallas_paged(q[:, 0], k_pool, v_pool, page_table,
-                          positions + 1, window=window)[:, None]
+        from repro.kernels.paged_attention import paged_decode_step
+        o, k_pool, v_pool = paged_decode_step(
+            q[:, 0], k_new[:, 0], v_new[:, 0], pool["k"], pool["v"],
+            page_table, positions + 1, window=window, block_k=block_k)
+        o = o[:, None]
     else:
-        pt = jnp.where(page_table >= 0, page_table, P - 1)
-        kg = k_pool[pt].reshape(B, MP * ps, kv, dh)
-        vg = v_pool[pt].reshape(B, MP * ps, kv, dh)
-        t = jnp.arange(MP * ps)[None]                      # positions
-        valid = (t <= pos2) & (jnp.repeat(page_table, ps, axis=1) >= 0)
-        if window is not None:
-            valid &= pos2 - t < window
-        o = _sdpa(q, kg, vg, valid[:, None, :], cfg)
+        if page_ctx is None:
+            page_ctx = paged_page_context(page_table, positions, ps, P,
+                                          windows=(window,))
+        k_pool = pool["k"].at[page_ctx["pg"], page_ctx["off"]].set(
+            k_new[:, 0])
+        v_pool = pool["v"].at[page_ctx["pg"], page_ctx["off"]].set(
+            v_new[:, 0])
+        kg = k_pool[page_ctx["pt"]].reshape(B, MP * ps, kv, dh)
+        vg = v_pool[page_ctx["pt"]].reshape(B, MP * ps, kv, dh)
+        o = _sdpa(q, kg, vg, page_ctx["valid"][window][:, None, :], cfg)
     out = o.reshape(B, 1, h * dh) @ p["wo"]
     if cfg.out_bias:
         out = out + p["bo"]

@@ -185,12 +185,15 @@ def _apply_layer_full(p: Params, x, cfg: ModelConfig, entry: str, positions,
 # ========================================================== layer (decode)
 def _apply_layer_decode(p: Params, x, cfg: ModelConfig, entry: str,
                         positions, cache, *, page_table=None,
-                        attn_impl: str = "xla"):
+                        attn_impl: str = "xla", block_k=None,
+                        page_ctx=None):
     """Single-token layer application. x: (B,1,d); positions (B,).
 
     ``page_table`` switches attention layers to the paged pool layout
     (``cache`` then holds {"k","v"} page pools instead of per-slot
-    stripes); non-attention state stays slot-indexed either way."""
+    stripes); non-attention state stays slot-indexed either way.
+    ``page_ctx`` is the tick-level table expansion shared by every
+    paged layer (hoisted out of the trunk scan by ``decode_step``)."""
     mixer, ffn = entry.split(":")
     rope = cfg.rope_pct > 0.0
     h = L.apply_norm(p["norm1"], x, cfg)
@@ -201,7 +204,8 @@ def _apply_layer_decode(p: Params, x, cfg: ModelConfig, entry: str,
         if page_table is not None:
             a, new_self = L.paged_decode_attention(
                 p["attn"], h, self_cache, cfg, positions, page_table,
-                rope=rope, window=win, impl=attn_impl)
+                rope=rope, window=win, impl=attn_impl, block_k=block_k,
+                page_ctx=page_ctx)
         else:
             a, new_self = L.decode_attention(p["attn"], h, self_cache, cfg,
                                              positions, rope=rope,
@@ -327,16 +331,56 @@ def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray],
 
 
 # ============================================================== decode step
+def _paged_pool_dims(cfg: ModelConfig, cache):
+    """(P, page_size) of the first paged pool, or None (no attention)."""
+    for where, i, entry in _layer_entries(cfg):
+        if _is_paged_entry(entry):
+            leaf = (cache["trunk"] if where == "trunk"
+                    else cache["rem"])[i]["k"]
+            return leaf.shape[-4], leaf.shape[-3]
+    return None
+
+
 def decode_step(cfg: ModelConfig, params: Params, cache, tokens, positions,
-                *, attn_impl: str = "xla") -> Tuple[jnp.ndarray, Any]:
+                *, attn_impl: str = "xla",
+                block_k=None, ctx_pages=None) -> Tuple[jnp.ndarray, Any]:
     """tokens: (B,) int32 — last generated token; positions: (B,) int32.
     Returns (logits (B, V), new_cache).
 
     A cache carrying a ``"pages"`` table (``init_paged_cache``) decodes
     attention layers against the shared page pool; otherwise the classic
-    per-slot striped layout is used."""
+    per-slot striped layout is used.  The page-table expansion (gather
+    indices, write target, validity mask per distinct window) is
+    computed ONCE here and threaded through the trunk scan — it is
+    loop-invariant, so hoisting it keeps the per-layer work at the
+    attention math itself.  ``block_k`` tunes the Pallas fused kernel's
+    sub-page KV block (``attn_impl="pallas"``; autotuned via
+    ``repro.kernels.autotune``).
+
+    ``ctx_pages`` (static) bounds the attended context to the first
+    ``ctx_pages`` page-table columns: with pages allocated on demand,
+    attention work can scale with the LIVE sequence lengths instead of
+    ``max_pages``, so the caller (the engine, which knows every live
+    slot's position) passes the max allocated page count this tick.
+    Every live token sits inside those pages by construction and FREE
+    rows stay ``-1`` → trash page, so outputs are bit-identical to the
+    full-table walk."""
     B = tokens.shape[0]
     page_table = cache.get("pages")
+    ctx_table = page_table
+    if (page_table is not None and ctx_pages is not None
+            and ctx_pages < page_table.shape[1]):
+        ctx_table = page_table[:, :ctx_pages]
+    page_ctx = None
+    if page_table is not None and attn_impl != "pallas":
+        dims = _paged_pool_dims(cfg, cache)
+        if dims is not None:
+            P, ps = dims
+            wins = tuple({_mixer_window(cfg, entry.split(":")[0])
+                          for _, _, entry in _layer_entries(cfg)
+                          if _is_paged_entry(entry)})
+            page_ctx = L.paged_page_context(ctx_table, positions, ps, P,
+                                            windows=wins)
     pos2 = positions[:, None]
     x = _embed_tokens(cfg, params, tokens[:, None], pos2)
 
@@ -346,8 +390,10 @@ def decode_step(cfg: ModelConfig, params: Params, cache, tokens, positions,
         for pi, entry in enumerate(cfg.layer_pattern):
             xc, nc = _apply_layer_decode(lp_tuple[pi], xc, cfg, entry,
                                          positions, c_tuple[pi],
-                                         page_table=page_table,
-                                         attn_impl=attn_impl)
+                                         page_table=ctx_table,
+                                         attn_impl=attn_impl,
+                                         block_k=block_k,
+                                         page_ctx=page_ctx)
             new_caches.append(nc)
         return xc, tuple(new_caches)
 
@@ -358,8 +404,10 @@ def decode_step(cfg: ModelConfig, params: Params, cache, tokens, positions,
         entry = cfg.layer_pattern[ri % cfg.pattern_len]
         x, nc = _apply_layer_decode(lp, x, cfg, entry, positions,
                                     cache["rem"][ri],
-                                    page_table=page_table,
-                                    attn_impl=attn_impl)
+                                    page_table=ctx_table,
+                                    attn_impl=attn_impl,
+                                    block_k=block_k,
+                                    page_ctx=page_ctx)
         new_rem.append(nc)
     logits = _unembed(cfg, params, x)[:, 0]
     out_cache = {"trunk": new_trunk, "rem": tuple(new_rem),
@@ -426,14 +474,37 @@ def _layer_entries(cfg: ModelConfig):
         yield "rem", ri, cfg.layer_pattern[ri % cfg.pattern_len]
 
 
-def init_paged_cache(cfg: ModelConfig, n_slots: int, *, n_pages: int,
-                     page_size: int, max_pages: int, dtype=jnp.float32):
+def init_paged_cache(cfg: ModelConfig, n_slots: int, *,
+                     page_size=None, n_pages: Optional[int] = None,
+                     max_pages: Optional[int] = None,
+                     max_len: Optional[int] = None, dtype=jnp.float32,
+                     attn_impl: str = "xla"):
     """Zeroed paged decode cache: per-layer page pools carry ONE extra
     trash page (index n_pages) that absorbs writes from FREE slots, and
-    the top level holds the shared device page table."""
+    the top level holds the shared device page table.
+
+    ``page_size`` may be ``"auto"`` (requires ``max_len``): the pool
+    geometry is resolved through ``cache_ops.paged_geometry``, which
+    consults the autotuner's cached sweep.  ``n_pages``/``max_pages``
+    default from ``max_len`` when omitted."""
     if cfg.family == "encdec":
         raise ValueError("paged caches cover decoder-only families "
                          "(cross-attention K/V is fixed-size per slot)")
+    from repro.models.cache_ops import (DEFAULT_PAGE_SIZE, paged_geometry,
+                                        pages_for)
+    if page_size is None:
+        page_size = DEFAULT_PAGE_SIZE
+    if page_size == "auto" or max_pages is None or n_pages is None:
+        if max_len is None:
+            raise ValueError("page_size='auto' or defaulted n_pages/"
+                             "max_pages need max_len")
+        page_size, _ = paged_geometry(cfg, n_slots, max_len,
+                                      page_size=page_size,
+                                      attn_impl=attn_impl)
+        if max_pages is None:
+            max_pages = pages_for(max_len, page_size)
+        if n_pages is None:
+            n_pages = n_slots * max_pages
     reps = cfg.n_pattern_reps
     kv, dh = cfg.n_kv_heads, cfg.d_head
 
@@ -464,12 +535,19 @@ def _page_targets(spos, pt_row, page_size, n_pool_pages):
 
 
 def paged_prefill_scatter(cfg: ModelConfig, cache, single_cache, slot,
-                          pt_row):
+                          pt_row, n_tokens=None):
     """Scatter a freshly-built batch-1 (ring-layout) decode cache into
     the paged pool for ``slot``.  Pure jnp, traces with a traced slot and
     page-table row, so the engine fuses prefill + scatter into one
     executable — and doubles as the pooled→paged converter at adoption
-    time (mode-switch recomputation hands back a ring cache)."""
+    time (mode-switch recomputation hands back a ring cache).
+
+    ``n_tokens`` (static) bounds the page-granular fast path to the
+    pages actually covering the prompt: positions past it are masked at
+    every read until decode overwrites them, so the zero tail needs no
+    write and scatter work scales with prompt length, not
+    ``max_pages``.  ``None`` writes every page (adoption-time callers
+    that convert a full-width cache)."""
     new_cache = {"pos": jax.lax.dynamic_update_slice(
         cache["pos"], single_cache["pos"].astype(cache["pos"].dtype),
         (slot,)), "pages": cache["pages"]}
@@ -481,7 +559,33 @@ def paged_prefill_scatter(cfg: ModelConfig, cache, single_cache, slot,
         if _is_paged_entry(entry):
             ps = dst["k"].shape[-3]
             P = dst["k"].shape[-4] if where == "rem" else dst["k"].shape[1]
-            if where == "trunk":
+            MP = pt_row.shape[0]
+            W = src["k"].shape[-3]
+            if W == MP * ps:
+                # page-granular fast path: a full-length linear cache
+                # (non-windowed layers never wrap, stored position ==
+                # index) scatters MP whole pages instead of W per-token
+                # (page, offset) pairs.  Unallocated rows land on the
+                # trash page; the zero tail of the prompt's last page
+                # overwrites like-for-like zeros, and masked reads keep
+                # attention exact either way.
+                npg = (MP if n_tokens is None
+                       else max(min(-(-n_tokens // ps), MP), 1))
+                pg = jnp.where(pt_row >= 0, pt_row, P - 1)[:npg]
+                if where == "trunk":
+                    reps = src["k"].shape[0]
+                    kv_dims = src["k"].shape[3:]
+                    pages = lambda leaf: leaf[:, 0].reshape(
+                        (reps, MP, ps) + kv_dims)[:, :npg]
+                    upd = {"k": dst["k"].at[:, pg].set(pages(src["k"])),
+                           "v": dst["v"].at[:, pg].set(pages(src["v"]))}
+                else:
+                    kv_dims = src["k"].shape[2:]
+                    pages = lambda leaf: leaf[0].reshape(
+                        (MP, ps) + kv_dims)[:npg]
+                    upd = {"k": dst["k"].at[pg].set(pages(src["k"])),
+                           "v": dst["v"].at[pg].set(pages(src["v"]))}
+            elif where == "trunk":
                 spos = src["pos"][0, 0]                       # (W,)
                 pg, off = _page_targets(spos, pt_row, ps, P)
                 upd = {"k": dst["k"].at[:, pg, off].set(src["k"][:, 0]),

@@ -31,18 +31,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import (PackedKV, PageTable, batch_axes, cache_gather,
-                          cache_scatter, decode_step, forward, init_cache,
+from repro.models import (DEFAULT_PAGE_SIZE, PackedKV, PageTable,
+                          batch_axes, cache_gather, cache_scatter,
+                          decode_step, forward, init_cache,
                           init_paged_cache, pack_single_cache,
-                          paged_adopt_scatter, paged_pack,
+                          paged_adopt_scatter, paged_geometry, paged_pack,
                           paged_prefill_scatter, pages_for)
 from repro.serving.scheduler import (DEFAULT_SLOTS, AdmissionPolicy,
                                      Scheduler, SeqState, SlotState)
 
 if TYPE_CHECKING:                                    # pragma: no cover
     from repro.serving.workload import SLOClass
-
-DEFAULT_PAGE_SIZE = 16           # tokens per KV page
 
 
 class InferenceEngine:
@@ -129,11 +128,14 @@ def _cb_executables(cfg: ModelConfig, max_len: int):
 
 @functools.lru_cache(maxsize=None)
 def _paged_executables(cfg: ModelConfig, max_len: int, page_size: int,
-                       n_pages: int, max_pages: int, attn_impl: str):
+                       n_pages: int, max_pages: int, attn_impl: str,
+                       block_k=None):
     """Jitted (prefill+page-scatter, paged decode+argmax) shared across
     engines of the same pool geometry — the paged analogue of
     ``_cb_executables``.  The page table rides inside the cache pytree,
-    so allocation changes between ticks never recompile."""
+    so allocation changes between ticks never recompile.  ``block_k``
+    tunes the fused Pallas kernel's sub-page KV block (autotuner
+    output; the XLA path ignores it)."""
 
     def prefill_scatter(params, cache, last_tok, tokens, slot):
         out = forward(cfg, params, {"tokens": tokens}, build_cache=True,
@@ -141,15 +143,21 @@ def _paged_executables(cfg: ModelConfig, max_len: int, page_size: int,
         first = jnp.argmax(out["logits"][:, -1], -1).astype(jnp.int32)
         last_tok = jax.lax.dynamic_update_slice(last_tok, first, (slot,))
         pt_row = cache["pages"][slot]
+        # tokens.shape[1] is static per prompt length (one executable
+        # each), so the scatter writes only the pages the prompt covers
         return last_tok, paged_prefill_scatter(cfg, cache, out["cache"],
-                                               slot, pt_row)
+                                               slot, pt_row,
+                                               n_tokens=tokens.shape[1])
 
-    def step(params, cache, last_tok):
+    def step(params, cache, last_tok, mp=None):
         logits, cache = decode_step(cfg, params, cache, last_tok,
-                                    cache["pos"], attn_impl=attn_impl)
+                                    cache["pos"], attn_impl=attn_impl,
+                                    block_k=block_k, ctx_pages=mp)
         return jnp.argmax(logits, -1).astype(jnp.int32), cache
 
-    return jax.jit(prefill_scatter), jax.jit(step)
+    # ``mp`` is static: one executable per live-page-count bucket
+    # (≤ max_pages of them), so attention work tracks live tokens
+    return jax.jit(prefill_scatter), jax.jit(step, static_argnames=("mp",))
 
 
 class ContinuousBatchingEngine:
@@ -170,8 +178,9 @@ class ContinuousBatchingEngine:
     def __init__(self, cfg: ModelConfig, params, *,
                  n_slots: int = DEFAULT_SLOTS, max_len: int = 512,
                  max_prefill_per_tick: int = 1, paged: bool = True,
-                 page_size: int = DEFAULT_PAGE_SIZE,
+                 page_size=DEFAULT_PAGE_SIZE,
                  n_pages: Optional[int] = None, attn_impl: str = "xla",
+                 block_k: Optional[int] = None,
                  policy: Optional[AdmissionPolicy] = None):
         self.cfg = cfg
         self.params = params
@@ -181,6 +190,12 @@ class ContinuousBatchingEngine:
         # on the striped layout (the runtime excludes it anyway)
         self.paged = paged and cfg.family != "encdec"
         if self.paged:
+            # "auto" resolves (page_size, block_k) through the autotuner's
+            # cached sweep; an explicit block_k overrides the tuned one
+            page_size, tuned_bk = paged_geometry(
+                cfg, n_slots, max_len, page_size=page_size,
+                attn_impl=attn_impl)
+            self.block_k = block_k if block_k is not None else tuned_bk
             self.page_size = page_size
             self.max_pages = pages_for(max_len, page_size)
             self.n_pages = n_pages or n_slots * self.max_pages
@@ -195,7 +210,7 @@ class ContinuousBatchingEngine:
             self.cache["pages"] = self.pages.device_table()
             self._prefill_scatter, self._step = _paged_executables(
                 cfg, max_len, page_size, self.n_pages, self.max_pages,
-                attn_impl)
+                attn_impl, self.block_k)
             self._axes = None
         else:
             self.pages = None
@@ -264,9 +279,11 @@ class ContinuousBatchingEngine:
         tokens = jnp.asarray(seq.tokens_so_far, jnp.int32)[None]
         if self.paged:
             self.pages.ensure(slot, len(seq.tokens_so_far))
-            self.cache["pages"] = self.pages.device_table()
+            self.cache["pages"] = self.pages.step_operand()
         self._last_tok, self.cache = self._prefill_scatter(
             self.params, self.cache, self._last_tok, tokens, slot)
+        if self.paged:
+            self.pages.note_device(self.cache["pages"])
         self.sched.on_prefilled(slot, self._record(seq, slot,
                                                    self._last_tok))
 
@@ -341,12 +358,25 @@ class ContinuousBatchingEngine:
         if tick.decode:
             if self.paged:
                 # the incoming token's page must exist before the jitted
-                # step writes K/V at position seq.pos - 1
+                # step writes K/V at position seq.pos - 1; the table
+                # rides into the call as a host operand when dirty so
+                # the upload overlaps the in-flight previous step
                 for slot in tick.decode:
                     self.pages.ensure(slot, self.sched.slots[slot].pos)
-                self.cache["pages"] = self.pages.device_table()
-            self._last_tok, self.cache = self._step(self.params, self.cache,
-                                                    self._last_tok)
+                self.cache["pages"] = self.pages.step_operand()
+                # bucket the step by the max allocated page count over
+                # LIVE slots (not just tick.decode — a resumed slot's
+                # row advances too): attention gathers/masks only those
+                # table columns, so work scales with live tokens
+                mp = max((max(s.pos - 1, 0) // self.page_size) + 1
+                         for s in self.sched.slots if s is not None)
+                self._last_tok, self.cache = self._step(
+                    self.params, self.cache, self._last_tok,
+                    mp=min(mp, self.max_pages))
+                self.pages.note_device(self.cache["pages"])
+            else:
+                self._last_tok, self.cache = self._step(
+                    self.params, self.cache, self._last_tok)
             for slot in tick.decode:
                 seq = self.sched.slots[slot]
                 self.sched.on_decoded(slot, self._record(seq, slot,

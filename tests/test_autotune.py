@@ -1,0 +1,131 @@
+"""Autotuner: deterministic sweeps with an injected measure fn, disk
+cache semantics (hit / force / key sensitivity), and engine integration
+via ``page_size="auto"``."""
+import json
+
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.kernels.autotune import (autotune_key, autotune_paged_decode,
+                                    cache_path)
+from repro.models import paged_geometry
+
+
+def _cfg(**kw):
+    return reduced(get_config("qwen2.5-3b"), d_model=64, **kw)
+
+
+def _fake_measure(times):
+    """measure fn scripted by a {(page_size, block_k): secs} table; logs
+    every call so tests can assert how many sweeps actually ran."""
+    calls = []
+
+    def measure(cfg, n_slots, max_len, page_size, block_k, attn_impl):
+        calls.append((page_size, block_k))
+        return times[(page_size, block_k)]
+
+    return measure, calls
+
+
+def test_sweep_picks_fastest_and_skips_nondividing(tmp_path):
+    cache = str(tmp_path / "tune.json")
+    times = {(8, None): 3.0, (16, None): 1.0}
+    measure, calls = _fake_measure(times)
+    res = autotune_paged_decode(_cfg(), n_slots=4, max_len=48,
+                                measure=measure, cache_file=cache)
+    assert (res.page_size, res.block_k) == (16, None)
+    # 32 does not divide max_len=48 → never measured
+    assert calls == [(8, None), (16, None)]
+    assert sorted(res.table) == [(8, None, 3.0), (16, None, 1.0)]
+
+
+def test_cache_hit_skips_measurement_and_force_remeasures(tmp_path):
+    cache = str(tmp_path / "tune.json")
+    measure, calls = _fake_measure({(8, None): 1.0, (16, None): 2.0})
+    first = autotune_paged_decode(_cfg(), n_slots=4, max_len=48,
+                                  measure=measure, cache_file=cache)
+    assert first.page_size == 8 and len(calls) == 2
+    again = autotune_paged_decode(_cfg(), n_slots=4, max_len=48,
+                                  measure=measure, cache_file=cache)
+    assert len(calls) == 2, "cache hit must not re-measure"
+    assert (again.page_size, again.block_k, again.table) == \
+        (first.page_size, first.block_k, first.table)
+    # force: re-measure and overwrite the stored entry
+    measure2, calls2 = _fake_measure({(8, None): 5.0, (16, None): 1.0})
+    forced = autotune_paged_decode(_cfg(), n_slots=4, max_len=48,
+                                   measure=measure2, cache_file=cache,
+                                   force=True)
+    assert forced.page_size == 16 and len(calls2) == 2
+    data = json.loads(open(cache).read())
+    key = autotune_key(_cfg(), 4, 48, "xla")
+    assert data["entries"][key]["page_size"] == 16
+
+
+def test_key_varies_with_geometry_and_impl():
+    base = autotune_key(_cfg(), 4, 48, "xla")
+    assert autotune_key(_cfg(), 8, 48, "xla") != base
+    assert autotune_key(_cfg(), 4, 96, "xla") != base
+    assert autotune_key(_cfg(), 4, 48, "pallas") != base
+    assert autotune_key(_cfg(n_layers=1), 4, 48, "xla") == base, \
+        "layer count cannot change the per-layer decode step"
+
+
+def test_pallas_sweep_dedups_effective_block_shapes(tmp_path):
+    """block_k values that resolve to the same kernel shape (bk >= ps,
+    non-dividing bk → whole page) are measured once."""
+    cache = str(tmp_path / "tune.json")
+    times = {(8, None): 2.0, (8, 4): 1.0, (16, None): 3.0, (16, 4): 3.5}
+    measure, calls = _fake_measure(times)
+    res = autotune_paged_decode(_cfg(), n_slots=2, max_len=16,
+                                attn_impl="pallas", page_sizes=(16,),
+                                block_ks=(None, 16, 32, 4, 4),
+                                measure=measure, cache_file=cache)
+    assert calls == [(16, None), (16, 4)]
+    assert (res.page_size, res.block_k) == (16, None)
+
+
+def test_no_dividing_page_size_raises(tmp_path):
+    measure, _ = _fake_measure({})
+    with pytest.raises(ValueError):
+        autotune_paged_decode(_cfg(), n_slots=4, max_len=7,
+                              measure=measure,
+                              cache_file=str(tmp_path / "t.json"))
+
+
+def test_corrupt_or_stale_cache_is_ignored(tmp_path):
+    cache = tmp_path / "tune.json"
+    cache.write_text("{not json")
+    measure, calls = _fake_measure({(8, None): 1.0, (16, None): 2.0})
+    res = autotune_paged_decode(_cfg(), n_slots=4, max_len=48,
+                                measure=measure, cache_file=str(cache))
+    assert res.page_size == 8 and len(calls) == 2
+    # stale schema → treated as empty, re-measured and rewritten
+    cache.write_text(json.dumps({"schema": 0, "entries": {"x": {}}}))
+    measure, calls = _fake_measure({(8, None): 2.0, (16, None): 1.0})
+    res = autotune_paged_decode(_cfg(), n_slots=4, max_len=48,
+                                measure=measure, cache_file=str(cache))
+    assert res.page_size == 16 and len(calls) == 2
+    assert json.loads(cache.read_text())["schema"] == 1
+
+
+def test_cache_path_env_override(monkeypatch, tmp_path):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "c.json"))
+    assert cache_path() == str(tmp_path / "c.json")
+    monkeypatch.delenv("REPRO_AUTOTUNE_CACHE")
+    assert cache_path().endswith("autotune.json")
+
+
+def test_paged_geometry_auto_reads_cache(monkeypatch, tmp_path):
+    """page_size="auto" resolves through the disk cache: pre-seed an
+    entry and check the engine-facing resolver returns it without any
+    measurement (a sweep would crash on the poisoned measure path)."""
+    cache = str(tmp_path / "tune.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", cache)
+    cfg = _cfg()
+    key = autotune_key(cfg, 4, 48, "xla")
+    with open(cache, "w") as f:
+        json.dump({"schema": 1, "entries": {
+            key: {"page_size": 8, "block_k": None, "table": []}}}, f)
+    assert paged_geometry(cfg, 4, 48, page_size="auto") == (8, None)
+    # fixed page_size bypasses the tuner entirely
+    assert paged_geometry(cfg, 4, 48, page_size=16) == (16, None)

@@ -10,7 +10,8 @@ import sys
 sys.path.insert(0, os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))))                     # benchmarks import
 
-from benchmarks.diff import DEFAULT_WATCH_UP, compare, load_rows
+from benchmarks.diff import (DEFAULT_FLOORS, DEFAULT_WATCH_UP,
+                             compare, load_rows)
 
 
 def _write(dirpath, name, rows):
@@ -79,3 +80,52 @@ def test_load_rows_keeps_numeric_values(tmp_path):
     _write(str(tmp_path), "y", {"a": 1.5, "b": float("nan")})
     rows = load_rows(os.path.join(str(tmp_path), "BENCH_y.json"))
     assert rows["a"] == 1.5 and math.isnan(rows["b"])
+
+
+# --------------------------------------------------- absolute floors
+def test_floor_fails_below_and_passes_at_floor(tmp_path):
+    """relative_throughput carries a default HARD floor of 1.0: the
+    paged engine may never lose to the striped baseline in its own run,
+    no matter what the committed baseline says."""
+    assert DEFAULT_FLOORS == {"relative_throughput": 1.0}
+    assert "relative_throughput" not in DEFAULT_WATCH_UP
+    base, cand = _dirs(tmp_path, {"paged/relative_throughput": 0.9},
+                       {"paged/relative_throughput": 0.97})
+    regs, _ = compare(base, cand, 1.5, ("p99",), DEFAULT_WATCH_UP)
+    assert [(r[1], r[2], r[3]) for r in regs] == \
+        [("paged/relative_throughput", 1.0, 0.97)]
+    # exactly at (or above) the floor: clean, even if below baseline
+    sub = tmp_path / "b"
+    sub.mkdir()
+    base2, cand2 = _dirs(sub, {"paged/relative_throughput": 1.4},
+                         {"paged/relative_throughput": 1.0})
+    regs, notes = compare(base2, cand2, 1.5, ("p99",), DEFAULT_WATCH_UP)
+    assert regs == []
+    assert any("floor" in n for n in notes)
+
+
+def test_floor_applies_without_baseline(tmp_path):
+    """A brand-new benchmark (no committed baseline) still cannot land
+    below a floor — unlike watched metrics, which skip unpaired rows."""
+    base, cand = tmp_path / "base", tmp_path / "cand"
+    base.mkdir(), cand.mkdir()
+    _write(str(cand), "fresh", {"paged/relative_throughput": 0.5})
+    regs, _ = compare(str(base), str(cand), 1.5, ("p99",))
+    assert len(regs) == 1 and regs[0][4] == 2.0   # floor/cand worse-by
+
+
+def test_floor_nan_is_hard_failure(tmp_path):
+    base, cand = _dirs(tmp_path, {"paged/relative_throughput": 1.1},
+                       {"paged/relative_throughput": float("nan")})
+    regs, _ = compare(base, cand, 1.5, ("p99",))
+    assert len(regs) == 1 and math.isnan(regs[0][3])
+
+
+def test_custom_floor_overrides_default(tmp_path):
+    base, cand = _dirs(tmp_path, {"m/tokens_per_s": 100.0},
+                       {"m/tokens_per_s": 80.0})
+    regs, _ = compare(base, cand, 1.5, ("p99",), (),
+                      {"tokens_per_s": 90.0})
+    assert [(r[1], r[2]) for r in regs] == [("m/tokens_per_s", 90.0)]
+    regs, _ = compare(base, cand, 1.5, ("p99",), (), {})
+    assert regs == []

@@ -381,3 +381,65 @@ def test_replay_roofline_decode_clock():
     e2e_roof = max(m.t_finish for m in log_roof.requests.values())
     e2e_const = max(m.t_finish for m in log_const.requests.values())
     assert e2e_roof < e2e_const, (e2e_roof, e2e_const)
+
+
+# ------------------------------------------------ fused decode fast path
+@settings(max_examples=20, deadline=None)
+@given(lens=st.lists(st.integers(0, 24), min_size=3, max_size=3))
+def test_fused_append_matches_host_scatter_bytes(lens):
+    """The fused kernel's in-kernel KV append and the host-side
+    ``.at[pg, off].set`` scatter (the XLA path) produce byte-identical
+    page pools outside the trash page, for any ragged fill — including
+    FREE slots (lens 0 → no pages), which land on the trash page."""
+    from repro.kernels.ops import paged_decode_step
+
+    B, KVH, H, dh, ps, MP = 3, 2, 4, 16, 8, 3
+    P = B * MP + 2
+    rng = np.random.default_rng(sum(lens) * 31 + 5)
+    table_np = np.full((B, MP), -1, np.int32)
+    free = list(rng.permutation(P - 1))
+    for b, n in enumerate(lens):
+        for i in range(-(-n // ps)):
+            table_np[b, i] = free.pop()
+    table = jnp.asarray(table_np)
+    L = jnp.asarray(lens, jnp.int32)
+    q = jnp.asarray(rng.standard_normal((B, H, dh)), jnp.float32)
+    kn = jnp.asarray(rng.standard_normal((B, KVH, dh)), jnp.float32)
+    vn = jnp.asarray(rng.standard_normal((B, KVH, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((P, ps, KVH, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((P, ps, KVH, dh)), jnp.float32)
+
+    _, ko, vo = paged_decode_step(q, kn, vn, k, v, table, L)
+
+    n1 = np.maximum(np.asarray(lens) - 1, 0)
+    pg = table_np[np.arange(B), np.minimum(n1 // ps, MP - 1)]
+    pg = np.where(pg >= 0, pg, P - 1)
+    kh = k.at[pg, n1 % ps].set(kn)
+    vh = v.at[pg, n1 % ps].set(vn)
+    np.testing.assert_array_equal(np.asarray(ko[:P - 1]),
+                                  np.asarray(kh[:P - 1]), err_msg=str(lens))
+    np.testing.assert_array_equal(np.asarray(vo[:P - 1]),
+                                  np.asarray(vh[:P - 1]), err_msg=str(lens))
+
+
+def test_pallas_engine_exact_and_invariants_every_step():
+    """attn_impl="pallas" drives the single-launch fused decode step;
+    the allocator must hold its invariants after EVERY engine step and
+    the greedy tokens must match the static reference exactly."""
+    cfg, params, _ = _ctx()
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=3, max_len=MAX_LEN,
+                                   page_size=PAGE_SIZE, attn_impl="pallas")
+    reqs = [(8, 5), (12, 3), (5, 6), (9, 4)]
+    prompts = {i: _prompt(700 + i, L) for i, (L, _) in enumerate(reqs)}
+    for i, (_, n) in enumerate(reqs):
+        eng.submit(prompts[i], n, req_id=i)
+    steps = 0
+    while eng.step():
+        eng.pages.check_invariants()
+        steps += 1
+    eng.flush()
+    out = {rid: s.generated for rid, s in eng.sched.finished.items()}
+    assert steps > 0 and len(out) == len(reqs)
+    for i, (_, n) in enumerate(reqs):
+        assert out[i] == _reference(prompts[i], n), f"req {i}"
+    assert eng.pages.n_allocated == 0

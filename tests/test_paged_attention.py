@@ -90,3 +90,45 @@ def test_paged_ref_matches_dense_decode_ref():
                                  jnp.asarray(lens, jnp.int32))
     np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
                                atol=2e-5, rtol=2e-5)
+
+
+def test_fused_step_free_slot_writes_only_trash_page():
+    """Regression for the fused append's aliased pool writes: a FREE
+    slot (page table row all -1, garbage ``lens``) must land its KV
+    write on the trash page P-1 and NOTHING else — a bad target index
+    map would silently corrupt a live slot's pages.  Live slots may
+    touch only their own tail page."""
+    from repro.kernels.ops import paged_decode_step
+
+    B, H, KVH, dh, ps, MP = 4, 4, 2, 16, 8, 3
+    P = B * MP + 2
+    lens = (11, 0, 23, 0)                     # slots 1 and 3 are FREE
+    # kernel lens INCLUDES the appended token; FREE slots carry garbage
+    step_lens = jnp.asarray([12, 777, 24, 999], jnp.int32)
+    q = jnp.asarray(RNG.standard_normal((B, H, dh)), jnp.float32)
+    kn = jnp.asarray(RNG.standard_normal((B, KVH, dh)), jnp.float32)
+    vn = jnp.asarray(RNG.standard_normal((B, KVH, dh)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((P, ps, KVH, dh)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((P, ps, KVH, dh)), jnp.float32)
+    table = _page_setup(B, P + 1, MP, ps, lens)  # P-1 stays unallocated
+    table = jnp.where(table >= P - 1, -1, table)
+
+    _, ko, vo = paged_decode_step(q, kn, vn, k, v, table, step_lens)
+
+    # pages a correct kernel may touch: each live slot's tail page + trash
+    allowed = {P - 1}
+    wpos = [int(step_lens[b]) - 1 for b in range(B)]   # append position
+    for b, n in enumerate(lens):
+        if n:
+            allowed.add(int(table[b, min(wpos[b] // ps, MP - 1)]))
+    for pool, new in ((ko, k), (vo, v)):
+        changed = {p for p in range(P)
+                   if not np.array_equal(np.asarray(pool[p]),
+                                         np.asarray(new[p]))}
+        assert changed <= allowed, (sorted(changed), sorted(allowed))
+    # and the live slots' writes really landed where the table says
+    for b, n in enumerate(lens):
+        if n:
+            pid = int(table[b, min(wpos[b] // ps, MP - 1)])
+            np.testing.assert_array_equal(
+                np.asarray(ko[pid, wpos[b] % ps]), np.asarray(kn[b]))

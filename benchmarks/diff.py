@@ -44,8 +44,13 @@ DEFAULT_WATCH = ("p99", "gpu_seconds")
 DEFAULT_WATCH_UP = ("slo_attainment",)
 # relative_throughput is the paged/striped ratio from the SAME run, so
 # it gets a hard absolute floor instead of a relative watch: the paged
-# fast path must never lose to the striped engine, full stop
-DEFAULT_FLOORS = {"relative_throughput": 1.0}
+# fast path must never lose to the striped engine, full stop.  The
+# prefix-sharing floors work the same way: the sharing engine must keep
+# skipping >=30% of prompt prefill on its shared-prefix trace and must
+# never make p99 TTFT worse than the no-sharing engine in the same run.
+DEFAULT_FLOORS = {"relative_throughput": 1.0,
+                  "prefill_tokens_skipped_frac": 0.3,
+                  "relative_ttft": 1.0}
 
 
 def load_rows(path: str) -> Dict[str, float]:

@@ -19,6 +19,9 @@ perf trajectory across PRs can be diffed without parsing stdout.  Modules:
                                  per policy under bursty traces)
   paged    bench_paged          (paged KV: residency, tokens/s, page-
                                  granular handoff + §4.4 crossover)
+  prefix   bench_prefix         (CoW prefix sharing: prefill tokens
+                                 skipped, TTFT vs no-sharing, residency,
+                                 handoff wire dedupe)
   slo      bench_slo            (control plane: EDF + placement arbiter
                                  vs FCFS + independent scaling, per-class
                                  p99 TTFT and SLO attainment)
@@ -44,8 +47,8 @@ from benchmarks import (bench_autoscale, bench_cache,
                         bench_continuous_batching, bench_engine, bench_kway,
                         bench_latency, bench_multicast, bench_multimodel,
                         bench_num_blocks, bench_optimizations, bench_paged,
-                        bench_roofline, bench_slo, bench_trace,
-                        bench_throughput)
+                        bench_prefix, bench_roofline, bench_slo,
+                        bench_trace, bench_throughput)
 
 MODULES = {
     "cache": bench_cache, "multicast": bench_multicast,
@@ -55,6 +58,7 @@ MODULES = {
     "roofline": bench_roofline, "engine": bench_engine,
     "cbatch": bench_continuous_batching, "mmodel": bench_multimodel,
     "autoscale": bench_autoscale, "paged": bench_paged, "slo": bench_slo,
+    "prefix": bench_prefix,
 }
 
 

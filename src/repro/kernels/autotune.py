@@ -48,13 +48,17 @@ def cache_path() -> str:
                         "autotune.json")
 
 
-def autotune_key(cfg, n_slots: int, max_len: int, attn_impl: str) -> str:
-    """Everything that can change the sweep winner, schema-versioned."""
+def autotune_key(cfg, n_slots: int, max_len: int, attn_impl: str,
+                 shared: bool = False) -> str:
+    """Everything that can change the sweep winner, schema-versioned.
+    ``shared`` marks prefix-sharing pools: CoW sharing shifts the live
+    page distribution the sweep measures (many slots walking the same
+    pages), so tuned page sizes must not leak across sharing modes."""
     import jax
     backend = jax.default_backend()
     return (f"v{_SCHEMA}|{cfg.n_heads}h|{cfg.n_kv_heads}kv|"
             f"{cfg.d_head}dh|{n_slots}slots|{max_len}len|"
-            f"{attn_impl}|{backend}")
+            f"{attn_impl}|{backend}" + ("|shared" if shared else ""))
 
 
 @dataclass
@@ -163,11 +167,12 @@ def autotune_paged_decode(cfg, *, n_slots: int, max_len: int,
                           block_ks: Sequence[Optional[int]] = None,
                           measure: Optional[Callable] = None,
                           cache_file: Optional[str] = None,
-                          force: bool = False) -> TuneResult:
+                          force: bool = False,
+                          shared: bool = False) -> TuneResult:
     """Best (page_size, block_k) for this engine geometry, from the disk
     cache when present (unless ``force``), measured otherwise."""
     path = cache_file or cache_path()
-    key = autotune_key(cfg, n_slots, max_len, attn_impl)
+    key = autotune_key(cfg, n_slots, max_len, attn_impl, shared)
     data = _load(path)
     hit = data["entries"].get(key)
     if hit is not None and not force:

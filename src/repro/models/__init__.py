@@ -1,16 +1,20 @@
 from repro.models.cache_ops import (DEFAULT_PAGE_SIZE, PackedKV, PageTable,
-                                    batch_axes, cache_batch_concat,
-                                    cache_gather, cache_scatter,
-                                    paged_geometry, pages_for,
-                                    payload_nbytes)
+                                    PrefixIndex, batch_axes,
+                                    cache_batch_concat, cache_gather,
+                                    cache_scatter, paged_geometry,
+                                    pages_for, payload_nbytes)
 from repro.models.model import (decode_step, forward, init_cache,
                                 init_paged_cache, init_params, make_batch,
                                 pack_single_cache, paged_adopt_scatter,
-                                paged_pack, paged_prefill_scatter)
+                                paged_copy_page, paged_pack,
+                                paged_prefill_scatter, paged_suffix_prefill,
+                                supports_prefix_sharing)
 
 __all__ = ["init_params", "forward", "decode_step", "init_cache",
            "make_batch", "batch_axes", "cache_scatter", "cache_gather",
            "cache_batch_concat", "PageTable", "PackedKV", "pages_for",
            "payload_nbytes", "init_paged_cache", "paged_prefill_scatter",
            "paged_pack", "paged_adopt_scatter", "pack_single_cache",
-           "DEFAULT_PAGE_SIZE", "paged_geometry"]
+           "DEFAULT_PAGE_SIZE", "paged_geometry", "PrefixIndex",
+           "paged_suffix_prefill", "paged_copy_page",
+           "supports_prefix_sharing"]

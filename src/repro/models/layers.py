@@ -302,6 +302,47 @@ def paged_decode_attention(p, x, pool, cfg, positions, page_table, *,
     return out, {"k": k_pool, "v": v_pool}
 
 
+def paged_suffix_attention(p, x, pool, cfg, positions, pt_row, *,
+                           rope=True, window: Optional[int] = None):
+    """Suffix-only prefill against the shared page pool (prefix sharing).
+
+    x: (1,S,d) — the un-cached suffix of one prompt whose shared prefix
+    K/V already sit in the slot's leading pages; positions: (1,S)
+    absolute token positions (shared_tokens + arange(S)); pt_row: (MP,)
+    the slot's page-table row.  The suffix K/V are scattered into the
+    slot's pages at their (page, offset) targets, then every suffix
+    query attends over the slot's whole table expansion — shared prefix
+    pages and just-written suffix alike — masked to its own causal
+    position.  Key order in the expansion equals position order, so
+    outputs are bit-identical to a full prefill that recomputed the
+    prefix (same summation order; masked tail entries underflow to
+    exact zeros).  Returns (out (1,S,d), new_pool)."""
+    B, S, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q, k_new, v_new = _qkv(p, x, cfg, positions, rope)     # (1,S,·,dh)
+    P, ps = pool["k"].shape[0], pool["k"].shape[1]
+    MP = pt_row.shape[0]
+    tpos = positions[0]                                    # (S,)
+    pg = pt_row[jnp.clip(tpos // ps, 0, MP - 1)]
+    pg = jnp.where(pg >= 0, pg, P - 1)                     # FREE → trash
+    k_pool = pool["k"].at[pg, tpos % ps].set(k_new[0])
+    v_pool = pool["v"].at[pg, tpos % ps].set(v_new[0])
+    pt = jnp.where(pt_row >= 0, pt_row, P - 1)
+    kg = k_pool[pt].reshape(1, MP * ps, kv, dh)
+    vg = v_pool[pt].reshape(1, MP * ps, kv, dh)
+    t = jnp.arange(MP * ps)[None, None, :]
+    qpos = positions[:, :, None]                           # (1,S,1)
+    valid = (t <= qpos) & \
+        (jnp.repeat(pt_row, ps) >= 0)[None, None, :]
+    if window is not None:
+        valid &= qpos - t < window
+    o = _sdpa(q, kg, vg, valid, cfg)
+    out = o.reshape(B, S, h * dh) @ p["wo"]
+    if cfg.out_bias:
+        out = out + p["bo"]
+    return out, {"k": k_pool, "v": v_pool}
+
+
 def kv_cache_from_prefill(cfg, k, v, positions, max_len, *, window=None):
     """Convert full-sequence prefill K/V (B,S,kv,dh) into a decode cache."""
     B, S = k.shape[0], k.shape[1]

@@ -609,14 +609,110 @@ def paged_prefill_scatter(cfg: ModelConfig, cache, single_cache, slot,
     return new_cache
 
 
+def supports_prefix_sharing(cfg: ModelConfig) -> bool:
+    """CoW prefix sharing covers configs whose every layer keeps paged
+    attention state: recurrent/xLSTM layers carry O(d) state that folds
+    the whole prefix into one vector, which cannot be re-owned at page
+    granularity (and encdec stays striped entirely)."""
+    return cfg.family != "encdec" and all(
+        _is_paged_entry(e) for _, _, e in _layer_entries(cfg))
+
+
+def _apply_layer_suffix(p: Params, x, cfg: ModelConfig, entry: str,
+                        positions, pool, pt_row):
+    """Suffix-prefill layer application (prefix sharing; attention-only
+    configs — ``supports_prefix_sharing`` gates callers)."""
+    mixer, ffn = entry.split(":")
+    assert mixer in ("attn", "attn_full"), \
+        "prefix sharing covers attention-only configs"
+    h = L.apply_norm(p["norm1"], x, cfg)
+    a, new_pool = L.paged_suffix_attention(
+        p["attn"], h, pool, cfg, positions, pt_row,
+        rope=cfg.rope_pct > 0.0, window=_mixer_window(cfg, mixer))
+    x = x + a
+    if ffn == "dense":
+        x = x + L.apply_ffn(p["ffn"], L.apply_norm(p["norm2"], x, cfg), cfg)
+    elif ffn == "moe":
+        mo, _ = M.apply_moe(p["moe"], L.apply_norm(p["norm2"], x, cfg), cfg,
+                            capacity_factor=None)
+        x = x + mo
+    return x, new_pool
+
+
+def paged_suffix_prefill(cfg: ModelConfig, params: Params, cache, tokens,
+                         slot, start) -> Tuple[jnp.ndarray, Any]:
+    """Prefill ONLY the un-cached suffix of a prompt whose shared prefix
+    already sits in ``slot``'s leading pages (prefix sharing).
+
+    tokens: (1, S_suffix) int32; ``start`` (traced scalar) is the shared
+    token count, so positions run start..start+S-1.  Each layer scatters
+    the suffix K/V into the slot's pages and attends suffix queries over
+    the slot's full table — causal masking makes prefix activations
+    depend only on the prefix, so skipping its recompute is exact.
+    Returns (last-position logits (1, V), new paged cache); compute
+    scales with the suffix, not the prompt."""
+    S = tokens.shape[1]
+    pt_row = cache["pages"][slot]
+    positions = (start + jnp.arange(S, dtype=jnp.int32))[None]
+    x = _embed_tokens(cfg, params, tokens, positions)
+
+    def rep_body(xc, xs):
+        lp_tuple, c_tuple = xs
+        new_caches = []
+        for pi, entry in enumerate(cfg.layer_pattern):
+            xc, nc = _apply_layer_suffix(lp_tuple[pi], xc, cfg, entry,
+                                         positions, c_tuple[pi], pt_row)
+            new_caches.append(nc)
+        return xc, tuple(new_caches)
+
+    x, new_trunk = jax.lax.scan(rep_body, x,
+                                (params["trunk"], cache["trunk"]))
+    new_rem = []
+    for ri, lp in enumerate(params["rem"]):
+        entry = cfg.layer_pattern[ri % cfg.pattern_len]
+        x, nc = _apply_layer_suffix(lp, x, cfg, entry, positions,
+                                    cache["rem"][ri], pt_row)
+        new_rem.append(nc)
+    logits = _unembed(cfg, params, x)[:, -1]
+    return logits, {"trunk": new_trunk, "rem": tuple(new_rem),
+                    "pos": cache["pos"].at[slot].set(
+                        (start + S).astype(cache["pos"].dtype)),
+                    "pages": cache["pages"]}
+
+
+def paged_copy_page(cfg: ModelConfig, cache, src, dst):
+    """Fork-on-write device copy: duplicate pool page ``src`` into
+    ``dst`` across every paged layer (trunk pools keep their leading
+    pattern-repetition axis).  Page ids trace, so one executable serves
+    every fork."""
+    trunk, rem = list(cache["trunk"]), list(cache["rem"])
+    for where, i, entry in _layer_entries(cfg):
+        if not _is_paged_entry(entry):
+            continue
+        tgt = trunk[i] if where == "trunk" else rem[i]
+        if where == "trunk":
+            upd = {"k": tgt["k"].at[:, dst].set(tgt["k"][:, src]),
+                   "v": tgt["v"].at[:, dst].set(tgt["v"][:, src])}
+            trunk[i] = upd
+        else:
+            upd = {"k": tgt["k"].at[dst].set(tgt["k"][src]),
+                   "v": tgt["v"].at[dst].set(tgt["v"][src])}
+            rem[i] = upd
+    return {"trunk": tuple(trunk), "rem": tuple(rem),
+            "pos": cache["pos"], "pages": cache["pages"]}
+
+
 def paged_pack(cfg: ModelConfig, cache, slot: int, page_ids,
-               n_tokens: int, page_size: int):
+               n_tokens: int, page_size: int, *, ship=None):
     """Gather ``slot``'s live pages (and its slot-state leaves) out of
     the paged cache into a page-granular handoff payload.  ``page_size``
     is the owning engine's — it cannot be inferred for models with no
-    attention layers (pure-recurrent caches carry no pools)."""
+    attention layers (pure-recurrent caches carry no pools).  ``ship``
+    restricts the pool gather to a subset of the page ids (wire dedupe:
+    pages already carried by an earlier payload of the same export are
+    referenced, not re-shipped)."""
     from repro.models.cache_ops import PackedKV
-    ids = jnp.asarray(list(page_ids), jnp.int32)
+    ids = jnp.asarray(list(page_ids if ship is None else ship), jnp.int32)
     trunk, rem = [], []
     for where, i, entry in _layer_entries(cfg):
         src = (cache["trunk"] if where == "trunk" else cache["rem"])[i]

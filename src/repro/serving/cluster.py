@@ -179,6 +179,7 @@ class LiveCluster:
                  n_slots: int = 4, max_len: int = 96,
                  max_prefill_per_tick: int = 1, paged: bool = True,
                  page_size: int = DEFAULT_PAGE_SIZE,
+                 prefix_sharing: bool = True,
                  admission: Optional[AdmissionPolicy] = None,
                  arbiter: Optional[PlacementArbiter] = None):
         self.hw = hw or HardwareProfile()
@@ -190,6 +191,10 @@ class LiveCluster:
         self.max_prefill_per_tick = max_prefill_per_tick
         self.paged = paged
         self.page_size = page_size
+        # CoW prefix sharing on every paged local engine (each engine
+        # auto-gates off for layouts that cannot share at page
+        # granularity — recurrent/xLSTM mixes)
+        self.prefix_sharing = prefix_sharing
         # the request control plane: one AdmissionPolicy shared by every
         # scheduler this cluster creates (FCFS default), one
         # PlacementArbiter owning node assignment (warm packing, scale
@@ -273,6 +278,7 @@ class LiveCluster:
                 dep.cfg, params, n_slots=self.n_slots, max_len=self.max_len,
                 max_prefill_per_tick=self.max_prefill_per_tick,
                 paged=self.paged, page_size=self.page_size,
+                prefix_sharing=self.prefix_sharing,
                 policy=self.admission)
         return sv.locals_[node_id]
 
@@ -528,9 +534,39 @@ class LiveCluster:
         assert target is not None, "mode switch with no local replica"
         target.adopt(self._price_handoff(model, pairs))
 
+    @staticmethod
+    def _handoff_groups(pairs: Sequence[Tuple]) -> List[List[int]]:
+        """Partition pair indices into wire-sharing groups: payloads of
+        the same dedupe batch whose page runs overlap are connected (a
+        sharer's payload is useless without the carrier holding its
+        referenced pages), everything else is a singleton — union-find
+        over (batch, source page id)."""
+        parent = list(range(len(pairs)))
+
+        def find(i: int) -> int:
+            while parent[i] != i:
+                parent[i] = parent[parent[i]]
+                i = parent[i]
+            return i
+
+        owner: Dict[Tuple[int, int], int] = {}
+        for i, (_, payload) in enumerate(pairs):
+            if isinstance(payload, PackedKV) and payload.batch is not None \
+                    and payload.page_ids:
+                for pid in payload.page_ids:
+                    key = (payload.batch, pid)
+                    if key in owner:
+                        parent[find(i)] = find(owner[key])
+                    else:
+                        owner[key] = i
+        groups: Dict[int, List[int]] = {}
+        for i in range(len(pairs)):
+            groups.setdefault(find(i), []).append(i)
+        return list(groups.values())
+
     def _price_handoff(self, model: str, pairs: Sequence[Tuple]
                        ) -> List[Tuple]:
-        """Per-request recompute-vs-transfer decision at a handoff (§4.4).
+        """Recompute-vs-transfer decision at a handoff (§4.4).
 
         A payload-carrying pair prices the packed wire bytes over the
         inter-node link against re-prefilling the tokens on the adopting
@@ -539,30 +575,48 @@ class LiveCluster:
         and charges the simulated clock; payload-less pairs (λPipe
         sources) can only recompute.  ``PackedKV`` payloads that DO ship
         round-trip through their contiguous wire buffer, so the byte
-        movement the log prices is the byte movement that happens."""
+        movement the log prices is the byte movement that happens.
+
+        Wire-deduped payloads (prefix sharing) are priced as a GROUP:
+        payloads sharing pages either all ship — total cost the deduped
+        bytes, each shared page crossing the link once — or all
+        recompute; a sharer shipped without its carrier would be
+        unresolvable at adoption.  Singletons price exactly as before."""
         cfg = self.models[model].cfg
+        rows: List[Tuple] = [None] * len(pairs)
+        for group in self._handoff_groups(pairs):
+            priced = []
+            for i in group:
+                seq, payload = pairs[i]
+                n_tok = max(seq.pos - 1, 0) if seq.generated else 0
+                pbytes = payload_nbytes(payload)
+                t_rec = recompute_cost(cfg, n_tok, 1, self.hw.peak_flops) \
+                    if seq.generated else 0.0
+                priced.append((i, seq, payload, n_tok, pbytes, t_rec))
+            shippable = [r for r in priced if r[2] is not None]
+            ship = bool(shippable) and \
+                sum(r[4] for r in shippable) / self.hw.link_bw \
+                <= sum(r[5] for r in shippable)
+            for i, seq, payload, n_tok, pbytes, t_rec in priced:
+                if payload is None:
+                    chosen = "recompute" if seq.generated else "fresh"
+                    t_xfer = float("inf") if seq.generated else 0.0
+                else:
+                    t_xfer = pbytes / self.hw.link_bw
+                    if ship:
+                        chosen = "transfer"
+                        if isinstance(payload, PackedKV):
+                            payload = payload.from_wire(*payload.wire())
+                    else:
+                        chosen, payload = "recompute", None
+                rows[i] = (seq, payload, HandoffDecision(
+                    model, seq.req_id, n_tok, pbytes, t_xfer, t_rec,
+                    chosen))
         out: List[Tuple] = []
         total = 0.0
-        for seq, payload in pairs:
-            n_tok = max(seq.pos - 1, 0) if seq.generated else 0
-            pbytes = payload_nbytes(payload)
-            t_rec = recompute_cost(cfg, n_tok, 1, self.hw.peak_flops) \
-                if seq.generated else 0.0
-            if payload is None:
-                chosen = "recompute" if seq.generated else "fresh"
-                t_xfer = float("inf") if seq.generated else 0.0
-            else:
-                t_xfer = pbytes / self.hw.link_bw
-                if t_rec < t_xfer:
-                    chosen, payload = "recompute", None
-                else:
-                    chosen = "transfer"
-                    if isinstance(payload, PackedKV):
-                        payload = payload.from_wire(*payload.wire())
-            self.handoff_log.append(HandoffDecision(
-                model, seq.req_id, n_tok, pbytes,
-                t_xfer, t_rec, chosen))
-            total += self.handoff_log[-1].t_chosen
+        for seq, payload, dec in rows:
+            self.handoff_log.append(dec)
+            total += dec.t_chosen
             out.append((seq, payload))
         self.clock += total
         return out

@@ -24,6 +24,7 @@ switching hands its live slot state to this engine via
 from __future__ import annotations
 
 import functools
+import itertools
 from typing import (TYPE_CHECKING, Any, Dict, List, Optional, Sequence,
                     Tuple)
 
@@ -32,13 +33,20 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import (DEFAULT_PAGE_SIZE, PackedKV, PageTable,
-                          batch_axes, cache_gather, cache_scatter,
-                          decode_step, forward, init_cache,
+                          PrefixIndex, batch_axes, cache_gather,
+                          cache_scatter, decode_step, forward, init_cache,
                           init_paged_cache, pack_single_cache,
-                          paged_adopt_scatter, paged_geometry, paged_pack,
-                          paged_prefill_scatter, pages_for)
+                          paged_adopt_scatter, paged_copy_page,
+                          paged_geometry, paged_pack,
+                          paged_prefill_scatter, paged_suffix_prefill,
+                          pages_for, supports_prefix_sharing)
 from repro.serving.scheduler import (DEFAULT_SLOTS, AdmissionPolicy,
                                      Scheduler, SeqState, SlotState)
+
+# wire-dedupe export tag: every handoff() export of a prefix-sharing
+# engine gets a fresh batch id, shared by all its payloads, so adopters
+# can remap source page ids without ever confusing two exports
+_HANDOFF_BATCH = itertools.count(1)
 
 if TYPE_CHECKING:                                    # pragma: no cover
     from repro.serving.workload import SLOClass
@@ -155,9 +163,26 @@ def _paged_executables(cfg: ModelConfig, max_len: int, page_size: int,
                                     block_k=block_k, ctx_pages=mp)
         return jnp.argmax(logits, -1).astype(jnp.int32), cache
 
+    def suffix_prefill(params, cache, last_tok, tokens, slot, start):
+        # prefix sharing: the slot's leading pages already hold ``start``
+        # shared tokens; only the suffix runs through the model (causal
+        # masking makes the skip exact).  One executable per suffix
+        # length, like prefill_scatter per prompt length.
+        logits, cache = paged_suffix_prefill(cfg, params, cache, tokens,
+                                             slot, start)
+        first = jnp.argmax(logits, -1).astype(jnp.int32)
+        last_tok = jax.lax.dynamic_update_slice(last_tok, first, (slot,))
+        return last_tok, cache
+
+    def copy_page(cache, src, dst):
+        # copy-on-write fork: duplicate pool page src into dst
+        return paged_copy_page(cfg, cache, src, dst)
+
     # ``mp`` is static: one executable per live-page-count bucket
     # (≤ max_pages of them), so attention work tracks live tokens
-    return jax.jit(prefill_scatter), jax.jit(step, static_argnames=("mp",))
+    return (jax.jit(prefill_scatter),
+            jax.jit(step, static_argnames=("mp",)),
+            jax.jit(suffix_prefill), jax.jit(copy_page))
 
 
 class ContinuousBatchingEngine:
@@ -181,6 +206,7 @@ class ContinuousBatchingEngine:
                  page_size=DEFAULT_PAGE_SIZE,
                  n_pages: Optional[int] = None, attn_impl: str = "xla",
                  block_k: Optional[int] = None,
+                 prefix_sharing: bool = True,
                  policy: Optional[AdmissionPolicy] = None):
         self.cfg = cfg
         self.params = params
@@ -189,18 +215,26 @@ class ContinuousBatchingEngine:
         # encdec keeps fixed-size cross-attention K/V per slot; it stays
         # on the striped layout (the runtime excludes it anyway)
         self.paged = paged and cfg.family != "encdec"
+        # copy-on-write prefix sharing is on by default wherever the
+        # layout supports it (attention-only paged configs): recurrent
+        # state folds the prefix into one vector and cannot be re-owned
+        # at page granularity
+        self.prefix_sharing = bool(self.paged and prefix_sharing
+                                   and supports_prefix_sharing(cfg))
         if self.paged:
             # "auto" resolves (page_size, block_k) through the autotuner's
             # cached sweep; an explicit block_k overrides the tuned one
             page_size, tuned_bk = paged_geometry(
                 cfg, n_slots, max_len, page_size=page_size,
-                attn_impl=attn_impl)
+                attn_impl=attn_impl, shared=self.prefix_sharing)
             self.block_k = block_k if block_k is not None else tuned_bk
             self.page_size = page_size
             self.max_pages = pages_for(max_len, page_size)
             self.n_pages = n_pages or n_slots * self.max_pages
             self.pages = PageTable(self.n_pages, page_size, n_slots,
                                    self.max_pages)
+            if self.prefix_sharing:
+                self.pages.prefix = PrefixIndex(page_size)
             self.sched = Scheduler(
                 n_slots, max_prefill_per_tick=max_prefill_per_tick,
                 pages=self.pages, policy=policy)
@@ -208,7 +242,8 @@ class ContinuousBatchingEngine:
                 cfg, n_slots, n_pages=self.n_pages, page_size=page_size,
                 max_pages=self.max_pages)
             self.cache["pages"] = self.pages.device_table()
-            self._prefill_scatter, self._step = _paged_executables(
+            (self._prefill_scatter, self._step, self._suffix_prefill,
+             self._copy_page) = _paged_executables(
                 cfg, max_len, page_size, self.n_pages, self.max_pages,
                 attn_impl, self.block_k)
             self._axes = None
@@ -231,6 +266,10 @@ class ContinuousBatchingEngine:
         # req_id -> live cache, or None when the cache must be rebuilt
         # (mode-switch recomputation) at resume time.
         self._parked: Dict[int, Any] = {}
+        # wire-dedupe adoption state per handoff batch: source-pid → own
+        # pool page remap, pages held alive for parked sharers, and the
+        # req_ids of batch payloads not yet restored here
+        self._dedupe: Dict[int, Dict[str, Any]] = {}
 
     # ------------------------------------------------------------- intake
     def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
@@ -276,27 +315,147 @@ class ContinuousBatchingEngine:
         self._pending = []
 
     def _do_prefill(self, slot: int, seq: SeqState) -> None:
-        tokens = jnp.asarray(seq.tokens_so_far, jnp.int32)[None]
-        if self.paged:
-            self.pages.ensure(slot, len(seq.tokens_so_far))
+        toks = seq.tokens_so_far
+        shared = seq.shared_tokens if self.prefix_sharing else 0
+        if shared:
+            # the scheduler's bind() attached the cached prefix run to
+            # this slot; prefill covers only the suffix.  A mid-page
+            # divergence forks the partially-matched page first (CoW:
+            # the suffix scatter writes into it, and other owners must
+            # never see those writes).
+            if shared % self.page_size:
+                old, new = self.pages.fork(slot, shared // self.page_size)
+                if old != new:
+                    self.cache = self._copy_page(
+                        self.cache, jnp.asarray(old, jnp.int32),
+                        jnp.asarray(new, jnp.int32))
+            self.pages.ensure(slot, len(toks))
             self.cache["pages"] = self.pages.step_operand()
-        self._last_tok, self.cache = self._prefill_scatter(
-            self.params, self.cache, self._last_tok, tokens, slot)
-        if self.paged:
+            suffix = jnp.asarray(toks[shared:], jnp.int32)[None]
+            self._last_tok, self.cache = self._suffix_prefill(
+                self.params, self.cache, self._last_tok, suffix, slot,
+                jnp.asarray(shared, jnp.int32))
             self.pages.note_device(self.cache["pages"])
+        else:
+            tokens = jnp.asarray(toks, jnp.int32)[None]
+            if self.paged:
+                self.pages.ensure(slot, len(toks))
+                self.cache["pages"] = self.pages.step_operand()
+            self._last_tok, self.cache = self._prefill_scatter(
+                self.params, self.cache, self._last_tok, tokens, slot)
+            if self.paged:
+                self.pages.note_device(self.cache["pages"])
+        if self.prefix_sharing:
+            # index the prompt's immutable pages so later prompts (and
+            # tenants) can share them; decode never appends into an
+            # indexed page (first append position >= len(prompt))
+            self.pages.prefix.insert(self.pages, seq.prompt,
+                                     self.pages.slot_pages(slot))
         self.sched.on_prefilled(slot, self._record(seq, slot,
                                                    self._last_tok))
+
+    # ----------------------------------------------------- wire dedupe state
+    def _dedupe_state(self, batch: int) -> Dict[str, Any]:
+        return self._dedupe.setdefault(
+            batch, {"remap": {}, "holds": [], "pending": set(),
+                    "needed": set()})
+
+    def _dedupe_discard(self, req_id: int, payload: Any) -> None:
+        """A batch payload left without restoring here (finished while
+        parked, or re-exported by a further handoff): drop it from the
+        batch's pending set, releasing the batch's page holds once no
+        parked payload can reference them anymore."""
+        if not (isinstance(payload, PackedKV) and payload.batch is not None):
+            return
+        st = self._dedupe.get(payload.batch)
+        if st is None:
+            return
+        st["pending"].discard(req_id)
+        if not st["pending"]:
+            self._dedupe_release(payload.batch)
+
+    def _dedupe_release(self, batch: int) -> None:
+        st = self._dedupe.pop(batch, None)
+        if st is not None:
+            for pid in st["holds"]:
+                self.pages.unhold(pid)
+
+    def _restore_shared(self, slot: int, seq: SeqState,
+                        payload: PackedKV) -> bool:
+        """Restore a wire-deduped payload: its referenced pages rode in
+        an earlier payload of the same handoff batch and are resolved
+        through the batch remap (source page id → own pool page), shared
+        copy-on-write into this slot; only the ``carried`` suffix pages
+        are scattered from the wire.  Returns False when a reference
+        does not resolve here (the carrier was adopted elsewhere, or
+        restored with a different batch) — the caller rebuilds the cache
+        from tokens instead."""
+        st = self._dedupe_state(payload.batch)
+        st["pending"].discard(seq.req_id)
+        remap, carried = st["remap"], set(payload.carried)
+        refs: List[int] = []
+        for p in range(payload.n_pages):
+            if p in carried:
+                break
+            dst = remap.get(payload.page_ids[p])
+            if dst is None:
+                return False
+            refs.append(dst)
+        # sharing is prefix-structured: carried pages must be exactly
+        # the suffix past the referenced run
+        if sorted(carried) != list(range(len(refs), payload.n_pages)):
+            return False
+        self.pages.share(slot, refs)
+        self.pages.ensure(slot, payload.n_tokens)
+        self.cache["pages"] = self.pages.device_table()
+        fresh = self.pages.slot_pages(slot)[len(refs):]
+        self.cache = paged_adopt_scatter(self.cfg, self.cache, payload,
+                                         slot, fresh)
+        for j, p in enumerate(sorted(carried)):
+            src = payload.page_ids[p]
+            if src in st["needed"] and src not in remap:
+                remap[src] = fresh[j]
+                if st["pending"]:
+                    # parked batch-mates may reference this page after
+                    # this slot retires — hold it until the batch drains
+                    self.pages.hold(fresh[j])
+                    st["holds"].append(fresh[j])
+        return True
+
+    def _index_restored(self, slot: int, seq: SeqState) -> None:
+        """A restored sequence's prompt pages are as shareable as a
+        freshly-prefilled one's (the scatter laid the tokens out
+        linearly, and decode only appends past them) — index them for
+        future prompts."""
+        if self.prefix_sharing:
+            self.pages.prefix.insert(self.pages, seq.prompt,
+                                     self.pages.slot_pages(slot))
 
     def _restore(self, slot: int, seq: SeqState, payload: Any) -> None:
         """Restore a handed-off sequence's KV state into ``slot`` and
         stage its last generated token as the next decode input.
 
-        Payload kinds: a ``PackedKV`` (page-granular wire form), a raw
-        batch-1 cache (striped engines), or None — the source kept no
-        decode cache (λPipe) or the adoption path priced recomputation
-        cheaper than the transfer; either way the cache is rebuilt once
-        from the tokens (§4.4) and never re-enters the prefill queue."""
+        Payload kinds: a ``PackedKV`` (page-granular wire form, possibly
+        wire-deduped against an earlier payload of its handoff batch), a
+        raw batch-1 cache (striped engines), or None — the source kept
+        no decode cache (λPipe) or the adoption path priced
+        recomputation cheaper than the transfer; either way the cache is
+        rebuilt once from the tokens (§4.4) and never re-enters the
+        prefill queue."""
         if self.paged:
+            if isinstance(payload, PackedKV) \
+                    and payload.batch is not None \
+                    and payload.page_size == self.page_size:
+                ok = self._restore_shared(slot, seq, payload)
+                st = self._dedupe.get(payload.batch)
+                if st is not None and not st["pending"]:
+                    self._dedupe_release(payload.batch)
+                if ok:
+                    self._index_restored(slot, seq)
+                    self._last_tok = self._last_tok.at[slot].set(
+                        seq.generated[-1])
+                    return
+                payload = None         # unresolvable refs: rebuild below
             if payload is None:
                 from repro.core.mode_switch import handoff_requests
                 payload = handoff_requests(
@@ -314,6 +473,7 @@ class ContinuousBatchingEngine:
             ids = self.pages.slot_pages(slot)[:payload.n_pages]
             self.cache = paged_adopt_scatter(self.cfg, self.cache, payload,
                                              slot, ids)
+            self._index_restored(slot, seq)
         else:
             if payload is None:     # pipelined source kept no decode cache
                 from repro.core.mode_switch import handoff_requests
@@ -336,7 +496,7 @@ class ContinuousBatchingEngine:
         # taking a slot — drop the cache it was parked with
         if self._parked:
             for rid in [r for r in self._parked if r in self.sched.finished]:
-                del self._parked[rid]
+                self._dedupe_discard(rid, self._parked.pop(rid))
         if tick.idle:
             return False
         # drop back to the sync-free path once no live/queued/parked
@@ -405,32 +565,57 @@ class ContinuousBatchingEngine:
         engine gathers the whole ``max_len`` slot stripe.  Sequences
         still queued (never prefilled) carry ``None``.  The export list
         is ordered by the admission policy (who gets the adopting
-        instance's free slots first); FCFS keeps slot order."""
+        instance's free slots first); FCFS keeps slot order.
+
+        A prefix-sharing engine dedupes shared pages on the wire: the
+        export gets one ``batch`` tag, each source page ships in the
+        FIRST payload whose run holds it, and later payloads carry only
+        their un-shipped suffix plus the source page ids the adopter
+        needs to remap.  Payloads are packed in policy order so carriers
+        always precede the payloads that reference them."""
         self.flush()          # adopters need concrete token ids (§4.4)
         out: List[Tuple[SeqState, Any]] = []
-        live = {i: s for i, s in enumerate(self.sched.slots)
+        live = [(i, s) for i, s in enumerate(self.sched.slots)
                 if s is not None and not s.finished
-                and self.sched.state[i] is not SlotState.FREE}
-        for slot, seq in live.items():
+                and self.sched.state[i] is not SlotState.FREE]
+        live = [live[i] for i in
+                sorted(range(len(live)),
+                       key=lambda i: self.sched.policy_key(live[i][1], i))]
+        batch = next(_HANDOFF_BATCH) if self.prefix_sharing else None
+        shipped: set = set()
+        for slot, seq in live:
             if self.paged:
                 # the cache holds seq.pos - 1 tokens: the last generated
                 # token is the next decode input, not yet written
                 n_tok = seq.pos - 1
                 ids = self.pages.slot_pages(slot)[
                     :pages_for(n_tok, self.page_size)]
-                out.append((seq, paged_pack(self.cfg, self.cache, slot,
-                                            ids, n_tok, self.page_size)))
+                if batch is not None:
+                    carried = tuple(p for p, pid in enumerate(ids)
+                                    if pid not in shipped)
+                    payload = paged_pack(
+                        self.cfg, self.cache, slot, ids, n_tok,
+                        self.page_size, ship=[ids[p] for p in carried])
+                    payload.page_ids = tuple(ids)
+                    payload.carried = carried
+                    payload.batch = batch
+                    shipped.update(ids)
+                else:
+                    payload = paged_pack(self.cfg, self.cache, slot, ids,
+                                         n_tok, self.page_size)
+                out.append((seq, payload))
             else:
                 out.append((seq, cache_gather(self.cache, slot,
                                               self._axes)))
-        out = [out[i] for i in
-               sorted(range(len(out)),
-                      key=lambda i: self.sched.policy_key(out[i][0], i))]
         have = {s.req_id for s, _ in out}
         for seq in self.sched.handoff():     # releases slots (and pages)
             if seq.req_id not in have:
-                # parked sequences keep the payload they arrived with
-                out.append((seq, self._parked.pop(seq.req_id, None)))
+                # parked sequences keep the payload they arrived with;
+                # a parked wire-deduped payload stops referencing THIS
+                # engine's remap once exported, so its batch holds drop
+                payload = self._parked.pop(seq.req_id, None)
+                self._dedupe_discard(seq.req_id, payload)
+                out.append((seq, payload))
         return out
 
     def adopt(self, pairs: Sequence[Tuple[SeqState, Any]]) -> None:
@@ -449,6 +634,20 @@ class ContinuousBatchingEngine:
             self._eager = True
         started = [(s, c) for s, c in pairs if s.generated]
         fresh = [s for s, c in pairs if not s.generated]
+        # register every wire-dedupe batch payload BEFORE placement: the
+        # first restored carrier must see its batch-mates as pending so
+        # it holds the pages a later (possibly parked) sharer references.
+        # Only source pages some OTHER payload references (non-carried
+        # positions) need a retention hold — holding every carried page
+        # would pin private suffix pages for the batch's whole lifetime
+        # and overcommit small pools.
+        for s, payload in started:
+            if isinstance(payload, PackedKV) and payload.batch is not None:
+                st = self._dedupe_state(payload.batch)
+                st["pending"].add(s.req_id)
+                st.setdefault("needed", set()).update(
+                    payload.page_ids[p] for p in range(payload.n_pages)
+                    if p not in payload.carried)
         # the ADOPTING scheduler's policy decides who takes the free
         # slots and who parks (stable: FCFS keeps the handoff order)
         started = [started[i] for i in

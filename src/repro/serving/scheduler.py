@@ -161,6 +161,10 @@ class SeqState:
     t_arrive: Optional[float] = None     # simulated-clock arrival (metrics)
     slo: Optional["SLOClass"] = None     # service class (control plane)
     handoffs: int = 0
+    # prompt tokens resolved from the prefix cache at admission
+    # (``PageTable.bind``): the engine's prefill skips exactly these and
+    # runs only the suffix through the model
+    shared_tokens: int = 0
 
     @property
     def deadline(self) -> float:
@@ -248,7 +252,8 @@ class Scheduler:
         self.tick_count = 0
         self.finished: Dict[int, SeqState] = {}
         self.stats = {"prefills": 0, "decode_ticks": 0, "decode_tokens": 0,
-                      "admitted": 0, "retired": 0, "adopted": 0}
+                      "admitted": 0, "retired": 0, "adopted": 0,
+                      "prefill_tokens": 0, "shared_tokens": 0}
 
     # ------------------------------------------------------------- intake
     def submit(self, seq: SeqState) -> None:
@@ -343,16 +348,27 @@ class Scheduler:
                 if not self.queue or len(admit) >= self.max_prefill_per_tick:
                     break
                 qi = self._pick(self.queue)
+                # with a prefix index attached, admission charges only
+                # the INCREMENTAL worst-case pages (shared prefix pages
+                # already live cost nothing)
                 if self.pages is not None and not self.pages.can_admit(
-                        self.queue[qi].total_tokens):
+                        self.queue[qi].total_tokens,
+                        prompt=self.queue[qi].prompt):
                     break        # the policy's head blocks: no size bypass
                 seq = self.queue.pop(qi)
                 self.slots[slot] = seq
                 self.state[slot] = SlotState.PREFILL
                 if self.pages is not None:
-                    self.pages.reserve(slot, seq.total_tokens)
+                    # bind = attach the longest cached prefix run (CoW
+                    # share) + reserve the worst case; plain reserve
+                    # when no prefix index is attached
+                    seq.shared_tokens = self.pages.bind(
+                        slot, seq.prompt, seq.total_tokens)
                 admit.append((slot, seq))
                 self.stats["admitted"] += 1
+                self.stats["prefill_tokens"] += (len(seq.prompt)
+                                                 - seq.shared_tokens)
+                self.stats["shared_tokens"] += seq.shared_tokens
         decode = self.live_slots()
         if decode:
             self.stats["decode_ticks"] += 1

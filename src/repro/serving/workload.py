@@ -55,6 +55,9 @@ class Request:
     prompt_len: int
     out_tokens: int
     slo: Optional[SLOClass] = None
+    # multi-tenant prefix sharing: requests of one tenant open with the
+    # same prompt prefix (system prompt / RAG context) — None = no tenant
+    tenant: Optional[int] = None
 
     @property
     def deadline(self) -> float:
@@ -141,6 +144,70 @@ def constant_stress(rps: float, duration: float, *, model: str,
     if slo_mix is not None:
         reqs = assign_slo(reqs, slo_mix, seed=seed + 1)
     return reqs
+
+
+# ----------------------------------------------------- shared-prefix traces
+def make_shared_prefix_prompts(vocab_size: int, *, prefix_len: int,
+                               kind: str = "chat", n_docs: int = 3,
+                               seed: int = 0):
+    """Deterministic token-level ``prompt_fn`` for shared-prefix traces.
+
+    Every tenant owns one fixed ``prefix_len``-token prefix (its system
+    prompt).  kind="chat" appends a per-request suffix directly;
+    kind="rag" inserts one of the tenant's ``n_docs`` cached documents
+    (``prefix_len // 2`` tokens each, chosen deterministically per
+    request) between prefix and suffix — two levels of shareable
+    prefix.  Suffix length is whatever ``req.prompt_len`` leaves over."""
+    def prompt_fn(req: Request) -> List[int]:
+        tenant = req.tenant or 0
+        rng = np.random.default_rng((seed, 17, tenant))
+        toks = list(map(int, rng.integers(0, vocab_size, size=prefix_len)))
+        if kind == "rag":
+            doc = req.req_id % n_docs
+            drng = np.random.default_rng((seed, 23, tenant, doc))
+            toks += list(map(int, drng.integers(0, vocab_size,
+                                                size=prefix_len // 2)))
+        tail = max(1, req.prompt_len - len(toks))
+        trng = np.random.default_rng((seed, 29, req.req_id))
+        toks += list(map(int, trng.integers(0, vocab_size, size=tail)))
+        return toks
+    return prompt_fn
+
+
+def shared_prefix_workload(rps: float, duration: float, *, model: str,
+                           vocab_size: int, n_tenants: int = 4,
+                           prefix_len: int = 256, suffix_len: int = 32,
+                           out_tokens: int = 16, kind: str = "chat",
+                           n_docs: int = 3, seed: int = 0,
+                           slo: Optional[SLOClass] = None,
+                           slo_mix: Optional[Sequence[Tuple[SLOClass, float]]]
+                           = None) -> Tuple[List[Request], "callable"]:
+    """Multi-tenant shared-prefix stream → (requests, prompt_fn).
+
+    Poisson arrivals over ``n_tenants`` tenants; each request's prompt
+    opens with its tenant's fixed prefix (plus, for kind="rag", one of
+    the tenant's cached documents) and ends in a private suffix of
+    1..``suffix_len`` tokens — the multi-tenant reuse pattern a
+    prefix-sharing engine prefills once per tenant instead of once per
+    request.  ``prompt_fn`` reproduces the exact token ids for
+    ``LiveCluster.replay(prompt_fn=...)`` or direct engine submission."""
+    if kind not in ("chat", "rag"):
+        raise ValueError(f"unknown shared-prefix kind: {kind!r}")
+    rng = np.random.default_rng(seed)
+    ts = _poisson_arrivals(lambda t: rps, duration, rng)
+    shared = prefix_len + (prefix_len // 2 if kind == "rag" else 0)
+    reqs = []
+    for i, t in enumerate(ts):
+        tenant = int(rng.integers(n_tenants))
+        sfx = int(rng.integers(max(1, suffix_len // 2), suffix_len + 1))
+        reqs.append(Request(i, model, float(t), shared + sfx, out_tokens,
+                            slo=slo, tenant=tenant))
+    if slo_mix is not None:
+        reqs = assign_slo(reqs, slo_mix, seed=seed + 1)
+    prompt_fn = make_shared_prefix_prompts(
+        vocab_size, prefix_len=prefix_len, kind=kind, n_docs=n_docs,
+        seed=seed)
+    return reqs, prompt_fn
 
 
 def multi_model_trace(n_models: int, per_model_rpm: float, duration: float,

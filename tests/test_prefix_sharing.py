@@ -1,0 +1,349 @@
+"""Copy-on-write prefix sharing: allocator refcount properties, the
+prefix index, engine exactness, wire dedupe, and end-to-end leak checks.
+
+The acceptance bar is the same EXACT greedy-token equality the paged
+engine owes the striped reference: sharing is an allocator optimisation
+(plus a suffix-only prefill), not a model change — including mid-page
+divergence forks, concurrent donor+sharer decode, and drain → deduped
+handoff → adopt with parked sharers.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduced
+from repro.models import (PackedKV, PageTable, PrefixIndex, init_params,
+                          payload_nbytes)
+from repro.serving.cluster import LiveCluster
+from repro.serving.engine import ContinuousBatchingEngine, InferenceEngine
+from repro.serving.workload import Request, make_shared_prefix_prompts
+
+MAX_LEN = 48
+PAGE_SIZE = 16
+_CTX = {}
+
+
+def _ctx():
+    if not _CTX:
+        cfg = reduced(get_config("qwen2.5-3b"), d_model=64)
+        _CTX["cfg"] = cfg
+        _CTX["params"] = init_params(cfg, jax.random.PRNGKey(0))
+        _CTX["ref"] = InferenceEngine(cfg, _CTX["params"], max_len=MAX_LEN)
+    return _CTX["cfg"], _CTX["params"], _CTX["ref"]
+
+
+def _toks(seed, length):
+    cfg, _, _ = _ctx()
+    return list(map(int, jax.random.randint(
+        jax.random.PRNGKey(seed), (length,), 0, cfg.vocab_size)))
+
+
+def _reference(prompt, n_tok):
+    _, _, ref = _ctx()
+    toks = ref.generate({"tokens": jnp.asarray(prompt, jnp.int32)[None]},
+                        n_tok, cache_len=MAX_LEN)
+    return list(map(int, toks[0]))
+
+
+def _engine(sharing, **kw):
+    cfg, params, _ = _ctx()
+    kw.setdefault("n_slots", 4)
+    return ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN,
+                                    page_size=PAGE_SIZE,
+                                    prefix_sharing=sharing, **kw)
+
+
+def _assert_drained(eng):
+    """Allocator back to all-free: no slot pages, no reservations, no
+    dedupe state; index-retained orphans release through clear()."""
+    eng.pages.check_invariants()
+    assert eng.pages.n_slot_owned == 0
+    assert eng.pages.n_reserved == 0
+    assert eng._dedupe == {}
+    if eng.pages.prefix is not None:
+        eng.pages.prefix.clear(eng.pages)
+    assert eng.pages.n_allocated == 0
+
+
+# ------------------------------------------------------------- allocator
+@settings(max_examples=30, deadline=None)
+@given(ops=st.lists(st.tuples(st.integers(0, 5), st.integers(0, 3),
+                              st.integers(0, 40)),
+                    min_size=1, max_size=60))
+def test_share_fork_release_interleavings_never_leak(ops):
+    """Random ensure/share/fork/hold/unhold/release interleavings keep
+    every refcount equal to owners + holds, the free list exact, and a
+    full teardown drains the pool to all-free."""
+    pt = PageTable(n_pages=10, page_size=4, n_slots=4, max_pages=5)
+    holds = []
+    for kind, slot, arg in ops:
+        if kind == 0:                                  # grow a slot
+            want = min(arg % 21, pt.max_pages * pt.page_size)
+            try:
+                pt.ensure(slot, want)
+            except RuntimeError:
+                pass                                   # pool exhausted
+        elif kind == 1:                                # CoW attach
+            allocated = [p for p in range(pt.n_pages)
+                         if pt.refcount(p) > 0]
+            if allocated:
+                pid = allocated[arg % len(allocated)]
+                run = pt.slot_pages(slot)
+                if pid not in run and len(run) < pt.max_pages:
+                    pt.share(slot, [pid])
+        elif kind == 2:                                # fork
+            run = pt.slot_pages(slot)
+            if run:
+                try:
+                    pt.fork(slot, arg % len(run))
+                except RuntimeError:
+                    pass
+        elif kind == 3:                                # retention hold
+            allocated = [p for p in range(pt.n_pages)
+                         if pt.refcount(p) > 0]
+            if allocated:
+                pid = allocated[arg % len(allocated)]
+                pt.hold(pid)
+                holds.append(pid)
+        elif kind == 4 and holds:                      # drop a hold
+            pt.unhold(holds.pop(arg % len(holds)))
+        elif kind == 5:
+            pt.release(slot)
+        pt.check_invariants()
+    for slot in range(pt.n_slots):
+        pt.release(slot)
+    for pid in holds:
+        pt.unhold(pid)
+    pt.check_invariants()
+    assert pt.n_allocated == 0 and pt.n_reserved == 0
+
+
+def test_staged_bind_keeps_device_row_empty_until_prefill():
+    """Admission-time bind acquires refcounts but must NOT expose the
+    shared pages in the device table: the pooled decode step advances
+    every row, and a bound slot awaiting prefill has a stale position —
+    its garbage append has to keep landing on the trash page.  (This is
+    the regression test for shared-page corruption by dead-slot decode
+    writes.)"""
+    pt = PageTable(n_pages=8, page_size=4, n_slots=2, max_pages=4)
+    pt.prefix = PrefixIndex(4)
+    prompt = list(range(10))
+    pt.reserve(0, 12)
+    pt.ensure(0, 10)
+    pt.prefix.insert(pt, prompt, pt.slot_pages(0))
+    shared = pt.bind(1, prompt, 12)
+    assert shared == 8                     # the two fully-indexed pages
+    assert pt.slot_pages(1)                # refcounts moved...
+    assert all(pt._np_table[1] == -1)      # ...but the row stays empty
+    assert pt.refcount(pt.slot_pages(0)[0]) > 1
+    pt.check_invariants()
+    pt.ensure(1, 10)                       # prefill time: row activates
+    run = pt.slot_pages(1)
+    assert list(pt._np_table[1][:len(run)]) == run
+    pt.check_invariants()
+    pt.release(0), pt.release(1)
+    pt.prefix.clear(pt)
+    assert pt.n_allocated == 0
+
+
+def test_prefix_index_partial_match_and_leaf_eviction():
+    """Lookup walks full pages, matches one partial final page, and
+    caps at len(prompt)-1; eviction drops LRU leaves only (an interior
+    page would orphan its chain) and frees orphans back to the pool."""
+    pt = PageTable(n_pages=12, page_size=4, n_slots=2, max_pages=6)
+    idx = PrefixIndex(4)
+    pt.prefix = idx
+    a = [1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12]
+    pt.reserve(0, 12)
+    pt.ensure(0, 12)
+    idx.insert(pt, a, pt.slot_pages(0))
+    assert len(idx) == 3
+    # full + partial page match, capped before the final token
+    ids, m = idx.lookup([1, 2, 3, 4, 5, 6, 99, 99, 7])
+    assert m == 6 and len(ids) == 2        # one full page + 2 of page 2
+    ids, m = idx.lookup(a)                 # identical prompt: cap at 11
+    assert m == 11 and len(ids) == 3
+    assert idx.lookup([9, 9, 9, 9, 9]) == ([], 0)
+    pt.release(0)                          # orphans: index holds survive
+    assert pt.n_allocated == 3
+    freed = idx.evict(pt, 1)               # LRU leaf only
+    assert freed == 1 and len(idx) == 2 and pt.n_allocated == 2
+    idx.clear(pt)
+    assert pt.n_allocated == 0 and len(idx) == 0
+
+
+# ------------------------------------------------------- engine exactness
+def test_shared_prefix_concurrent_exact_and_leak_free():
+    """Concurrent donor + sharers (page-aligned match): greedy tokens
+    bit-equal to the no-sharing paged engine and the striped reference,
+    with prefill actually skipped and the allocator drained after."""
+    pre = _toks(7, 20)
+    prompts = [pre + _toks(100 + i, 6) for i in range(4)]
+    outs = {}
+    for sharing in (False, True):
+        eng = _engine(sharing)
+        for i, p in enumerate(prompts):
+            eng.submit(p, 6, req_id=i)
+        outs[sharing] = eng.run()
+        if sharing:
+            assert eng.sched.stats["shared_tokens"] >= 3 * PAGE_SIZE
+            _assert_drained(eng)
+    assert outs[True] == outs[False]
+    for i, p in enumerate(prompts):
+        assert outs[True][i] == _reference(p, 6), i
+
+
+def test_mid_page_divergence_forks_before_write_exact():
+    """Sharers diverging mid-page share the partial page read-only and
+    fork it before their suffix scatter: tokens stay bit-equal and the
+    donor's indexed page is never written by a sharer."""
+    base = _toks(8, 32)
+    prompts = [base] + [base[:24] + _toks(200 + i, 8) for i in range(3)]
+    outs = {}
+    for sharing in (False, True):
+        eng = _engine(sharing)
+        for i, p in enumerate(prompts):
+            eng.submit(p, 6, req_id=i)
+        outs[sharing] = eng.run()
+        if sharing:
+            # 24 matched tokens each: 16 aligned + 8 into the forked page
+            assert eng.sched.stats["shared_tokens"] == 3 * 24
+            _assert_drained(eng)
+    assert outs[True] == outs[False]
+
+
+def test_suffix_executable_compiles_per_suffix_length():
+    """Sharing engines compile one suffix-prefill executable per suffix
+    LENGTH, not per prompt — two sharers with equal-length distinct
+    suffixes reuse it and still produce reference tokens."""
+    pre = _toks(9, PAGE_SIZE)
+    prompts = [pre + _toks(300 + i, 7) for i in range(3)]
+    eng = _engine(True)
+    for i, p in enumerate(prompts):
+        eng.submit(p, 5, req_id=i)
+    out = eng.run()
+    for i, p in enumerate(prompts):
+        assert out[i] == _reference(p, 5), i
+    _assert_drained(eng)
+
+
+# ------------------------------------------------------------ wire dedupe
+def _mid_gen_sharing(prompts, ntok=6):
+    eng = _engine(True)
+    for i, p in enumerate(prompts):
+        eng.submit(p, ntok, req_id=i)
+    for _ in range(len(prompts) + 2):
+        eng.step()
+    eng.drain()
+    return eng
+
+
+def test_handoff_dedupes_shared_pages_and_restores_exact():
+    """One export batch ships each shared page once: sharers carry only
+    their private suffix pages and resolve the prefix through the batch
+    remap at adoption — wire roundtrip included, tokens bit-equal, both
+    ends drained."""
+    pre = _toks(11, 20)
+    prompts = [pre + _toks(400 + i, 4) for i in range(3)]
+    ref = _engine(False)
+    for i, p in enumerate(prompts):
+        ref.submit(p, 6, req_id=i)
+    want = ref.run()
+
+    a = _mid_gen_sharing(prompts)
+    pairs = a.handoff()
+    _assert_drained(a)
+    by_id = {s.req_id: c for s, c in pairs}
+    assert all(isinstance(c, PackedKV) and c.batch is not None
+               for c in by_id.values())
+    carriers = [c for c in by_id.values()
+                if c.carried == tuple(range(c.n_pages))]
+    sharers = [c for c in by_id.values()
+               if c.carried != tuple(range(c.n_pages))]
+    assert carriers and len(sharers) == 2
+    for c in sharers:                      # prefix page rides elsewhere
+        assert c.carried and min(c.carried) > 0
+        assert payload_nbytes(c) < payload_nbytes(carriers[0])
+    wired = [(s, c.from_wire(*c.wire())) for s, c in pairs]
+    b = _engine(True)
+    b.adopt(wired)
+    out = b.run()
+    assert {i: out[i] for i in want} == want
+    assert b.sched.stats["prefills"] == 0
+    _assert_drained(b)
+
+
+def test_handoff_parked_sharers_resume_through_remap_exact():
+    """Adopting into a 1-slot engine parks the sharers; the carrier's
+    shared pages stay held until every batch payload resolves, and the
+    parked sharers restore through the remap — no recompute, exact."""
+    pre = _toks(12, 20)
+    prompts = [pre + _toks(500 + i, 4) for i in range(3)]
+    ref = _engine(False)
+    for i, p in enumerate(prompts):
+        ref.submit(p, 6, req_id=i)
+    want = ref.run()
+
+    a = _mid_gen_sharing(prompts)
+    b = _engine(True, n_slots=1)
+    b.adopt(a.handoff())
+    out = b.run()
+    assert {i: out[i] for i in want} == want
+    assert b.sched.stats["prefills"] == 0
+    _assert_drained(b)
+
+
+def test_unresolvable_batch_refs_fall_back_to_recompute():
+    """A sharer whose carrier went to a DIFFERENT destination cannot
+    resolve its refs — it rebuilds from tokens instead (exact, slower),
+    and the dedupe state still drains."""
+    pre = _toks(13, 20)
+    prompts = [pre + _toks(600 + i, 4) for i in range(3)]
+    ref = _engine(False)
+    for i, p in enumerate(prompts):
+        ref.submit(p, 6, req_id=i)
+    want = ref.run()
+
+    a = _mid_gen_sharing(prompts)
+    pairs = a.handoff()
+    sharer_pairs = [(s, c) for s, c in pairs
+                    if c.carried != tuple(range(c.n_pages))]
+    assert sharer_pairs
+    b = _engine(True)
+    b.adopt(sharer_pairs)                  # carrier went elsewhere
+    out = b.run()
+    for s, _ in sharer_pairs:
+        assert out[s.req_id] == want[s.req_id]
+    _assert_drained(b)
+
+
+# -------------------------------------------------------------- end to end
+def test_livecluster_replay_shared_prefix_trace_leak_free():
+    """Full LiveCluster.replay of a multi-tenant shared-prefix trace:
+    tokens equal the striped reference and every engine's allocator
+    returns to all-free once the prefix index is dropped."""
+    from repro.serving.autoscaler import Autoscaler, AutoscalerConfig
+    cfg, params, _ = _ctx()
+    prompt_fn = make_shared_prefix_prompts(cfg.vocab_size,
+                                           prefix_len=PAGE_SIZE, seed=5)
+    trace = [Request(i, "m", 0.0005 * i, PAGE_SIZE + 4, 4,
+                     tenant=i % 2) for i in range(6)]
+    prompts = {r.req_id: prompt_fn(r) for r in trace}
+    assert prompts[0][:PAGE_SIZE] == prompts[2][:PAGE_SIZE]
+    lc = LiveCluster(n_nodes=2, n_slots=2, max_len=MAX_LEN,
+                     page_size=PAGE_SIZE)
+    lc.register("m", cfg, params, n_blocks=2, hot_nodes=[0])
+    asc = Autoscaler(AutoscalerConfig(cooldown_up=10.0, keepalive=10.0))
+    log = lc.replay(trace, autoscaler=asc, prompt_fn=prompt_fn)
+    assert log.summary()["n_finished"] == len(trace)
+    out = lc.results("m")
+    for r in trace:
+        assert out[r.req_id] == _reference(prompts[r.req_id],
+                                           r.out_tokens), r.req_id
+    shared = 0
+    for eng in lc.serving["m"].locals_.values():
+        shared += eng.sched.stats.get("shared_tokens", 0)
+        assert eng.prefix_sharing
+        _assert_drained(eng)
+    assert shared > 0                      # the trace actually shared

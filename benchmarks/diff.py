@@ -48,9 +48,16 @@ DEFAULT_WATCH_UP = ("slo_attainment",)
 # prefix-sharing floors work the same way: the sharing engine must keep
 # skipping >=30% of prompt prefill on its shared-prefix trace and must
 # never make p99 TTFT worse than the no-sharing engine in the same run.
+# The relative_ttft floor matches by substring, so it also gates
+# disagg/relative_ttft: disaggregated serving must never cost p99 TTFT
+# versus unified serving in the same run.  relative_itl_p99 is the
+# disagg tentpole gate: the split pools' steady-state inter-token p99
+# must stay at least as tight as unified's (the committed baseline
+# shows >=1.1x better).
 DEFAULT_FLOORS = {"relative_throughput": 1.0,
                   "prefill_tokens_skipped_frac": 0.3,
-                  "relative_ttft": 1.0}
+                  "relative_ttft": 1.0,
+                  "relative_itl_p99": 1.0}
 
 
 def load_rows(path: str) -> Dict[str, float]:

@@ -25,6 +25,9 @@ perf trajectory across PRs can be diffed without parsing stdout.  Modules:
   slo      bench_slo            (control plane: EDF + placement arbiter
                                  vs FCFS + independent scaling, per-class
                                  p99 TTFT and SLO attainment)
+  disagg   bench_disagg         (prefill/decode disaggregation on the
+                                 PackedKV wire: inter-token p99 + TTFT
+                                 vs unified serving, priced wire bytes)
 
 ``benchmarks.diff`` compares two directories of these JSON summaries and
 exits non-zero on tail-latency/GPU-cost regressions (the nightly CI gate
@@ -44,8 +47,9 @@ import time
 import traceback
 
 from benchmarks import (bench_autoscale, bench_cache,
-                        bench_continuous_batching, bench_engine, bench_kway,
-                        bench_latency, bench_multicast, bench_multimodel,
+                        bench_continuous_batching, bench_disagg,
+                        bench_engine, bench_kway, bench_latency,
+                        bench_multicast, bench_multimodel,
                         bench_num_blocks, bench_optimizations, bench_paged,
                         bench_prefix, bench_roofline, bench_slo,
                         bench_trace, bench_throughput)
@@ -58,7 +62,7 @@ MODULES = {
     "roofline": bench_roofline, "engine": bench_engine,
     "cbatch": bench_continuous_batching, "mmodel": bench_multimodel,
     "autoscale": bench_autoscale, "paged": bench_paged, "slo": bench_slo,
-    "prefix": bench_prefix,
+    "prefix": bench_prefix, "disagg": bench_disagg,
 }
 
 

@@ -31,7 +31,7 @@ so the engine fuses prefill + scatter into one compiled executable.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -215,6 +215,18 @@ class PageTable:
 
     def refcount(self, pid: int) -> int:
         return self._refcount[pid]
+
+    def occupancy(self) -> Dict[str, int]:
+        """Live page-pool occupancy — the ``Scheduler.stats()`` surface
+        the autoscaler's page-pressure signal reads.  ``pages_live``
+        counts allocated pages; ``pages_held`` the subset pinned only by
+        retention references (prefix index, wire-dedupe holds) — those
+        are reclaimable, so pressure readers should treat
+        ``pages_live - pages_held`` as the hard floor."""
+        return {"pages_total": self.n_pages,
+                "pages_live": self.n_allocated,
+                "pages_free": len(self._free),
+                "pages_held": sum(1 for h in self._held if h > 0)}
 
     def slot_pages(self, slot: int) -> List[int]:
         return list(self._slot_pages[slot])

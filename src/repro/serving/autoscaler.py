@@ -33,7 +33,17 @@ DEFAULT_MAX_K = 4
 # ----------------------------------------------------------------- signals
 @dataclasses.dataclass
 class LoadSignals:
-    """One model's load as observed by the runtime at decision time."""
+    """One model's load as observed by the runtime at decision time.
+
+    A disaggregated model reports one signal PER POOL (``role`` set to
+    ``"prefill"`` or ``"decode"``) instead of one aggregate: the runtime
+    attaches each pool's own queue/slots/idle view plus the latency the
+    pool owns — TTFT rides the prefill signal, inter-token latency the
+    decode signal — so the controller sizes the two pools independently
+    with the same trigger vocabulary.  ``role=None`` (the default) is
+    the whole-model signal every non-disaggregated deployment emits,
+    byte-identical to the pre-disagg behavior.
+    """
     model: str
     queue_depth: int                 # requests with no slot anywhere
     slots_total: int                 # slots across live instances
@@ -46,11 +56,23 @@ class LoadSignals:
     idle_nodes: Sequence[Tuple[int, float]] = ()  # (node, idle seconds)
     slo_pressure: float = 0.0        # MetricsLog.slo_pressure at decision
     recent_arrivals: int = 0         # arrivals since the last decision
+    role: Optional[str] = None       # pool of a disaggregated model
+    recent_itl: Sequence[float] = ()  # per-request mean inter-token gaps
+    pages_total: int = 0             # KV page pool size (0 = not reported)
+    pages_live: int = 0              # allocated pages across the pool
 
     @property
     def utilization(self) -> float:
         return self.slots_busy / self.slots_total if self.slots_total \
             else float("inf" if self.queue_depth else 0)
+
+    @property
+    def page_utilization(self) -> float:
+        """Live fraction of the KV page pool (0 when not reported):
+        slot pressure can look fine while long prompts exhaust pages —
+        this is the signal that sees it (``Scheduler.stats()``)."""
+        return self.pages_live / self.pages_total if self.pages_total \
+            else 0.0
 
 
 # ----------------------------------------------------------------- actions
@@ -60,6 +82,7 @@ class ScaleUp:
     n_new: int
     k: int                           # multicast fan-out hint
     reason: str = ""
+    role: Optional[str] = None       # pool the new replicas join
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +90,7 @@ class ScaleDown:
     model: str
     nodes: Tuple[int, ...]
     reason: str = ""
+    role: Optional[str] = None       # pool the released nodes leave
 
 
 Action = Union[ScaleUp, ScaleDown]
@@ -95,6 +119,16 @@ class AutoscalerConfig:
     # urgency of waiting requests (LoadSignals.slo_pressure, fed from
     # MetricsLog) exceeds the threshold
     pressure_high: Optional[float] = None
+    # inter-token latency trigger (decode pools of a disaggregated
+    # model): +1 node while the recent p95 per-request ITL exceeds the
+    # target — the decode-side analogue of ttft_slo, which a prefill
+    # pool owns
+    itl_slo: Optional[float] = None
+    # page-pressure trigger: +1 node while the live fraction of the KV
+    # page pool (LoadSignals via Scheduler.stats()) exceeds the
+    # threshold — slot utilization alone cannot see long prompts
+    # exhausting pages
+    page_util_high: Optional[float] = None
     # predictive pre-warm (opt-in): Holt/EWMA short-horizon forecast of
     # the per-model arrival rate (fed from MetricsLog arrivals via
     # LoadSignals.recent_arrivals).  When the arrivals predicted over
@@ -112,14 +146,17 @@ class Autoscaler:
 
     def __init__(self, config: Optional[AutoscalerConfig] = None):
         self.config = config or AutoscalerConfig()
-        self._last_up: Dict[str, float] = {}
-        self._last_down: Dict[str, float] = {}
+        # pacing and forecast state key by (model, role): a
+        # disaggregated model's prefill and decode pools pace and
+        # forecast independently (role None = the whole-model signal)
+        self._last_up: Dict[Tuple[str, Optional[str]], float] = {}
+        self._last_down: Dict[Tuple[str, Optional[str]], float] = {}
         self.decisions: List[Tuple[float, Action]] = []
-        # Holt/EWMA forecast state per model: smoothed arrival rate
+        # Holt/EWMA forecast state per pool: smoothed arrival rate
         # (req/s), its trend (req/s²), and the last observation time
-        self._rate: Dict[str, float] = {}
-        self._trend: Dict[str, float] = {}
-        self._last_obs: Dict[str, float] = {}
+        self._rate: Dict[Tuple[str, Optional[str]], float] = {}
+        self._trend: Dict[Tuple[str, Optional[str]], float] = {}
+        self._last_obs: Dict[Tuple[str, Optional[str]], float] = {}
 
     # ------------------------------------------------------------- policy
     def desired_new_nodes(self, sig: LoadSignals) -> Tuple[int, str]:
@@ -149,6 +186,14 @@ class Autoscaler:
                 sig.slo_pressure >= c.pressure_high:
             boost += 1
             reason = (reason + "+pressure").lstrip("+")
+        if c.itl_slo is not None and sig.recent_itl and \
+                percentile(sig.recent_itl, 95) > c.itl_slo:
+            boost += 1
+            reason = (reason + "+itl").lstrip("+")
+        if c.page_util_high is not None and \
+                sig.page_utilization >= c.page_util_high:
+            boost += 1
+            reason = (reason + "+pages").lstrip("+")
         n_new = base + boost
         if c.max_nodes is not None:
             n_new = min(n_new, c.max_nodes - sig.nodes_busy)
@@ -163,7 +208,7 @@ class Autoscaler:
         fit the free slot pool.  Returns 0 while the forecast sees no
         shortfall — the reactive triggers still apply."""
         c = self.config
-        m = sig.model
+        m = (sig.model, sig.role)    # per-pool state for disagg models
         last = self._last_obs.get(m)
         self._last_obs[m] = now
         if last is None or now <= last:
@@ -193,7 +238,7 @@ class Autoscaler:
         c = self.config
         actions: List[Action] = []
         for sig in signals:
-            m = sig.model
+            m, key = sig.model, (sig.model, sig.role)
             n_new, reason = self.desired_new_nodes(sig)
             if c.forecast:
                 fb = self._forecast_new_nodes(now, sig)
@@ -206,27 +251,28 @@ class Autoscaler:
                 # cold start bypasses the cooldown: a model with zero
                 # capacity and waiting requests cannot afford to pace
                 cold = sig.slots_total == 0 and sig.queue_depth > 0
-                if cold or now - self._last_up.get(m, -math.inf) \
+                if cold or now - self._last_up.get(key, -math.inf) \
                         >= c.cooldown_up:
-                    self._last_up[m] = now
-                    actions.append(ScaleUp(m, n_new, c.max_k, reason))
+                    self._last_up[key] = now
+                    actions.append(ScaleUp(m, n_new, c.max_k, reason,
+                                           sig.role))
                 continue
             # scale-down: idle past keep-alive, nothing queued, no scale
             # mid-flight (its nodes are about to become replicas), and
             # outside both cooldown windows
             if sig.queue_depth > 0 or sig.scaling_in_flight:
                 continue
-            if now - self._last_up.get(m, -math.inf) < c.cooldown_down:
+            if now - self._last_up.get(key, -math.inf) < c.cooldown_down:
                 continue
-            if now - self._last_down.get(m, -math.inf) < c.cooldown_down:
+            if now - self._last_down.get(key, -math.inf) < c.cooldown_down:
                 continue
             idle = [nd for nd, idle_s in sig.idle_nodes
                     if idle_s >= c.keepalive]
             n_down = min(len(idle), sig.n_replicas - c.min_replicas)
             if n_down > 0:
-                self._last_down[m] = now
+                self._last_down[key] = now
                 actions.append(ScaleDown(m, tuple(idle[:n_down]),
-                                         "keepalive"))
+                                         "keepalive", sig.role))
         self.decisions.extend((now, a) for a in actions)
         return actions
 

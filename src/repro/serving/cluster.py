@@ -96,8 +96,18 @@ class PipeInstance:
 
 @dataclasses.dataclass
 class ModelServing:
-    """Per-model serving state: every instance is scheduler-driven."""
+    """Per-model serving state: every instance is scheduler-driven.
+
+    ``locals_`` holds the decode-capable replicas (role ``unified`` or
+    ``decode`` — both adopt and decode; only unified also prefills);
+    ``prefills`` is the disaggregated prompt pool: prefill-role engines
+    that run prompt passes only and stream finished prompts to a
+    ``locals_`` engine over the PackedKV wire (the tick-time export
+    pump).  An empty ``prefills`` dict is today's unified serving,
+    byte-identical."""
     locals_: Dict[int, ContinuousBatchingEngine] = dataclasses.field(
+        default_factory=dict)
+    prefills: Dict[int, ContinuousBatchingEngine] = dataclasses.field(
         default_factory=dict)
     pipes: List[PipeInstance] = dataclasses.field(default_factory=list)
     # (req_id, prompt, max_new, t_arrive, slo) waiting for capacity
@@ -121,6 +131,9 @@ class ActiveScale:
     steps_done: int = 0
     spawned: Set[int] = dataclasses.field(default_factory=set)
     switched: Set[int] = dataclasses.field(default_factory=set)
+    # role the mode-switched destinations assume (None → unified):
+    # a disagg pool scales its own side without touching the other
+    role: Optional[str] = None
 
     @property
     def done(self) -> bool:
@@ -217,7 +230,9 @@ class LiveCluster:
     def register(self, name: str, cfg: ModelConfig, params, *,
                  n_blocks: int, hot_nodes: Sequence[int] = (),
                  warm_nodes: Sequence[int] = (),
-                 warm_copies: int = 0) -> ModelDeployment:
+                 warm_copies: int = 0,
+                 prefill_nodes: Sequence[int] = (),
+                 decode_nodes: Sequence[int] = ()) -> ModelDeployment:
         """Pack ``params`` into wire blocks and (optionally) pre-place the
         model: ``hot_nodes`` get a GPU-resident replica with a live local
         engine; host-tier warm copies (the §5 locality tier a later
@@ -225,7 +240,10 @@ class LiveCluster:
         ``PlacementArbiter`` — ask for ``warm_copies=n`` and the arbiter
         spreads them over the least-loaded host caches; ``warm_nodes``
         remains as an explicit pin for tests/benchmarks that need a
-        specific layout."""
+        specific layout.  ``prefill_nodes``/``decode_nodes`` stand up a
+        disaggregated deployment: the prefill pool runs prompt passes
+        only and streams finished prompts to the decode pool over the
+        PackedKV wire (each pool then autoscales independently)."""
         assert cfg.family != "encdec", "runtime covers decoder-only families"
         stacked, specs = pack_model(cfg, params, n_blocks)
         stacked = np.asarray(stacked)
@@ -237,6 +255,10 @@ class LiveCluster:
         for nd in hot_nodes:
             self._load_full(name, nd)
             self._ensure_local(name, nd)
+        for nd, role in [(nd, "prefill") for nd in prefill_nodes] + \
+                        [(nd, "decode") for nd in decode_nodes]:
+            self._load_full(name, nd)
+            self._ensure_local(name, nd, role=role)
         def warm_up(nd: int) -> None:
             shard = ModelShard(name, dep.n_blocks,
                                buffers={b: dep.registry[b]
@@ -265,22 +287,31 @@ class LiveCluster:
                        self._unpack(dep, b, dep.registry[b]))
 
     # ------------------------------------------------------------- engines
-    def _ensure_local(self, model: str,
-                      node_id: int) -> ContinuousBatchingEngine:
+    def _ensure_local(self, model: str, node_id: int,
+                      role: str = "unified") -> ContinuousBatchingEngine:
+        """Local engine for ``model`` on ``node_id``; prefill-role engines
+        live in the separate ``prefills`` pool (they are not adoption or
+        unified-routing candidates), everything else in ``locals_``.  A
+        node already hosting the model's engine keeps it — role is fixed
+        at creation (``set_role`` relaxes decode→unified at runtime)."""
         sv = self.serving[model]
-        if node_id not in sv.locals_:
+        pool = sv.prefills if role == "prefill" else sv.locals_
+        other = sv.locals_ if role == "prefill" else sv.prefills
+        assert node_id not in other, \
+            (model, node_id, "node already hosts the other role's engine")
+        if node_id not in pool:
             dep = self.models[model]
             shard = self.nodes[node_id].gpu_shard(model)
             assert shard is not None and shard.complete, \
                 (model, node_id, "local engine needs a full replica")
             params = unflatten_params(dep.cfg, shard.flat)
-            sv.locals_[node_id] = ContinuousBatchingEngine(
+            pool[node_id] = ContinuousBatchingEngine(
                 dep.cfg, params, n_slots=self.n_slots, max_len=self.max_len,
                 max_prefill_per_tick=self.max_prefill_per_tick,
                 paged=self.paged, page_size=self.page_size,
                 prefix_sharing=self.prefix_sharing,
-                policy=self.admission)
-        return sv.locals_[node_id]
+                policy=self.admission, role=role)
+        return pool[node_id]
 
     def _pipeline_forward(self, model: str, pipe: ExecutionPipeline,
                           node_map: Dict[int, int]):
@@ -314,12 +345,19 @@ class LiveCluster:
         return fwd
 
     # ------------------------------------------------------------- scaling
-    def scale(self, model: str, n_new: int, *,
-              k: Optional[int] = None) -> ScaleReport:
+    def scale(self, model: str, n_new: int, *, k: Optional[int] = None,
+              role: Optional[str] = None) -> ScaleReport:
         """Locality-driven k→N scale-up (§5): acquire sources by tier
         (GPU > host > remote-host > SSD), start the k-way multicast to
         ``n_new`` free destination nodes, and let execution pipelines
-        serve during loading.  Returns simulated-clock accounting."""
+        serve during loading.  Returns simulated-clock accounting.
+
+        ``role`` grows one disagg pool: destinations mode-switch into
+        that role, and the arbiter ranks them near the OTHER pool's
+        nodes (a new decode replica lands beside the prefill nodes that
+        will stream KV to it, and vice versa).  A cold-acquired source
+        always comes up unified — it must serve whole requests until
+        the pools exist."""
         dep = self.models[model]
         assert model not in self.scales, \
             f"{model}: one scale operation at a time"
@@ -336,9 +374,16 @@ class LiveCluster:
         k = max(1, min(k or DEFAULT_MAX_K, len(sources), DEFAULT_MAX_K))
         srcs = sources[:k]
         # arbiter-ranked destinations (§5 locality: warm-for-this-model
-        # first, then least host-cache collateral) instead of first-free
+        # first, then least host-cache collateral) instead of first-free;
+        # role-split scale-outs additionally rank near the feeding pool
+        sv = self.serving[model]
+        near: Tuple[int, ...] = ()
+        if role == "decode":
+            near = tuple(sv.prefills)
+        elif role == "prefill":
+            near = tuple(sv.locals_)
         dests = self.arbiter.pick_dests(self.state, model, max(n_new, 0),
-                                        exclude=srcs)
+                                        exclude=srcs, near=near)
         first_serve = [t0] if fresh_source is not None else []
         t_complete = t0
         if dests:
@@ -347,7 +392,8 @@ class LiveCluster:
             plan = plan_scale(k + len(dests), dep.n_blocks, k, model=model)
             node_map = {i: nd for i, nd in enumerate(srcs + list(dests))}
             sc = ActiveScale(model, plan, node_map, t0,
-                             self.link.step_time(dep.block_nbytes))
+                             self.link.step_time(dep.block_nbytes),
+                             role=role)
             self.scales[model] = sc
             first_serve += [sc.time_at(r) for r in plan.pipeline_ready
                             if r >= 0]
@@ -412,6 +458,8 @@ class LiveCluster:
         sv = self.serving[model]
         for nd in nodes:
             eng = sv.locals_.pop(nd, None)
+            if eng is None:
+                eng = sv.prefills.pop(nd, None)
             if eng is not None:
                 eng.drain()
                 pairs = eng.handoff()
@@ -420,7 +468,8 @@ class LiveCluster:
                     assert target is not None, \
                         f"{model}: scale_down of the last replica with " \
                         f"in-flight requests"
-                    target.adopt(self._price_handoff(model, pairs))
+                    self._adopt_pairs(model, target,
+                                      self._price_handoff(model, pairs))
             self.state.release(nd, self.clock, model)
 
     # ------------------------------------------------------------- control
@@ -482,7 +531,8 @@ class LiveCluster:
             if pi >= sc.plan.k and pi not in sc.switched \
                     and 0 <= done_step <= step:
                 sc.switched.add(pi)
-                self._ensure_local(model, sc.node_map[pi])
+                self._ensure_local(model, sc.node_map[pi],
+                                   role=sc.role or "unified")
         # 2. spawn execution pipelines that became ready — unless every
         #    member already mode-switched (locals serve instead)
         from repro.distributed.pipeline import PipelinedEngine
@@ -513,16 +563,37 @@ class LiveCluster:
             self._drain_pipe(sc.model, pinst)
 
     def _adoption_target(self, model: str, exclude: Optional[int] = None,
-                         members: Sequence[int] = ()
+                         members: Sequence[int] = (),
+                         near: Sequence[int] = ()
                          ) -> Optional[ContinuousBatchingEngine]:
         """Arbiter-ranked adoption target (locality: a replica on a
         member node of the draining instance keeps the packed KV off the
         link, a ready replica costs one hop, a still-fetching replica is
-        the last resort)."""
+        the last resort).  ``near`` biases within a tier toward replicas
+        close to the exporting prefill node (the disagg wire path)."""
         return self.arbiter.handoff_target(
             self.serving[model].locals_, members=members, exclude=exclude,
+            near=near,
             ready=lambda nd: self._ready_at.get((model, nd), 0.0)
             <= self.clock)
+
+    def _adopt_pairs(self, model: str, target: ContinuousBatchingEngine,
+                     pairs: Sequence[Tuple]) -> None:
+        """Hand priced (seq, payload) pairs to the adopting engine.  A
+        decode-role target only takes sequences already past prefill;
+        never-prefilled ones return to the pending queue and re-route
+        through the prefill pool (their original ``t_arrive`` rides
+        along, so TTFT still reports the full wait)."""
+        if target.role == "decode":
+            fresh = [s for s, _ in pairs if not s.generated]
+            pairs = [(s, p) for s, p in pairs if s.generated]
+            sv = self.serving[model]
+            for seq in fresh:
+                sv.pending.append((seq.req_id, list(seq.prompt),
+                                   seq.max_new_tokens, seq.t_arrive,
+                                   seq.slo))
+        if pairs:
+            target.adopt(pairs)
 
     def _drain_pipe(self, model: str, pinst: PipeInstance) -> None:
         pinst.drained = True
@@ -532,7 +603,7 @@ class LiveCluster:
             return
         target = self._adoption_target(model, members=pinst.members)
         assert target is not None, "mode switch with no local replica"
-        target.adopt(self._price_handoff(model, pairs))
+        self._adopt_pairs(model, target, self._price_handoff(model, pairs))
 
     @staticmethod
     def _handoff_groups(pairs: Sequence[Tuple]) -> List[List[int]]:
@@ -650,8 +721,27 @@ class LiveCluster:
         instance with a free slot, pipelines first (paper: offload spikes
         to the scaling nodes).  While a scale-out is in flight, overflow
         stays pending — new pipelines and replicas are about to appear —
-        otherwise it queues on the least-loaded existing instance."""
+        otherwise it queues on the least-loaded existing instance.
+
+        Disaggregated path: when the model has a prefill pool AND a
+        decode-capable replica to stream into, prompts land on the
+        least-loaded prefill engine (the tick-time export pump moves
+        them to the decode pool after their prompt pass).  With the
+        decode pool gone the prefill pool is skipped — exports would
+        strand — and conversely, a decode-only deployment relaxes its
+        least-loaded engine to unified rather than strand prompts."""
         sv = self.serving[model]
+        if sv.prefills and sv.locals_:
+            pres = [(eng.sched.in_flight + eng.sched.pending, nd, eng)
+                    for nd, eng in sv.prefills.items()
+                    if self._ready_at.get((model, nd), 0.0) <= self.clock]
+            room = [c for c in pres if c[0] < self.n_slots]
+            if room:
+                return min(room)[2]
+            if model in self.scales:
+                return None
+            if pres:
+                return min(pres)[2]
         pipes = [(p.engine.sched.in_flight + p.engine.sched.pending, i, p)
                  for i, p in enumerate(sv.live_pipes())]
         room = [c for c in pipes if c[0] < self.n_slots]
@@ -659,7 +749,8 @@ class LiveCluster:
             return min(room)[2].engine
         locs = [(eng.sched.in_flight + eng.sched.pending, nd, eng)
                 for nd, eng in sv.locals_.items()
-                if self._ready_at.get((model, nd), 0.0) <= self.clock]
+                if eng.role != "decode"
+                and self._ready_at.get((model, nd), 0.0) <= self.clock]
         room = [c for c in locs if c[0] < self.n_slots]
         if room:
             return min(room)[2]
@@ -671,10 +762,22 @@ class LiveCluster:
         # plan to wait on): queue on the least-loaded one anyway rather
         # than strand the request
         locs_all = [(eng.sched.in_flight + eng.sched.pending, nd, eng)
-                    for nd, eng in sv.locals_.items()]
+                    for nd, eng in sv.locals_.items()
+                    if eng.role != "decode"]
         if locs_all:
             return min(locs_all)[2]
-        return min(pipes)[2].engine if pipes else None
+        if pipes:
+            return min(pipes)[2].engine
+        # only decode-role engines remain and no prefill pool feeds them
+        # (the disagg path above would have taken the request): relax the
+        # least-loaded one to unified so prompts aren't stranded
+        decs = [(eng.sched.in_flight + eng.sched.pending, nd, eng)
+                for nd, eng in sv.locals_.items() if eng.role == "decode"]
+        if decs and not sv.prefills:
+            eng = min(decs)[2]
+            eng.set_role("unified")
+            return eng
+        return None
 
     def tick(self) -> bool:
         """Run one scheduler tick on every serving instance of every
@@ -695,6 +798,24 @@ class LiveCluster:
                 sv.pending = left
             for pinst in sv.live_pipes():
                 did = pinst.engine.step() or did
+            for eng in sv.prefills.values():
+                did = eng.step() or did
+            # export pump (disagg wire): stream finished prompt passes
+            # to the decode pool.  The adoption target is found BEFORE
+            # exporting — export frees the prefill slots, so with no
+            # target the sequences stay parked in their slots instead
+            # of being lost
+            for nd, eng in list(sv.prefills.items()):
+                if not eng.sched.prefilled_slots():
+                    continue
+                target = self._adoption_target(model, near=(nd,))
+                if target is None:
+                    continue
+                pairs = eng.export_prefilled()
+                if pairs:
+                    self._adopt_pairs(model, target,
+                                      self._price_handoff(model, pairs))
+                    did = True
             for eng in sv.locals_.values():
                 did = eng.step() or did
         return did
@@ -712,56 +833,125 @@ class LiveCluster:
             raise RuntimeError(
                 f"requests pending with no serving instance: {stuck} "
                 f"(scale the model or register it with hot_nodes)")
+        stranded = {m: n for m, sv in self.serving.items()
+                    if (n := sum(len(e.sched.prefilled_slots())
+                                 for e in sv.prefills.values()))
+                    and not sv.locals_}
+        if stranded:
+            raise RuntimeError(
+                f"prefilled sequences stranded with no decode pool: "
+                f"{stranded} (scale a decode or unified replica)")
 
     # --------------------------------------------------------- trace replay
     def _schedulers(self, model: str):
         sv = self.serving[model]
         for eng in sv.locals_.values():
             yield eng.sched
+        for eng in sv.prefills.values():
+            yield eng.sched
         for pinst in sv.pipes:
             yield pinst.engine.sched
+
+    @staticmethod
+    def _pool_pages(engines) -> Tuple[int, int]:
+        """Summed page-pool occupancy across engines (0,0 when unpaged)."""
+        total = live = 0
+        for eng in engines:
+            st = eng.stats()
+            total += st.get("pages_total", 0)
+            live += st.get("pages_live", 0)
+        return total, live
 
     def _load_signals(self, now: float,
                       last_busy: Dict[Tuple[str, int], float],
                       recent_ttft: Dict[str, List[float]],
                       log: Optional[MetricsLog] = None,
-                      arrivals: Optional[Dict[str, int]] = None
+                      arrivals: Optional[Dict[str, int]] = None,
+                      recent_itl: Optional[Dict[str, List[float]]] = None
                       ) -> List[LoadSignals]:
         """Per-model load as the autoscaler vocabulary (queue depth, slot
         utilization, committed nodes, idle replicas, SLO pressure from
-        the metrics log, arrivals since the last decision)."""
+        the metrics log, arrivals since the last decision).
+
+        A disaggregated model emits TWO signals so its pools size
+        independently: the prefill signal carries the arrival queue,
+        TTFT samples and prompt-page occupancy; the decode signal
+        carries decode slot utilization, inter-token latencies and
+        generation-page occupancy.  A unified model emits the single
+        aggregate signal it always did (role=None, byte-identical)."""
         signals = []
         for model, sv in self.serving.items():
-            queued = len(sv.pending)
-            slots_total = slots_busy = 0
-            for pinst in sv.live_pipes():
-                queued += pinst.engine.sched.pending
-                slots_total += pinst.engine.n_slots
-                slots_busy += pinst.engine.sched.in_flight
-            for nd, eng in sv.locals_.items():
-                queued += eng.sched.pending
-                slots_total += eng.n_slots
-                slots_busy += eng.sched.in_flight
-                # a replica's keep-alive window starts when it is first
-                # observed (fresh replicas are not instantly "idle")
-                if not eng.sched.done:
-                    last_busy[(model, nd)] = now
-                else:
-                    last_busy.setdefault((model, nd), now)
-            busy = set(sv.locals_)
             sc = self.scales.get(model)
-            if sc is not None:
-                busy |= set(sc.node_map.values())
-            idle = [(nd, now - last_busy[(model, nd)])
-                    for nd in sv.locals_]
-            signals.append(LoadSignals(
-                model, queued, slots_total, slots_busy, len(busy),
-                self.n_slots, scaling_in_flight=sc is not None,
-                n_replicas=len(sv.locals_),
-                recent_ttft=tuple(recent_ttft.get(model, ())),
-                idle_nodes=idle,
-                slo_pressure=log.slo_pressure(model, now) if log else 0.0,
-                recent_arrivals=(arrivals or {}).get(model, 0)))
+
+            def pool_counts(pool: Dict[int, ContinuousBatchingEngine],
+                            with_pipes: bool) -> Tuple[int, int, int, list]:
+                queued = slots_total = slots_busy = 0
+                if with_pipes:
+                    for pinst in sv.live_pipes():
+                        queued += pinst.engine.sched.pending
+                        slots_total += pinst.engine.n_slots
+                        slots_busy += pinst.engine.sched.in_flight
+                for nd, eng in pool.items():
+                    queued += eng.sched.pending
+                    slots_total += eng.n_slots
+                    slots_busy += eng.sched.in_flight
+                    # a replica's keep-alive window starts when it is
+                    # first observed (fresh replicas are not instantly
+                    # "idle")
+                    if not eng.sched.done:
+                        last_busy[(model, nd)] = now
+                    else:
+                        last_busy.setdefault((model, nd), now)
+                idle = [(nd, now - last_busy[(model, nd)]) for nd in pool]
+                return queued, slots_total, slots_busy, idle
+
+            if sv.prefills:
+                # prefill pool: owns arrivals (pending), TTFT pressure,
+                # prompt pages
+                q, st, sb, idle = pool_counts(sv.prefills, False)
+                busy = set(sv.prefills)
+                if sc is not None and sc.role == "prefill":
+                    busy |= set(sc.node_map.values())
+                pt, pl = self._pool_pages(sv.prefills.values())
+                signals.append(LoadSignals(
+                    model, len(sv.pending) + q, st, sb, len(busy),
+                    self.n_slots, scaling_in_flight=sc is not None,
+                    n_replicas=len(sv.prefills),
+                    recent_ttft=tuple(recent_ttft.get(model, ())),
+                    idle_nodes=idle,
+                    slo_pressure=log.slo_pressure(model, now)
+                    if log else 0.0,
+                    recent_arrivals=(arrivals or {}).get(model, 0),
+                    role="prefill", pages_total=pt, pages_live=pl))
+                # decode pool: owns slot utilization, inter-token
+                # latency, generation pages
+                q, st, sb, idle = pool_counts(sv.locals_, True)
+                busy = set(sv.locals_)
+                if sc is not None and sc.role == "decode":
+                    busy |= set(sc.node_map.values())
+                pt, pl = self._pool_pages(sv.locals_.values())
+                signals.append(LoadSignals(
+                    model, q, st, sb, len(busy), self.n_slots,
+                    scaling_in_flight=sc is not None,
+                    n_replicas=len(sv.locals_),
+                    idle_nodes=idle,
+                    role="decode", pages_total=pt, pages_live=pl,
+                    recent_itl=tuple((recent_itl or {}).get(model, ()))))
+                (recent_itl or {}).pop(model, None)
+            else:
+                q, st, sb, idle = pool_counts(sv.locals_, True)
+                busy = set(sv.locals_)
+                if sc is not None:
+                    busy |= set(sc.node_map.values())
+                signals.append(LoadSignals(
+                    model, len(sv.pending) + q, st, sb, len(busy),
+                    self.n_slots, scaling_in_flight=sc is not None,
+                    n_replicas=len(sv.locals_),
+                    recent_ttft=tuple(recent_ttft.get(model, ())),
+                    idle_nodes=idle,
+                    slo_pressure=log.slo_pressure(model, now)
+                    if log else 0.0,
+                    recent_arrivals=(arrivals or {}).get(model, 0)))
             recent_ttft[model] = []
         return signals
 
@@ -775,10 +965,11 @@ class LiveCluster:
         for act in actions:
             if isinstance(act, ScaleDown):
                 sv = self.serving[act.model]
+                pool = sv.prefills if act.role == "prefill" else sv.locals_
                 # only idle standalone replicas release (their scheduler
                 # is empty, so no drain/handoff is needed)
                 nodes = [nd for nd in act.nodes
-                         if nd in sv.locals_ and sv.locals_[nd].sched.done]
+                         if nd in pool and pool[nd].sched.done]
                 if nodes and act.model not in self.scales:
                     self.scale_down(act.model, nodes)
                     for nd in nodes:
@@ -795,8 +986,14 @@ class LiveCluster:
         # source, so its ask includes it; execution runs highest
         # pressure first so a low-pressure model's source acquisition
         # can never eat nodes granted to a more urgent one.
-        ups = {a.model: a for a in actions if isinstance(a, ScaleUp)
-               and a.model not in self.scales}
+        ups: Dict[str, ScaleUp] = {}
+        for a in actions:
+            if isinstance(a, ScaleUp) and a.model not in self.scales \
+                    and a.model not in ups:
+                # one multicast per model at a time: when both disagg
+                # pools ask in the same round, first signal wins (the
+                # other re-asks next round)
+                ups[a.model] = a
         asked = {m: a.n_new + (0 if self.state.gpu_nodes(m) else 1)
                  for m, a in ups.items()}
         grants = self.arbiter.arbitrate(asked,
@@ -812,32 +1009,48 @@ class LiveCluster:
             n_new = grants.get(m, act.n_new) - (1 if cold else 0)
             if n_new < 0 or (n_new == 0 and not cold):
                 continue     # arbitrated away; capacity exists elsewhere
-            rep = self.scale(m, n_new, k=act.k)
+            rep = self.scale(m, n_new, k=act.k, role=act.role)
             log.on_scale(now, "up", m,
                          f"{act.reason}: +{len(rep.dests)} nodes "
-                         f"k={rep.k} tier={rep.source_tier}")
+                         f"k={rep.k} tier={rep.source_tier}"
+                         + (f" role={act.role}" if act.role else ""))
 
     def _observe(self, now: float, log: MetricsLog,
                  recent_ttft: Dict[str, List[float]],
                  seen_first: set, seen_done: set,
-                 harvested: Dict[object, int]) -> None:
-        """Harvest first-token / completion events at tick granularity.
+                 harvested: Dict[object, int],
+                 recent_itl: Optional[Dict[str, List[float]]] = None,
+                 seen_decode: Optional[set] = None) -> None:
+        """Harvest first-token / completion events at tick granularity,
+        plus the phase marks behind the per-request breakdown: slot
+        entry (queue wait ends), first decode tick on a decode-capable
+        instance (trails first token by the wire transfer on the disagg
+        path), and per-request inter-token latency at finish.
 
         ``harvested`` counts per-scheduler finished entries already
         recorded: ``Scheduler.finished`` is append-only, so only the
         islice tail is new — the scan stays O(live + new) per tick
         instead of O(all finished ever)."""
+        seen_decode = set() if seen_decode is None else seen_decode
         for model in self.serving:
             for sched in self._schedulers(model):
+                prefill_role = getattr(sched, "role", "unified") == "prefill"
                 live = [s for s in sched.slots if s is not None]
                 live += sched.resume_queue
                 for seq in live:
-                    if seq.generated and seq.req_id not in seen_first \
-                            and seq.req_id in log.requests:
-                        seen_first.add(seq.req_id)
-                        log.on_first_token(seq.req_id, now)
+                    rid = seq.req_id
+                    if rid not in log.requests:
+                        continue
+                    log.on_start(rid, now)
+                    if seq.generated and rid not in seen_first:
+                        seen_first.add(rid)
+                        log.on_first_token(rid, now)
                         recent_ttft.setdefault(model, []).append(
-                            now - log.requests[seq.req_id].t_arrive)
+                            now - log.requests[rid].t_arrive)
+                    if seq.generated and not prefill_role \
+                            and rid not in seen_decode:
+                        seen_decode.add(rid)
+                        log.on_first_decode(rid, now)
                 start = harvested.get(sched, 0)
                 if len(sched.finished) == start:
                     continue
@@ -851,8 +1064,14 @@ class LiveCluster:
                         log.on_first_token(rid, now)
                         recent_ttft.setdefault(model, []).append(
                             now - log.requests[rid].t_arrive)
+                    if not prefill_role and rid not in seen_decode:
+                        seen_decode.add(rid)
+                        log.on_first_decode(rid, now)
                     seen_done.add(rid)
                     log.on_finish(rid, now, len(seq.generated))
+                    m = log.requests[rid]
+                    if m.itl is not None and recent_itl is not None:
+                        recent_itl.setdefault(model, []).append(m.itl)
 
     def replay(self, trace: Sequence[Request], *, autoscaler: Autoscaler,
                tick_seconds: Optional[float] = None,
@@ -901,9 +1120,29 @@ class LiveCluster:
             busy = [tok_time[m] for m, sv in self.serving.items()
                     if any(e.sched.in_flight
                            for e in sv.locals_.values())
+                    or any(e.sched.in_flight
+                           for e in sv.prefills.values())
                     or any(p.engine.sched.in_flight
                            for p in sv.live_pipes())]
             return max(busy) if busy else base_dt
+
+        def charge_roles(cost: float) -> None:
+            """Attribute this tick's cost to each busy instance's role
+            pool — the per-role GPU-seconds the disagg benchmarks
+            compare (total gpu_seconds stays node-commitment-based)."""
+            for sv in self.serving.values():
+                for eng in sv.prefills.values():
+                    if eng.sched.in_flight:
+                        log.gpu_seconds_by_role["prefill"] = \
+                            log.gpu_seconds_by_role.get("prefill", 0.) + cost
+                for eng in sv.locals_.values():
+                    if eng.sched.in_flight:
+                        log.gpu_seconds_by_role[eng.role] = \
+                            log.gpu_seconds_by_role.get(eng.role, 0.) + cost
+                for p in sv.live_pipes():
+                    if p.engine.sched.in_flight:
+                        log.gpu_seconds_by_role["unified"] = \
+                            log.gpu_seconds_by_role.get("unified", 0.) + cost
 
         arrivals = sorted(trace, key=lambda r: r.t_arrive)
         for r in arrivals:
@@ -918,9 +1157,11 @@ class LiveCluster:
         prompt_fn = prompt_fn or default_prompt
         seen_first: set = set()
         seen_done: set = set()
+        seen_decode: set = set()
         harvested: Dict[object, int] = {}
         last_busy: Dict[Tuple[str, int], float] = {}
         recent_ttft: Dict[str, List[float]] = {}
+        recent_itl: Dict[str, List[float]] = {}
         arr_count: Dict[str, int] = {}       # arrivals per control window
         idx = 0
         now = self.clock
@@ -939,7 +1180,7 @@ class LiveCluster:
             if now >= next_ctrl:
                 next_ctrl = now + dt_ctrl
                 sigs = self._load_signals(now, last_busy, recent_ttft,
-                                          log, arr_count)
+                                          log, arr_count, recent_itl)
                 arr_count = {}
                 self._apply_actions(autoscaler.decide(now, sigs), now, log,
                                     last_busy,
@@ -947,7 +1188,7 @@ class LiveCluster:
             self.step_due(now)
             self.tick()
             self._observe(now, log, recent_ttft, seen_first, seen_done,
-                          harvested)
+                          harvested, recent_itl, seen_decode)
             if idx >= len(arrivals) and not self.scales \
                     and len(seen_done) >= len(log.requests):
                 if t_drained is None:
@@ -956,7 +1197,9 @@ class LiveCluster:
                     break
             else:
                 t_drained = None
-            now += tick_cost()
+            cost = tick_cost()
+            charge_roles(cost)
+            now += cost
             self.clock = max(self.clock, now)
         else:
             raise RuntimeError(
@@ -974,6 +1217,10 @@ class LiveCluster:
         for pinst in sv.pipes:
             out.update({rid: s.generated
                         for rid, s in pinst.engine.sched.finished.items()})
+        for eng in sv.prefills.values():
+            eng.flush()
+            out.update({rid: s.generated
+                        for rid, s in eng.sched.finished.items()})
         for eng in sv.locals_.values():
             eng.flush()
             out.update({rid: s.generated

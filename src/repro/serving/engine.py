@@ -198,6 +198,14 @@ class ContinuousBatchingEngine:
     Greedy decoding only: continuous batching re-batches sequences across
     ticks, so per-request sampling streams would not be reproducible
     against the static engine.
+
+    ``role`` specializes the engine to one phase of the request
+    lifecycle (prefill/decode disaggregation): a ``prefill`` engine runs
+    prompt passes only and streams finished prompt pages out through
+    ``export_prefilled()`` (the deduped ``PackedKV`` wire); a ``decode``
+    engine takes no fresh prompts and receives everything pre-prefilled
+    via ``adopt``.  Non-unified roles require the paged KV layout — the
+    wire between the pools IS the page-granular ``PackedKV`` path.
     """
 
     def __init__(self, cfg: ModelConfig, params, *,
@@ -207,11 +215,18 @@ class ContinuousBatchingEngine:
                  n_pages: Optional[int] = None, attn_impl: str = "xla",
                  block_k: Optional[int] = None,
                  prefix_sharing: bool = True,
-                 policy: Optional[AdmissionPolicy] = None):
+                 policy: Optional[AdmissionPolicy] = None,
+                 role: str = "unified"):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
+        self.role = role
+        if role != "unified" and not (paged and cfg.family != "encdec"):
+            raise ValueError(
+                f"{role}-role engine needs the paged KV layout — the "
+                f"prefill → decode wire is the page-granular PackedKV "
+                f"path")
         # encdec keeps fixed-size cross-attention K/V per slot; it stays
         # on the striped layout (the runtime excludes it anyway)
         self.paged = paged and cfg.family != "encdec"
@@ -237,7 +252,7 @@ class ContinuousBatchingEngine:
                 self.pages.prefix = PrefixIndex(page_size)
             self.sched = Scheduler(
                 n_slots, max_prefill_per_tick=max_prefill_per_tick,
-                pages=self.pages, policy=policy)
+                pages=self.pages, policy=policy, role=role)
             self.cache = init_paged_cache(
                 cfg, n_slots, n_pages=self.n_pages, page_size=page_size,
                 max_pages=self.max_pages)
@@ -280,12 +295,15 @@ class ContinuousBatchingEngine:
         if req_id is None:
             req_id = self._next_id
         self._next_id = max(self._next_id, req_id) + 1
-        if len(prompt) + max_new_tokens > self.max_len:
+        # a prefill-role pool only ever holds the prompt's KV (the slot
+        # is exported before any decode step appends to it)
+        need = len(prompt) if self.role == "prefill" \
+            else len(prompt) + max_new_tokens
+        if need > self.max_len:
             raise ValueError(
-                f"request needs {len(prompt) + max_new_tokens} cache slots "
+                f"request needs {need} cache slots "
                 f"but the pool was built with max_len={self.max_len}")
-        if self.paged and pages_for(len(prompt) + max_new_tokens,
-                                    self.page_size) > self.n_pages:
+        if self.paged and pages_for(need, self.page_size) > self.n_pages:
             raise ValueError(
                 f"request needs more pages than the whole pool holds "
                 f"({self.n_pages} × {self.page_size} tokens)")
@@ -557,6 +575,68 @@ class ContinuousBatchingEngine:
     def drain(self) -> None:
         self.sched.drain()
 
+    def _pack_slot(self, slot: int, seq: SeqState, batch: Optional[int],
+                   shipped: set) -> PackedKV:
+        """Pack one live slot's KV pages into the ``PackedKV`` wire form
+        (shared by drain-time ``handoff`` and the steady-state
+        ``export_prefilled`` stream).  With a dedupe ``batch``, pages
+        already shipped in this export ride as references only."""
+        # the cache holds seq.pos - 1 tokens: the last generated token
+        # is the next decode input, not yet written
+        n_tok = seq.pos - 1
+        ids = self.pages.slot_pages(slot)[:pages_for(n_tok,
+                                                     self.page_size)]
+        if batch is not None:
+            carried = tuple(p for p, pid in enumerate(ids)
+                            if pid not in shipped)
+            payload = paged_pack(self.cfg, self.cache, slot, ids, n_tok,
+                                 self.page_size,
+                                 ship=[ids[p] for p in carried])
+            payload.page_ids = tuple(ids)
+            payload.carried = carried
+            payload.batch = batch
+            shipped.update(ids)
+        else:
+            payload = paged_pack(self.cfg, self.cache, slot, ids, n_tok,
+                                 self.page_size)
+        return payload
+
+    # ----------------------------------------------------- disagg export
+    def export_prefilled(self) -> List[Tuple[SeqState, Any]]:
+        """Stream out every prefilled slot (prefill-role wire).
+
+        The disaggregation fast path: each slot whose prompt pass has
+        produced its first token is packed through the same batch-deduped
+        ``PackedKV`` export as ``handoff()`` and its slot freed for the
+        next prompt — but unlike a drain the engine keeps serving, and
+        queued/parked state stays put.  Sequences that finished AT
+        prefill (one-token budget, or EOS first) retire here and are not
+        exported.  Policy order decides who ships first (who gets the
+        decode pool's free slots)."""
+        if self.role != "prefill":
+            raise RuntimeError(
+                "export_prefilled() is the prefill-role wire — unified "
+                "engines hand off at drain time instead")
+        ready = self.sched.prefilled_slots()
+        if not ready:
+            return []
+        self.flush()      # adopters need concrete first-token ids (§4.4)
+        ready = [s for s in ready          # EOS may have landed at flush
+                 if not self.sched.slots[s].finished]
+        pairs = [(s, self.sched.slots[s]) for s in ready]
+        pairs = [pairs[i] for i in
+                 sorted(range(len(pairs)),
+                        key=lambda i: self.sched.policy_key(pairs[i][1],
+                                                            i))]
+        batch = next(_HANDOFF_BATCH) if self.prefix_sharing else None
+        shipped: set = set()
+        out: List[Tuple[SeqState, Any]] = []
+        for slot, seq in pairs:
+            payload = self._pack_slot(slot, seq, batch, shipped)
+            self.sched.export_slot(slot)
+            out.append((seq, payload))
+        return out
+
     def handoff(self) -> List[Tuple[SeqState, Any]]:
         """Export in-flight sequences with their live KV state.
 
@@ -585,25 +665,8 @@ class ContinuousBatchingEngine:
         shipped: set = set()
         for slot, seq in live:
             if self.paged:
-                # the cache holds seq.pos - 1 tokens: the last generated
-                # token is the next decode input, not yet written
-                n_tok = seq.pos - 1
-                ids = self.pages.slot_pages(slot)[
-                    :pages_for(n_tok, self.page_size)]
-                if batch is not None:
-                    carried = tuple(p for p, pid in enumerate(ids)
-                                    if pid not in shipped)
-                    payload = paged_pack(
-                        self.cfg, self.cache, slot, ids, n_tok,
-                        self.page_size, ship=[ids[p] for p in carried])
-                    payload.page_ids = tuple(ids)
-                    payload.carried = carried
-                    payload.batch = batch
-                    shipped.update(ids)
-                else:
-                    payload = paged_pack(self.cfg, self.cache, slot, ids,
-                                         n_tok, self.page_size)
-                out.append((seq, payload))
+                out.append((seq, self._pack_slot(slot, seq, batch,
+                                                 shipped)))
             else:
                 out.append((seq, cache_gather(self.cache, slot,
                                               self._axes)))
@@ -630,6 +693,10 @@ class ContinuousBatchingEngine:
         mode switch converging on one replica), the overflow parks in the
         scheduler's resume queue and enters DECODE as slots retire.
         Sequences that never started decode are submitted normally."""
+        if self.role == "prefill":
+            raise RuntimeError(
+                "prefill-role engine runs prompt passes only — adopt "
+                "into a decode-role (or unified) engine")
         if any(s.eos_id is not None for s, _ in pairs):
             self._eager = True
         started = [(s, c) for s, c in pairs if s.generated]
@@ -676,6 +743,23 @@ class ContinuousBatchingEngine:
                 self.sched.enqueue_resume(seq)
         for seq in fresh:
             self.sched.submit(seq)
+
+    def set_role(self, role: str) -> None:
+        """Switch between the ``decode`` and ``unified`` roles in place
+        (the cluster's fallback when a model's prefill pool empties:
+        decode replicas relax to unified so prompts are never stranded).
+        Both roles size admission by the full generation budget, so the
+        switch only toggles the submit gate; prefill conversions are
+        refused — prompt-sized reservations on live slots cannot
+        retroactively cover a generation budget."""
+        if role == self.role:
+            return
+        if "prefill" in (role, self.role):
+            raise ValueError(
+                f"cannot convert a live engine {self.role!r} → {role!r}: "
+                f"only decode ↔ unified share an admission sizing")
+        self.role = role
+        self.sched.role = role
 
     # ------------------------------------------------------------- status
     @property

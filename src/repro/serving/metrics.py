@@ -56,7 +56,18 @@ def slo_pressure_of(queue, now: float) -> float:
 
 @dataclasses.dataclass
 class RequestMetric:
-    """Per-request lifecycle timestamps on the simulated clock."""
+    """Per-request lifecycle timestamps on the simulated clock.
+
+    The optional phase marks split the lifecycle into the three spans
+    the disaggregation work needs to read honestly (and every runtime
+    benefits from): ``t_start`` is when the request entered a prefill
+    slot (queue wait ends), ``t_first_token`` when its prompt pass
+    produced the first token (prefill ends), ``t_first_decode`` when a
+    decode-capable instance first advanced it (on the disagg wire this
+    is AFTER the PackedKV transfer and adoption), ``t_finish`` when
+    generation completed (decode ends).  Runtimes that cannot observe a
+    mark simply leave it None and the derived phase is None too.
+    """
     req_id: int
     model: str
     t_arrive: float
@@ -65,6 +76,8 @@ class RequestMetric:
     t_finish: Optional[float] = None
     out_tokens: int = 0
     slo: Optional["SLOClass"] = None
+    t_start: Optional[float] = None          # entered a prefill slot
+    t_first_decode: Optional[float] = None   # first decode-phase tick
 
     @property
     def ttft(self) -> Optional[float]:
@@ -86,6 +99,43 @@ class RequestMetric:
             return None
         return self.t_finish - self.t_arrive
 
+    # ---------------------------------------------------- phase spans
+    @property
+    def queue_wait(self) -> Optional[float]:
+        if self.t_start is None:
+            return None
+        return self.t_start - self.t_arrive
+
+    @property
+    def prefill_time(self) -> Optional[float]:
+        if self.t_start is None or self.t_first_token is None:
+            return None
+        return self.t_first_token - self.t_start
+
+    @property
+    def decode_time(self) -> Optional[float]:
+        if self.t_first_token is None or self.t_finish is None:
+            return None
+        return self.t_finish - self.t_first_token
+
+    @property
+    def ttfd(self) -> Optional[float]:
+        """Time to first decode tick — on the disagg wire this includes
+        the prefill → decode transfer and adoption the TTFT alone never
+        shows."""
+        if self.t_first_decode is None:
+            return None
+        return self.t_first_decode - self.t_arrive
+
+    @property
+    def itl(self) -> Optional[float]:
+        """Mean inter-token latency across the request's decode phase
+        (None until finished or with fewer than two tokens)."""
+        dt = self.decode_time
+        if dt is None or self.out_tokens < 2:
+            return None
+        return dt / (self.out_tokens - 1)
+
 
 @dataclasses.dataclass
 class ScaleEvent:
@@ -104,6 +154,10 @@ class MetricsLog:
         self.requests: Dict[int, RequestMetric] = {}
         self.scale_events: List[ScaleEvent] = []
         self.gpu_seconds: float = 0.0
+        # role → GPU-seconds burned by instances of that role ("unified"
+        # when the runtime doesn't split pools).  Sums to gpu_seconds
+        # when the runtime attributes every busy tick.
+        self.gpu_seconds_by_role: Dict[str, float] = {}
         self._any_slo = False        # fast path for slo_pressure scans
         # classed requests not yet known to have a first token — the
         # working set slo_pressure scans (pruned lazily as first tokens
@@ -120,10 +174,29 @@ class MetricsLog:
             self._any_slo = True
             self._open.setdefault(model, set()).add(req_id)
 
+    def on_start(self, req_id: int, t: float) -> None:
+        """Request entered a prefill slot (queue wait ends)."""
+        m = self.requests[req_id]
+        if m.t_start is None:
+            m.t_start = t
+
     def on_first_token(self, req_id: int, t: float) -> None:
         m = self.requests[req_id]
         if m.t_first_token is None:
             m.t_first_token = t
+
+    def on_first_decode(self, req_id: int, t: float) -> None:
+        """First decode-phase tick on a decode-capable instance — on the
+        disagg wire this trails on_first_token by the transfer+adopt."""
+        m = self.requests[req_id]
+        if m.t_first_decode is None:
+            m.t_first_decode = t
+
+    def on_gpu_time(self, role: str, seconds: float) -> None:
+        """Attribute busy GPU time to a role pool (and the total)."""
+        self.gpu_seconds += seconds
+        self.gpu_seconds_by_role[role] = (
+            self.gpu_seconds_by_role.get(role, 0.0) + seconds)
 
     def on_finish(self, req_id: int, t: float, out_tokens: int = 0) -> None:
         m = self.requests[req_id]
@@ -217,6 +290,29 @@ class MetricsLog:
             "scale_ups": float(len(self.scale_ups())),
             "scale_downs": float(len(self.scale_downs())),
         }
+        # phase breakdown + disagg metrics — emitted only when the
+        # runtime observed the underlying marks (tail keys on a run with
+        # zero observations would be NaN, and bench diffs treat a NaN
+        # tail as a hard failure)
+        for key, xs in (
+            ("queue_wait", [m.queue_wait for m in self.requests.values()
+                            if m.queue_wait is not None]),
+            ("prefill_time", [m.prefill_time for m in self.requests.values()
+                              if m.prefill_time is not None]),
+            ("decode_time", [m.decode_time for m in self.requests.values()
+                             if m.decode_time is not None]),
+            ("ttfd", [m.ttfd for m in self.requests.values()
+                      if m.ttfd is not None]),
+        ):
+            if xs:
+                out[f"{key}_p50"] = percentile(xs, 50)
+                out[f"{key}_p99"] = percentile(xs, 99)
+        itls = [m.itl for m in self.requests.values() if m.itl is not None]
+        if itls:
+            out["itl_p50"] = percentile(itls, 50)
+            out["itl_p99"] = percentile(itls, 99)
+        for role, secs in sorted(self.gpu_seconds_by_role.items()):
+            out[f"gpu_seconds_{role}"] = secs
         classed = self.by_class()
         if classed:
             out["slo_attainment"] = self.slo_attainment()
@@ -236,6 +332,9 @@ def merge(logs: Sequence[MetricsLog]) -> MetricsLog:
         out.requests.update(lg.requests)
         out.scale_events.extend(lg.scale_events)
         out.gpu_seconds += lg.gpu_seconds
+        for role, secs in lg.gpu_seconds_by_role.items():
+            out.gpu_seconds_by_role[role] = (
+                out.gpu_seconds_by_role.get(role, 0.0) + secs)
         out._any_slo = out._any_slo or lg._any_slo
         for model, ids in lg._open.items():
             out._open.setdefault(model, set()).update(ids)

@@ -70,17 +70,22 @@ class PlacementArbiter:
 
     # ------------------------------------------------- scale-out placement
     def pick_dests(self, state: ClusterState, model: str, n: int,
-                   exclude: Sequence[int] = ()) -> List[int]:
+                   exclude: Sequence[int] = (),
+                   near: Sequence[int] = ()) -> List[int]:
         """Rank free nodes for a scale-out of ``model`` (§5 locality):
-        warm-for-this-model first, then fewest other-model host copies,
-        then node id (the pre-arbiter order)."""
+        warm-for-this-model first, then — for role-split pools —
+        proximity to ``near`` (the feeding pool's nodes: a decode
+        replica lands beside the prefill nodes that will stream KV to
+        it; node-id distance is the rack-adjacency proxy), then fewest
+        other-model host copies, then node id (the pre-arbiter order)."""
         warm = set(nd.node_id for nd in state.nodes
                    if model in nd.host_cache)
         free = [nd for nd in state.free_nodes() if nd not in set(exclude)]
 
         def rank(nd: int) -> Tuple:
             others = len(state.nodes[nd].host_cache.models() - {model})
-            return (0 if nd in warm else 1, others, nd)
+            dist = min((abs(nd - f) for f in near), default=0)
+            return (0 if nd in warm else 1, dist, others, nd)
 
         return sorted(free, key=rank)[:max(n, 0)]
 
@@ -142,12 +147,18 @@ class PlacementArbiter:
     def handoff_target(self, locals_: Dict[int, object], *,
                        members: Sequence[int] = (),
                        ready: Optional[Callable[[int], bool]] = None,
-                       exclude: Optional[int] = None):
+                       exclude: Optional[int] = None,
+                       near: Sequence[int] = ()):
         """The engine that adopts a drained instance's sequences, ranked
         by KV locality: member-node replicas (GPU: zero wire movement) >
         ready replicas (host: one link hop) > replicas still fetching
-        (remote); least-loaded wins ties.  Returns None when no
-        candidate exists."""
+        (remote); within a tier, proximity to ``near`` (the feeding
+        prefill nodes on the disagg wire; node-id distance is the
+        rack-adjacency proxy, 0 when unset), then load, then node id.
+        The node id is the FINAL key component, so candidates equal on
+        every ranked axis resolve deterministically to the lowest node
+        id — never dict-iteration order (locked by a unit test).
+        Returns None when no candidate exists."""
         mem = set(members)
         best, best_key = None, None
         for nd, eng in locals_.items():
@@ -159,8 +170,9 @@ class PlacementArbiter:
                 tier = 1
             else:
                 tier = 2
+            dist = min((abs(nd - f) for f in near), default=0)
             load = eng.sched.in_flight + eng.sched.pending
-            key = (tier, load, nd)
+            key = (tier, dist, load, nd)
             if best_key is None or key < best_key:
                 best, best_key = eng, key
         return best

@@ -24,6 +24,17 @@ its in-flight sequences are exported by ``handoff()`` and re-enter a
 local replica directly in DECODE — the request never re-runs its
 completed prefill phase.
 
+Roles (prefill/decode disaggregation): a scheduler can specialize to
+one phase of the request lifecycle.  A ``prefill``-role scheduler runs
+prompt passes only — admission reserves *prompt* pages (not the full
+generation budget), ``next_tick`` never decodes, and a prefilled slot
+sits in DECODE until ``export_slot`` streams it out over the PackedKV
+wire; adoption entry points are closed.  A ``decode``-role scheduler
+is the receiving end: ``submit`` is closed (prompts must route through
+a prefill pool), everything arrives pre-prefilled via ``adopt``/
+``enqueue_resume`` and is sized by the full generation budget.  The
+default ``unified`` role is today's behavior, bit for bit.
+
 Admission order is a pluggable ``AdmissionPolicy`` (the request control
 plane): FCFS is the baseline, ``EDFPolicy`` orders by absolute TTFT
 deadline (the request's ``SLOClass``), and ``StrictPriorityPolicy``
@@ -54,6 +65,7 @@ DEFAULT_SLOTS = 8                # KV-cache slots per serving instance
 PIPELINE_TOK_OVERHEAD = 1.10     # per-token inflation in pipelined mode
 HOP_LATENCY = 2e-4               # activation hand-off per stage per token
 MAX_PREFILL_PER_TICK = 1         # decode never starves behind admissions
+ROLES = ("unified", "prefill", "decode")   # engine/scheduler phase roles
 
 
 def instance_slot_count(kind: str, n_nodes: int,
@@ -223,6 +235,28 @@ class Tick:
 
 
 # -------------------------------------------------------------- scheduler
+class SchedulerStats(dict):
+    """Counter mapping that doubles as a snapshot factory.
+
+    Every existing call site subscripts the counters directly
+    (``stats["admitted"]``) and keeps working; *calling* the object
+    (``stats()``) returns a copy extended with live page-pool occupancy
+    (``pages_total`` / ``pages_live`` / ``pages_free`` / ``pages_held``)
+    whenever the scheduler admits against a ``PageTable`` — the surface
+    the autoscaler's page-pressure signal reads.
+    """
+
+    def __init__(self, sched: "Scheduler", counters: Dict[str, int]):
+        super().__init__(counters)
+        self._sched = sched
+
+    def __call__(self) -> Dict[str, float]:
+        snap: Dict[str, float] = dict(self)
+        if self._sched.pages is not None:
+            snap.update(self._sched.pages.occupancy())
+        return snap
+
+
 class Scheduler:
     """Continuous batching over a fixed slot pool.
 
@@ -236,10 +270,15 @@ class Scheduler:
     def __init__(self, n_slots: int = DEFAULT_SLOTS, *,
                  max_prefill_per_tick: int = MAX_PREFILL_PER_TICK,
                  pages: Optional["PageTable"] = None,
-                 policy: Optional[AdmissionPolicy] = None):
+                 policy: Optional[AdmissionPolicy] = None,
+                 role: str = "unified"):
+        if role not in ROLES:
+            raise ValueError(f"unknown scheduler role {role!r}; "
+                             f"expected one of {ROLES}")
         self.n_slots = n_slots
         self.max_prefill_per_tick = max_prefill_per_tick
         self.policy = policy or AdmissionPolicy()
+        self.role = role
         # paged-KV admission control: a sequence is only admitted (or
         # resumed) when its worst-case page demand fits beside every
         # outstanding reservation; slots release their pages on retire
@@ -251,12 +290,28 @@ class Scheduler:
         self.draining = False
         self.tick_count = 0
         self.finished: Dict[int, SeqState] = {}
-        self.stats = {"prefills": 0, "decode_ticks": 0, "decode_tokens": 0,
-                      "admitted": 0, "retired": 0, "adopted": 0,
-                      "prefill_tokens": 0, "shared_tokens": 0}
+        self.stats = SchedulerStats(self, {
+            "prefills": 0, "decode_ticks": 0, "decode_tokens": 0,
+            "admitted": 0, "retired": 0, "adopted": 0,
+            "prefill_tokens": 0, "shared_tokens": 0, "exported": 0})
+
+    # ------------------------------------------------------- role sizing
+    def admit_tokens(self, seq: SeqState) -> int:
+        """Worst-case token footprint admission reserves for ``seq``.
+        A prefill-role slot only ever holds the prompt's KV (the slot is
+        exported before any decode step appends), so it is sized by
+        prompt pages; decode/unified slots carry the prompt plus the
+        full generation budget."""
+        if self.role == "prefill":
+            return len(seq.prompt)
+        return seq.total_tokens
 
     # ------------------------------------------------------------- intake
     def submit(self, seq: SeqState) -> None:
+        if self.role == "decode":
+            raise RuntimeError(
+                "decode-role instance takes prefilled work only — route "
+                "prompts through a prefill-role (or unified) instance")
         if self.draining:
             raise RuntimeError("draining instance admits no new requests")
         if seq.submit_tick is None:
@@ -267,12 +322,16 @@ class Scheduler:
         """Place a handed-off sequence directly into DECODE (mode switch):
         its prefill already ran on the draining instance and is not
         re-entered here."""
+        if self.role == "prefill":
+            raise RuntimeError(
+                "prefill-role instance runs prompt passes only — adopt "
+                "into a decode-role (or unified) instance")
         assert self.state[slot] is SlotState.FREE
         seq.handoffs += 1
         self.slots[slot] = seq
         self.state[slot] = SlotState.DECODE
         if self.pages is not None:
-            self.pages.reserve(slot, seq.total_tokens)
+            self.pages.reserve(slot, self.admit_tokens(seq))
         self.stats["adopted"] += 1
 
     def enqueue_resume(self, seq: SeqState) -> None:
@@ -282,6 +341,10 @@ class Scheduler:
         ``adopt`` it does not require a slot to be free right now (a
         multi-pipeline mode switch can hand off more live sequences than
         one replica has free slots)."""
+        if self.role == "prefill":
+            raise RuntimeError(
+                "prefill-role instance runs prompt passes only — resume "
+                "on a decode-role (or unified) instance")
         if self.draining:
             raise RuntimeError("draining instance admits no new requests")
         self.resume_queue.append(seq)
@@ -339,7 +402,7 @@ class Scheduler:
                     break
                 qi = self._pick(self.resume_queue)
                 if self.pages is not None and not self.pages.can_admit(
-                        self.resume_queue[qi].total_tokens):
+                        self.admit_tokens(self.resume_queue[qi])):
                     break                    # pages free up as slots retire
                 seq = self.resume_queue.pop(qi)
                 self.adopt(seq, slot)
@@ -352,7 +415,7 @@ class Scheduler:
                 # the INCREMENTAL worst-case pages (shared prefix pages
                 # already live cost nothing)
                 if self.pages is not None and not self.pages.can_admit(
-                        self.queue[qi].total_tokens,
+                        self.admit_tokens(self.queue[qi]),
                         prompt=self.queue[qi].prompt):
                     break        # the policy's head blocks: no size bypass
                 seq = self.queue.pop(qi)
@@ -363,13 +426,15 @@ class Scheduler:
                     # share) + reserve the worst case; plain reserve
                     # when no prefix index is attached
                     seq.shared_tokens = self.pages.bind(
-                        slot, seq.prompt, seq.total_tokens)
+                        slot, seq.prompt, self.admit_tokens(seq))
                 admit.append((slot, seq))
                 self.stats["admitted"] += 1
                 self.stats["prefill_tokens"] += (len(seq.prompt)
                                                  - seq.shared_tokens)
                 self.stats["shared_tokens"] += seq.shared_tokens
-        decode = self.live_slots()
+        # a prefill-role instance never advances decode: its prefilled
+        # slots sit in DECODE awaiting export over the PackedKV wire
+        decode = [] if self.role == "prefill" else self.live_slots()
         if decode:
             self.stats["decode_ticks"] += 1
             self.stats["decode_tokens"] += len(decode)
@@ -401,6 +466,30 @@ class Scheduler:
                 if self.pages is not None:
                     self.pages.release(i)
                 self.stats["retired"] += 1
+
+    # ----------------------------------------------------- disagg export
+    def prefilled_slots(self) -> List[int]:
+        """Slots whose prompt pass is done (DECODE state, unfinished) —
+        what a prefill-role instance has ready to stream out."""
+        return [i for i, s in enumerate(self.state)
+                if s is SlotState.DECODE and self.slots[i] is not None
+                and not self.slots[i].finished]
+
+    def export_slot(self, slot: int) -> SeqState:
+        """Release ``slot`` after its sequence was packed onto the wire
+        (the steady-state prefill → decode stream, not a drain): the
+        slot and its pages free immediately so the next prompt can be
+        admitted.  The sequence does NOT retire here — it continues on
+        the adopting decode-role instance."""
+        seq = self.slots[slot]
+        assert seq is not None and self.state[slot] is SlotState.DECODE, \
+            (slot, "export needs a prefilled (DECODE-state) slot")
+        self.slots[slot] = None
+        self.state[slot] = SlotState.FREE
+        if self.pages is not None:
+            self.pages.release(slot)
+        self.stats["exported"] += 1
+        return seq
 
     # --------------------------------------------------------- mode switch
     def drain(self) -> None:

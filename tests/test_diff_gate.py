@@ -89,7 +89,8 @@ def test_floor_fails_below_and_passes_at_floor(tmp_path):
     no matter what the committed baseline says."""
     assert DEFAULT_FLOORS == {"relative_throughput": 1.0,
                               "prefill_tokens_skipped_frac": 0.3,
-                              "relative_ttft": 1.0}
+                              "relative_ttft": 1.0,
+                              "relative_itl_p99": 1.0}
     assert "relative_throughput" not in DEFAULT_WATCH_UP
     base, cand = _dirs(tmp_path, {"paged/relative_throughput": 0.9},
                        {"paged/relative_throughput": 0.97})

@@ -1,0 +1,372 @@
+"""Prefill/decode disaggregation: role-specialized engines on the
+PackedKV wire.
+
+Covers the whole stack the refactor touches: scheduler role gating and
+prompt-sized admission, the engine export/adopt wire, the cluster's
+prefill pool → decode pool pump (bit-equal to unified serving), the
+role-aware placement tie-breaks, the split autoscaler signals, and the
+per-request phase breakdown in the metrics log.
+"""
+import math
+
+import jax
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import PageTable, init_params
+from repro.serving.autoscaler import (Autoscaler, AutoscalerConfig,
+                                      LoadSignals, ScaleDown, ScaleUp)
+from repro.serving.cluster import LiveCluster
+from repro.serving.engine import ContinuousBatchingEngine
+from repro.serving.metrics import MetricsLog, merge
+from repro.serving.placement import PlacementArbiter
+from repro.serving.scheduler import ROLES, Scheduler, SeqState
+
+
+# ------------------------------------------------------------ fixtures
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("qwen2.5-3b"), d_model=64)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _toks(cfg, seed, length):
+    return list(map(int, jax.random.randint(
+        jax.random.PRNGKey(seed), (length,), 0, cfg.vocab_size)))
+
+
+PROMPT_LENS = [20, 7, 33, 12, 25, 5, 18, 9]
+N_NEW = 8
+
+
+@pytest.fixture(scope="module")
+def clusters(setup):
+    """One unified and one disaggregated cluster serving the same trace."""
+    cfg, params = setup
+    prompts = [_toks(cfg, i, L) for i, L in enumerate(PROMPT_LENS)]
+
+    cu = LiveCluster(n_nodes=3, n_slots=4, max_len=64)
+    cu.register("m", cfg, params, n_blocks=2, hot_nodes=[0, 1])
+    for i, p in enumerate(prompts):
+        cu.submit("m", p, N_NEW, req_id=i)
+    cu.drain_serving()
+
+    cd = LiveCluster(n_nodes=3, n_slots=4, max_len=64)
+    cd.register("m", cfg, params, n_blocks=2,
+                prefill_nodes=[0], decode_nodes=[1])
+    for i, p in enumerate(prompts):
+        cd.submit("m", p, N_NEW, req_id=i)
+    cd.drain_serving()
+    return cu, cd, prompts
+
+
+# ================================================== cluster wire path
+def test_disagg_tokens_bit_equal_to_unified(clusters):
+    """The tentpole exactness bar: routing prompts through a prefill
+    pool and adopting into a decode pool is a scheduling change only —
+    greedy tokens must match unified serving bit for bit."""
+    cu, cd, prompts = clusters
+    ref, got = cu.results("m"), cd.results("m")
+    assert set(got) == set(ref) == set(range(len(prompts)))
+    for rid in ref:
+        assert got[rid] == ref[rid], rid
+    assert all(len(got[rid]) == N_NEW for rid in got)
+
+
+def test_every_request_crossed_the_wire(clusters):
+    _, cd, prompts = clusters
+    sv = cd.serving["m"]
+    pre, dec = sv.prefills[0], sv.locals_[1]
+    assert pre.stats["exported"] == len(prompts)
+    assert dec.stats["adopted"] == len(prompts)
+    assert dec.role == "decode" and pre.role == "prefill"
+    # the prefill pool never decodes; the decode pool never prefills
+    assert pre.stats["decode_ticks"] == 0
+    assert dec.stats["admitted"] == 0
+    pre.pages.check_invariants()
+    dec.pages.check_invariants()
+
+
+def test_handoff_log_priced_every_export(clusters):
+    _, cd, prompts = clusters
+    assert len(cd.handoff_log) == len(prompts)
+    assert all(d.chosen in ("transfer", "recompute")
+               for d in cd.handoff_log)
+
+
+def test_load_signals_split_per_role(clusters):
+    cu, cd, _ = clusters
+    sigs = cd._load_signals(0.0, {}, {}, None, None, {})
+    assert [s.role for s in sigs] == ["prefill", "decode"]
+    for s in sigs:
+        assert s.pages_total > 0               # occupancy wired through
+        assert s.n_replicas == 1
+    # a unified deployment still emits the single aggregate signal
+    sigs_u = cu._load_signals(0.0, {}, {}, None, None, {})
+    assert [s.role for s in sigs_u] == [None]
+
+
+def test_decode_only_deployment_relaxes_to_unified(setup):
+    """With no prefill pool to feed it, a decode-role replica must relax
+    to unified rather than strand prompts."""
+    cfg, params = setup
+    prompt = _toks(cfg, 0, PROMPT_LENS[0])
+
+    cu = LiveCluster(n_nodes=2, n_slots=4, max_len=64)
+    cu.register("m", cfg, params, n_blocks=2, hot_nodes=[0])
+    cu.submit("m", prompt, N_NEW, req_id=0)
+    cu.drain_serving()
+
+    cr = LiveCluster(n_nodes=2, n_slots=4, max_len=64)
+    cr.register("m", cfg, params, n_blocks=2, decode_nodes=[0])
+    cr.submit("m", prompt, N_NEW, req_id=0)
+    cr.drain_serving()
+    assert cr.results("m")[0] == cu.results("m")[0]
+    assert cr.serving["m"].locals_[0].role == "unified"
+
+
+# ===================================================== scheduler roles
+def test_scheduler_role_validation():
+    assert ROLES == ("unified", "prefill", "decode")
+    with pytest.raises(ValueError):
+        Scheduler(4, role="verifier")
+
+
+def test_decode_role_rejects_submit():
+    s = Scheduler(4, role="decode")
+    with pytest.raises(RuntimeError):
+        s.submit(SeqState(0, [1, 2, 3], 4))
+
+
+def test_prefill_role_rejects_adoption_paths():
+    s = Scheduler(4, role="prefill")
+    seq = SeqState(0, [1, 2, 3], 4, generated=[7])
+    with pytest.raises(RuntimeError):
+        s.adopt(seq, 0)
+    with pytest.raises(RuntimeError):
+        s.enqueue_resume(seq)
+
+
+def test_prefill_role_admission_is_prompt_sized():
+    """A prefill slot is exported before any decode append, so admission
+    reserves prompt pages only; decode/unified reserve the full budget."""
+    seq = SeqState(0, list(range(10)), 90)
+    assert Scheduler(4, role="prefill").admit_tokens(seq) == 10
+    assert Scheduler(4, role="decode").admit_tokens(seq) == 100
+    assert Scheduler(4).admit_tokens(seq) == 100
+
+
+def test_prefill_role_never_decodes_and_exports_slots():
+    pages = PageTable(16, 4, 2, 8)
+    s = Scheduler(2, role="prefill", pages=pages)
+    s.submit(SeqState(0, [1, 2, 3], 4))
+    tick = s.next_tick()
+    assert [seq.req_id for _, seq in tick.admit] == [0]
+    slot = tick.admit[0][0]
+    s.on_prefilled(slot, 11)
+    # prompt pass done: the slot sits in DECODE awaiting export, and
+    # next_tick never advances it (no decode ticks on a prefill pool)
+    tick = s.next_tick()
+    assert tick.decode == [] and s.prefilled_slots() == [slot]
+    seq = s.export_slot(slot)
+    assert seq.req_id == 0 and s.stats["exported"] == 1
+    assert seq.req_id not in s.finished        # continues elsewhere
+    # slot and pages freed for the next prompt
+    assert slot in s.free_slots()
+    assert pages.occupancy()["pages_live"] == 0
+
+
+def test_scheduler_stats_snapshot_includes_page_occupancy():
+    pages = PageTable(16, 4, 2, 8)
+    s = Scheduler(2, pages=pages)
+    s.submit(SeqState(0, [1, 2, 3, 4, 5], 3))
+    tick = s.next_tick()
+    pages.ensure(tick.admit[0][0], 5)   # the engine allocates at prefill
+    snap = s.stats()
+    assert snap["pages_total"] == 16
+    assert snap["pages_live"] == pages.n_allocated > 0
+    assert snap["pages_free"] == 16 - snap["pages_live"]
+    assert "pages_held" in snap
+    # the counters keep working as a plain mapping
+    assert snap["admitted"] == s.stats["admitted"] == 1
+    # no PageTable → plain counter copy, no occupancy keys
+    assert "pages_total" not in Scheduler(2).stats()
+
+
+# ========================================================= engine roles
+def test_engine_role_gates(setup):
+    cfg, params = setup
+    uni = ContinuousBatchingEngine(cfg, params, n_slots=2, max_len=32)
+    with pytest.raises(RuntimeError):
+        uni.export_prefilled()               # unified engines drain instead
+    dec = ContinuousBatchingEngine(cfg, params, n_slots=2, max_len=32,
+                                   role="decode")
+    with pytest.raises(RuntimeError):
+        dec.submit([1, 2, 3], 4)
+    pre = ContinuousBatchingEngine(cfg, params, n_slots=2, max_len=32,
+                                   role="prefill")
+    with pytest.raises(RuntimeError):
+        pre.adopt([(SeqState(0, [1], 2, generated=[5]), None)])
+    # decode ↔ unified relaxes in place; prefill conversions are refused
+    dec.set_role("unified")
+    assert dec.role == dec.sched.role == "unified"
+    with pytest.raises(ValueError):
+        uni.set_role("prefill")
+    with pytest.raises(ValueError):
+        pre.set_role("unified")
+    with pytest.raises(ValueError):          # non-paged cannot take a role
+        ContinuousBatchingEngine(cfg, params, n_slots=2, max_len=32,
+                                 paged=False, role="prefill")
+
+
+# ================================================ placement tie-breaks
+class _FakeEngine:
+    def __init__(self, in_flight=0, pending=0):
+        self.sched = type("S", (), {"in_flight": in_flight,
+                                    "pending": pending})()
+
+
+def test_handoff_target_tie_break_is_lowest_node_id():
+    """Candidates equal on tier, distance, and load must resolve to the
+    lowest node id — never dict insertion order (the satellite bugfix)."""
+    arb = PlacementArbiter()
+    a, b, c = _FakeEngine(), _FakeEngine(), _FakeEngine()
+    # insertion order deliberately descending
+    assert arb.handoff_target({7: a, 3: b, 5: c}) is b
+    # load outranks node id ...
+    loaded = _FakeEngine(in_flight=2)
+    assert arb.handoff_target({3: loaded, 7: a}) is a
+    # ... and tier outranks load: a member node keeps the KV off the wire
+    assert arb.handoff_target({3: loaded, 7: a}, members=[3]) is loaded
+    # exclude removes the draining node itself
+    assert arb.handoff_target({3: b, 7: a}, exclude=3) is a
+    assert arb.handoff_target({3: b}, exclude=3) is None
+
+
+def test_handoff_target_near_ranks_within_tier():
+    """On the disagg wire the adopter nearest the exporting prefill node
+    wins among otherwise-equal candidates."""
+    arb = PlacementArbiter()
+    a, b = _FakeEngine(), _FakeEngine()
+    assert arb.handoff_target({2: a, 6: b}, near=(5,)) is b
+    assert arb.handoff_target({2: a, 6: b}, near=(2,)) is a
+    # equidistant candidates fall back to the node-id tie-break
+    assert arb.handoff_target({2: a, 6: b}, near=(4,)) is a
+
+
+def test_pick_dests_near_ranks_free_nodes(setup):
+    cfg, params = setup
+    lc = LiveCluster(n_nodes=6, n_slots=2, max_len=32)
+    lc.register("m", cfg, params, n_blocks=2)
+    # no warmth anywhere: proximity to `near` decides before node id
+    assert lc.arbiter.pick_dests(lc.state, "m", 2, near=(5,)) == [5, 4]
+    assert lc.arbiter.pick_dests(lc.state, "m", 2) == [0, 1]
+
+
+# ================================================= autoscaler split pools
+def _sig(model="m", role=None, **kw):
+    base = dict(queue_depth=0, slots_total=8, slots_busy=0, nodes_busy=1,
+                slots_per_instance=4, n_replicas=1)
+    base.update(kw)
+    return LoadSignals(model, role=role, **base)
+
+
+def test_autoscaler_actions_carry_the_signal_role():
+    asc = Autoscaler(AutoscalerConfig(keepalive=1.0))
+    acts = asc.decide(0.0, [
+        _sig(role="prefill", queue_depth=9),
+        _sig(role="decode", idle_nodes=[(4, 5.0)], n_replicas=2),
+    ])
+    ups = [a for a in acts if isinstance(a, ScaleUp)]
+    downs = [a for a in acts if isinstance(a, ScaleDown)]
+    assert len(ups) == 1 and ups[0].role == "prefill"
+    assert len(downs) == 1 and downs[0].role == "decode"
+    assert downs[0].nodes == (4,)
+
+
+def test_autoscaler_cooldowns_are_per_pool():
+    """The prefill pool scaling must not start the decode pool's
+    cooldown: pacing state keys by (model, role)."""
+    asc = Autoscaler(AutoscalerConfig(cooldown_up=10.0))
+    assert [a.role for a in asc.decide(
+        0.0, [_sig(role="prefill", queue_depth=9)])] == ["prefill"]
+    # same model, other pool, inside the prefill cooldown window
+    acts = asc.decide(1.0, [_sig(role="decode", queue_depth=9,
+                                 slots_busy=8)])
+    assert [a.role for a in acts] == ["decode"]
+    # but the prefill pool itself is still paced
+    assert asc.decide(2.0, [_sig(role="prefill", queue_depth=9)]) == []
+
+
+def test_autoscaler_itl_slo_trigger():
+    cfgd = AutoscalerConfig(itl_slo=0.010)
+    asc = Autoscaler(cfgd)
+    acts = asc.decide(0.0, [_sig(role="decode",
+                                 recent_itl=(0.02, 0.03, 0.025))])
+    assert len(acts) == 1 and "itl" in acts[0].reason
+    assert asc.decide(0.0, [_sig(role="decode",
+                                 recent_itl=(0.001,))]) == []
+
+
+def test_autoscaler_page_pressure_trigger():
+    asc = Autoscaler(AutoscalerConfig(page_util_high=0.9))
+    sig = _sig(pages_total=100, pages_live=95)
+    assert sig.page_utilization == pytest.approx(0.95)
+    acts = asc.decide(0.0, [sig])
+    assert len(acts) == 1 and "pages" in acts[0].reason
+    assert _sig().page_utilization == 0.0    # unreported pool → no trigger
+
+
+# ================================================== metrics phase marks
+def test_request_phase_breakdown():
+    log = MetricsLog()
+    log.on_arrival(1, "m", 10.0, prompt_len=32)
+    log.on_start(1, 10.5)
+    log.on_first_token(1, 11.0)
+    log.on_first_decode(1, 11.2)
+    log.on_finish(1, 12.0, out_tokens=11)
+    m = log.requests[1]
+    assert m.queue_wait == pytest.approx(0.5)
+    assert m.prefill_time == pytest.approx(0.5)
+    assert m.decode_time == pytest.approx(1.0)
+    assert m.ttfd == pytest.approx(1.2)
+    assert m.itl == pytest.approx(0.1)
+    # marks are first-write-wins (a re-observed request never shifts)
+    log.on_start(1, 99.0)
+    log.on_first_decode(1, 99.0)
+    assert m.t_start == 10.5 and m.t_first_decode == 11.2
+    s = log.summary()
+    for key in ("queue_wait", "prefill_time", "decode_time", "ttfd",
+                "itl"):
+        assert s[f"{key}_p50"] == s[f"{key}_p99"]  # single observation
+    assert s["queue_wait_p99"] == pytest.approx(0.5)
+    assert s["itl_p99"] == pytest.approx(0.1)
+
+
+def test_summary_omits_unobserved_phase_tails():
+    """A run that never observed a mark must not emit NaN tail keys —
+    bench diffs treat a NaN on a watched p99 as a hard failure."""
+    log = MetricsLog()
+    log.on_arrival(1, "m", 0.0)
+    log.on_first_token(1, 1.0)
+    log.on_finish(1, 2.0, out_tokens=1)      # 1 token → no ITL either
+    s = log.summary()
+    assert not any(k.startswith(("queue_wait", "prefill_time", "ttfd",
+                                 "itl")) for k in s)
+    assert all(not math.isnan(v) for k, v in s.items() if "p99" in k)
+
+
+def test_gpu_seconds_by_role_and_merge():
+    a, b = MetricsLog(), MetricsLog()
+    a.on_gpu_time("prefill", 2.0)
+    a.on_gpu_time("decode", 1.0)
+    b.on_gpu_time("decode", 3.0)
+    assert a.gpu_seconds == pytest.approx(3.0)
+    merged = merge([a, b])
+    assert merged.gpu_seconds_by_role == pytest.approx(
+        {"prefill": 2.0, "decode": 4.0})
+    assert merged.gpu_seconds == pytest.approx(6.0)
+    s = merged.summary()
+    assert s["gpu_seconds_prefill"] == pytest.approx(2.0)
+    assert s["gpu_seconds_decode"] == pytest.approx(4.0)

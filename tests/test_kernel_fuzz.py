@@ -12,10 +12,13 @@ bucket, not per case); everything else is randomized per case from a
 deterministic seed — data, dtype-independent masks, ragged ``lens``
 including 0, 1 and page-boundary ±1, and NON-CONTIGUOUS page tables
 (page ids drawn from a shuffled permutation, never sorted).  Failure
-messages carry (kernel, case index, bucket, seed) so any case replays
-standalone.
+messages carry (kernel, case index, bucket, seed) AND a one-line repro
+command so any case replays standalone; ``REPRO_FUZZ_SEED`` overrides
+the base seed (both to replay a past failure exactly and to widen the
+sweep from CI without touching the file).
 """
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +33,13 @@ from repro.kernels.ref import (decode_attention_ref, flash_attention_ref,
 
 N_CASES = 210            # per kernel (acceptance floor: 200+)
 CHUNK = 30               # cases per pytest item (fail fast, stay readable)
-BASE_SEED = 20260809
+BASE_SEED = int(os.environ.get("REPRO_FUZZ_SEED", "20260809"))
+
+
+def _repro(test: str, i: int) -> str:
+    """One-line command replaying the pytest item holding case ``i``."""
+    return (f"repro: REPRO_FUZZ_SEED={BASE_SEED} python -m pytest -x "
+            f"'tests/test_kernel_fuzz.py::{test}[{i - i % CHUNK}]'")
 
 # jit the oracles too: per-bucket tracing instead of per-case eager
 # dispatch keeps the whole harness inside the fast-tier budget
@@ -110,7 +119,8 @@ def test_fuzz_paged_attention(cases):
             np.asarray(out, np.float32), np.asarray(ref, np.float32),
             atol=_tol(dtype), rtol=_tol(dtype),
             err_msg=f"paged case={i} bucket={PAGED_BUCKETS[bidx]} "
-                    f"block_k={bk} lens={lens} seed={[BASE_SEED, 1, i]}")
+                    f"block_k={bk} lens={lens} seed={[BASE_SEED, 1, i]}\n"
+                    + _repro("test_fuzz_paged_attention", i))
 
 
 @pytest.mark.parametrize("cases", _chunks(), ids=lambda r: f"{r[0]}")
@@ -138,7 +148,8 @@ def test_fuzz_paged_decode_step(cases):
                                         window=window, block_k=bk)
         ref, kr, vr = _step_ref(q, kn, vn, k, v, table, L, window=window)
         msg = (f"step case={i} bucket={PAGED_BUCKETS[bidx]} block_k={bk} "
-               f"lens={lens} seed={[BASE_SEED, 2, i]}")
+               f"lens={lens} seed={[BASE_SEED, 2, i]}\n"
+               + _repro("test_fuzz_paged_decode_step", i))
         np.testing.assert_allclose(
             np.asarray(out, np.float32), np.asarray(ref, np.float32),
             atol=_tol(dtype), rtol=_tol(dtype), err_msg=msg)
@@ -186,7 +197,8 @@ def test_fuzz_decode_attention(cases):
             np.asarray(out, np.float32), np.asarray(ref, np.float32),
             atol=_tol(dtype), rtol=_tol(dtype),
             err_msg=f"decode case={i} bucket={DECODE_BUCKETS[bidx]} "
-                    f"pos={pos.tolist()} seed={[BASE_SEED, 3, i]}")
+                    f"pos={pos.tolist()} seed={[BASE_SEED, 3, i]}\n"
+                    + _repro("test_fuzz_decode_attention", i))
 
 
 # (B, H, KVH, S, dh, causal, window, bq, bk, dtype)
@@ -217,4 +229,5 @@ def test_fuzz_flash_attention(cases):
             np.asarray(out, np.float32), np.asarray(ref, np.float32),
             atol=_tol(dtype), rtol=_tol(dtype),
             err_msg=f"flash case={i} bucket={FLASH_BUCKETS[bidx]} "
-                    f"seed={[BASE_SEED, 4, i]}")
+                    f"seed={[BASE_SEED, 4, i]}\n"
+                    + _repro("test_fuzz_flash_attention", i))

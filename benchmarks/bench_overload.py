@@ -1,0 +1,147 @@
+"""Overload survival A/B: preemption + quotas + shedding vs FCFS collapse.
+
+The robustness claim: under a sustained 3× mixed-class overload on FIXED
+capacity (one node — no scale-out can arrive in time, so degradation
+order IS the outcome), the survival stack — strict-priority admission
+with per-class page quotas, page-granular preemption over the PackedKV
+wire, and explicit shedding with a retry-after hint — keeps the
+interactive class's p99 TTFT and goodput strictly better than the FCFS
+baseline, which admits in arrival order and lets batch traffic starve
+everyone equally.
+
+Both conditions replay the SAME ``overload_trace`` through
+``LiveCluster.replay`` with real JAX tokens on the simulated clock.
+In-bench acceptance asserts (the PR's exactness bar):
+  * greedy tokens bit-equal to the static reference engine for every
+    request that was NOT shed — preempt/park/resume is a scheduling
+    change only;
+  * no request is both shed and completed;
+  * every engine's page allocator drains back to all-free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import init_params
+from repro.serving.autoscaler import Autoscaler, AutoscalerConfig
+from repro.serving.cluster import LiveCluster
+from repro.serving.engine import InferenceEngine
+from repro.serving.scheduler import (AdmissionPolicy, PageQuota,
+                                     StrictPriorityPolicy)
+from repro.serving.workload import overload_trace
+
+MAX_LEN = 48
+PAGE_SIZE = 16
+
+# interactive keeps a reserved page floor no other class may eat into;
+# batch is capped at a burstable ceiling of the pool
+QUOTAS = {"interactive": PageQuota(reserved_frac=0.25),
+          "batch": PageQuota(ceiling_frac=0.6)}
+
+CONDITIONS = {
+    # FCFS collapse baseline: arrival-order admission, no preemption,
+    # no quotas, no shedding — every class queues behind every other
+    "fcfs": dict(admission=AdmissionPolicy),
+    # the overload-survival stack
+    "survival": dict(admission=lambda: StrictPriorityPolicy(quotas=QUOTAS),
+                     preemption=True, shed_limit=4, max_park_ticks=400),
+}
+
+
+def _prompt(cfg, req):
+    rng = np.random.default_rng(10_000 + req.req_id)
+    return list(map(int, rng.integers(0, cfg.vocab_size,
+                                      size=max(1, req.prompt_len))))
+
+
+def run_condition(cfg, params, trace, cond):
+    lc = LiveCluster(n_nodes=1, n_slots=2, max_len=MAX_LEN,
+                     page_size=PAGE_SIZE,
+                     admission=cond["admission"](),
+                     preemption=cond.get("preemption", False),
+                     shed_limit=cond.get("shed_limit"),
+                     max_park_ticks=cond.get("max_park_ticks"))
+    lc.register("m", cfg, params, n_blocks=2, hot_nodes=[0])
+    asc = Autoscaler(AutoscalerConfig(cooldown_up=1e9, keepalive=1e9,
+                                      shed_high=0.2))
+    log = lc.replay(trace, autoscaler=asc, tick_seconds=0.002,
+                    max_ticks=500_000)
+    return lc, log
+
+
+def goodput(log, cls: str) -> float:
+    ms = log.by_class().get(cls, [])
+    if not ms:
+        return float("nan")
+    return sum(1 for m in ms if m.t_finish is not None) / len(ms)
+
+
+def run(report) -> None:
+    cfg = reduced(get_config("qwen2.5-3b"), d_model=64)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    ref = InferenceEngine(cfg, params, max_len=MAX_LEN)
+    # one node, 2 slots, 1 prefill + 6 decode ticks per request at
+    # 0.002 s/tick ≈ 140 rps of real capacity — overload=3 is a genuine
+    # sustained 3x, not a burst the queue can absorb
+    trace = overload_trace(model="m", capacity_rps=140.0, overload=3.0,
+                           duration=0.6, prompt_len=8, out_tokens=6,
+                           seed=3)
+
+    results = {}
+    for name, cond in CONDITIONS.items():
+        lc, log = run_condition(cfg, params, trace, cond)
+        shed_ids = {e.req_id for e in lc.audit_log
+                    if e.kind in ("shed", "park_timeout")}
+        out = lc.results("m")
+        assert not (shed_ids & set(out)), \
+            f"{name}: sequence both shed and completed"
+        for r in trace:
+            if r.req_id in shed_ids:
+                continue
+            assert r.req_id in out, \
+                f"{name}: req {r.req_id} neither shed nor finished"
+            toks = ref.generate(
+                {"tokens": jnp.asarray(_prompt(cfg, r), jnp.int32)[None]},
+                r.out_tokens, cache_len=MAX_LEN)
+            assert out[r.req_id] == list(map(int, toks[0])), \
+                f"{name}: req {r.req_id} tokens diverge from reference"
+        for eng in lc.serving["m"].locals_.values():
+            eng.pages.check_invariants()
+            assert eng.pages.n_slot_owned == 0 and eng.pages.n_reserved == 0
+            assert eng._dedupe == {}
+            if eng.pages.prefix is not None:
+                eng.pages.prefix.clear(eng.pages)
+            assert eng.pages.n_allocated == 0, f"{name}: allocator leak"
+        results[name] = (lc, log, log.summary())
+
+    for name, (lc, log, s) in results.items():
+        report(f"overload/{name}/ttft_p99_interactive",
+               s["ttft_p99_interactive"],
+               "sim-clock s under sustained 3x overload, 1 node")
+        report(f"overload/{name}/goodput_interactive",
+               goodput(log, "interactive"), "finished/arrivals")
+        report(f"overload/{name}/goodput_batch", goodput(log, "batch"), "")
+        report(f"overload/{name}/slo_attainment_interactive",
+               s["slo_attainment_interactive"], "")
+    _, _, surv = results["survival"]
+    report("overload/survival/n_shed", surv["n_shed"],
+           "explicit rejects with retry-after hints")
+    report("overload/survival/preemptions", surv["preemptions"],
+           "victims packed over the PackedKV wire and parked")
+    report("overload/survival/pages_reclaimed", surv["pages_reclaimed"],
+           "worst-case pages freed by preemption")
+    report("overload/survival/shed_frac_batch", surv["shed_frac_batch"],
+           "degradation lands on the lowest class")
+    report("overload/survival/shed_frac_interactive",
+           surv["shed_frac_interactive"], "must stay ~0")
+    # the two gated headline metrics (benchmarks.diff floors)
+    report("overload/relative_interactive_p99",
+           results["fcfs"][2]["ttft_p99_interactive"]
+           / surv["ttft_p99_interactive"],
+           "fcfs/survival interactive p99 TTFT; floor >= 1")
+    report("overload/goodput_interactive",
+           goodput(results["survival"][1], "interactive"),
+           "survival stack, interactive completion fraction")

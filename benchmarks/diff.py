@@ -53,11 +53,18 @@ DEFAULT_WATCH_UP = ("slo_attainment",)
 # versus unified serving in the same run.  relative_itl_p99 is the
 # disagg tentpole gate: the split pools' steady-state inter-token p99
 # must stay at least as tight as unified's (the committed baseline
-# shows >=1.1x better).
+# shows >=1.1x better).  The overload pair gates the survival stack:
+# under sustained 3x mixed-class overload, preemption + quotas + shed
+# must keep the interactive class's p99 TTFT no worse than FCFS
+# collapse (relative_interactive_p99, fcfs/survival ratio) and keep
+# interactive completion near-total (goodput_interactive — the
+# committed baseline shows 1.0; the 0.9 floor leaves seed margin).
 DEFAULT_FLOORS = {"relative_throughput": 1.0,
                   "prefill_tokens_skipped_frac": 0.3,
                   "relative_ttft": 1.0,
-                  "relative_itl_p99": 1.0}
+                  "relative_itl_p99": 1.0,
+                  "relative_interactive_p99": 1.0,
+                  "goodput_interactive": 0.9}
 
 
 def load_rows(path: str) -> Dict[str, float]:

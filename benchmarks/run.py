@@ -25,6 +25,9 @@ perf trajectory across PRs can be diffed without parsing stdout.  Modules:
   slo      bench_slo            (control plane: EDF + placement arbiter
                                  vs FCFS + independent scaling, per-class
                                  p99 TTFT and SLO attainment)
+  overload bench_overload       (overload survival: preemption + page
+                                 quotas + shedding vs FCFS collapse under
+                                 sustained 3x mixed-class overload)
   disagg   bench_disagg         (prefill/decode disaggregation on the
                                  PackedKV wire: inter-token p99 + TTFT
                                  vs unified serving, priced wire bytes)
@@ -50,9 +53,10 @@ from benchmarks import (bench_autoscale, bench_cache,
                         bench_continuous_batching, bench_disagg,
                         bench_engine, bench_kway, bench_latency,
                         bench_multicast, bench_multimodel,
-                        bench_num_blocks, bench_optimizations, bench_paged,
-                        bench_prefix, bench_roofline, bench_slo,
-                        bench_trace, bench_throughput)
+                        bench_num_blocks, bench_optimizations,
+                        bench_overload, bench_paged, bench_prefix,
+                        bench_roofline, bench_slo, bench_trace,
+                        bench_throughput)
 
 MODULES = {
     "cache": bench_cache, "multicast": bench_multicast,
@@ -63,6 +67,7 @@ MODULES = {
     "cbatch": bench_continuous_batching, "mmodel": bench_multimodel,
     "autoscale": bench_autoscale, "paged": bench_paged, "slo": bench_slo,
     "prefix": bench_prefix, "disagg": bench_disagg,
+    "overload": bench_overload,
 }
 
 

@@ -231,6 +231,21 @@ class PageTable:
     def slot_pages(self, slot: int) -> List[int]:
         return list(self._slot_pages[slot])
 
+    def slot_claim(self, slot: int) -> int:
+        """Worst-case reservation headroom freed if ``slot`` released
+        right now: pages owned by this slot ALONE (shared pages survive
+        the release and free nothing; a sole-owned page leaves
+        ``n_slot_owned`` even when the prefix index retains it — the
+        orphan is reclaimable and admission already counts it as free)
+        plus the unbacked remainder of its worst-case reservation.
+        Preemption victim selection sums this to know a victim set
+        actually covers the requester's page demand."""
+        sole = sum(1 for pid in self._slot_pages[slot]
+                   if self._owners[pid] == {slot})
+        unbacked = max(self._reserved[slot] + self._reserve_pad[slot]
+                       - len(self._slot_pages[slot]), 0)
+        return sole + unbacked
+
     def shared_match(self, prompt) -> Tuple[List[int], int]:
         """(cached page run, matched tokens) the attached prefix index
         offers for ``prompt`` — ([], 0) when no index is attached."""

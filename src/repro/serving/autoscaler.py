@@ -60,6 +60,7 @@ class LoadSignals:
     recent_itl: Sequence[float] = ()  # per-request mean inter-token gaps
     pages_total: int = 0             # KV page pool size (0 = not reported)
     pages_live: int = 0              # allocated pages across the pool
+    recent_sheds: int = 0            # submits rejected since last decision
 
     @property
     def utilization(self) -> float:
@@ -129,6 +130,11 @@ class AutoscalerConfig:
     # threshold — slot utilization alone cannot see long prompts
     # exhausting pages
     page_util_high: Optional[float] = None
+    # overload trigger: +1 node while the shed fraction of the decision
+    # window (sheds / arrivals) meets the threshold — shedding means
+    # admission control is ALREADY turning work away, the strongest
+    # possible demand signal (queue depth saturates once sheds start)
+    shed_high: Optional[float] = None
     # predictive pre-warm (opt-in): Holt/EWMA short-horizon forecast of
     # the per-model arrival rate (fed from MetricsLog arrivals via
     # LoadSignals.recent_arrivals).  When the arrivals predicted over
@@ -194,6 +200,11 @@ class Autoscaler:
                 sig.page_utilization >= c.page_util_high:
             boost += 1
             reason = (reason + "+pages").lstrip("+")
+        if c.shed_high is not None and sig.recent_sheds > 0 and \
+                sig.recent_sheds / max(sig.recent_arrivals, 1) \
+                >= c.shed_high:
+            boost += 1
+            reason = (reason + "+shed").lstrip("+")
         n_new = base + boost
         if c.max_nodes is not None:
             n_new = min(n_new, c.max_nodes - sig.nodes_busy)

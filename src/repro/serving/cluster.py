@@ -186,6 +186,21 @@ class HandoffDecision:
                 "recompute": self.t_recompute}.get(self.chosen, 0.0)
 
 
+@dataclasses.dataclass(frozen=True)
+class AuditEvent:
+    """One overload-survival decision on ``LiveCluster.audit_log``: a
+    shed at submit, a preemption (victim packed off its slot), a park to
+    the host tier, a resume back onto a replica, or a park-timeout
+    re-route/shed.  The log is deterministic given the trace — the
+    degradation ORDER under overload is itself an output."""
+    t: float
+    kind: str                 # shed | preempt | park | resume | park_timeout
+    model: str
+    req_id: int
+    detail: str = ""
+    retry_after: float = 0.0
+
+
 # ----------------------------------------------------------------- cluster
 class LiveCluster:
     def __init__(self, *, n_nodes: int, hw: Optional[HardwareProfile] = None,
@@ -194,7 +209,10 @@ class LiveCluster:
                  page_size: int = DEFAULT_PAGE_SIZE,
                  prefix_sharing: bool = True,
                  admission: Optional[AdmissionPolicy] = None,
-                 arbiter: Optional[PlacementArbiter] = None):
+                 arbiter: Optional[PlacementArbiter] = None,
+                 preemption: bool = False,
+                 shed_limit: Optional[int] = None,
+                 max_park_ticks: Optional[int] = None):
         self.hw = hw or HardwareProfile()
         self.state = ClusterState(n_nodes, self.hw)
         self.nodes = self.state.nodes
@@ -214,6 +232,21 @@ class LiveCluster:
         # destinations, contention grants, handoff targets)
         self.admission = admission or AdmissionPolicy()
         self.arbiter = arbiter or PlacementArbiter()
+        # overload survival (opt-in): engines preempt low-priority decode
+        # slots for higher-class arrivals, schedulers shed past
+        # shed_limit queued same-or-higher-priority requests, and parked
+        # sequences time out after max_park_ticks cluster ticks
+        self.preemption = preemption
+        self.shed_limit = shed_limit
+        self.max_park_ticks = max_park_ticks
+        self.audit_log: List[AuditEvent] = []
+        # event outboxes the replay loop drains into the MetricsLog
+        # ((model, req_id, retry_after) / (model, req_id, pages))
+        self._shed_events: List[Tuple[str, int, float]] = []
+        self._preempt_events: List[Tuple[str, int, int]] = []
+        self._tick_no = 0
+        # (model, node, req_id) -> tick a resume-queue park was first seen
+        self._park_age: Dict[Tuple[str, int, int], int] = {}
         self.handoff_log: List[HandoffDecision] = []
         self.clock = 0.0
         self.models: Dict[str, ModelDeployment] = {}
@@ -310,7 +343,8 @@ class LiveCluster:
                 max_prefill_per_tick=self.max_prefill_per_tick,
                 paged=self.paged, page_size=self.page_size,
                 prefix_sharing=self.prefix_sharing,
-                policy=self.admission, role=role)
+                policy=self.admission, role=role,
+                shed_limit=self.shed_limit, preemption=self.preemption)
         return pool[node_id]
 
     def _pipeline_forward(self, model: str, pipe: ExecutionPipeline,
@@ -714,7 +748,33 @@ class LiveCluster:
         else:
             inst.submit(prompt, max_new_tokens, req_id=req_id,
                         t_arrive=t_arrive, slo=slo)
+            self._harvest_shed(model, inst)
         return req_id
+
+    def _harvest_shed(self, model: str, inst) -> None:
+        """Drain an instance's shed log into the audit trail and the
+        replay-visible event outbox (λPipe engines never shed — their
+        scheduler carries no shed_limit — so the drain is a no-op)."""
+        take = getattr(inst, "take_shed", None)
+        if take is None:
+            return
+        for rid, cls, retry in take():
+            self.audit_log.append(AuditEvent(
+                self.clock, "shed", model, rid, detail=cls,
+                retry_after=retry))
+            self._shed_events.append((model, rid, retry))
+
+    def take_shed_events(self) -> List[Tuple[str, int, float]]:
+        """Drain (model, req_id, retry_after) shed events since the last
+        drain — the replay loop's feed into ``MetricsLog.on_shed``."""
+        out, self._shed_events = self._shed_events, []
+        return out
+
+    def take_preempt_events(self) -> List[Tuple[str, int, int]]:
+        """Drain (model, req_id, pages_reclaimed) preemption events —
+        the replay loop's feed into ``MetricsLog.on_preempt``."""
+        out, self._preempt_events = self._preempt_events, []
+        return out
 
     def _route(self, model: str):
         """Pick the serving instance for a new request: least-loaded
@@ -794,6 +854,7 @@ class LiveCluster:
                     else:
                         inst.submit(prompt, n, req_id=rid, t_arrive=t_arr,
                                     slo=slo)
+                        self._harvest_shed(model, inst)
                 did = did or len(left) < len(sv.pending)
                 sv.pending = left
             for pinst in sv.live_pipes():
@@ -816,8 +877,132 @@ class LiveCluster:
                     self._adopt_pairs(model, target,
                                       self._price_handoff(model, pairs))
                     did = True
-            for eng in sv.locals_.values():
+            for nd, eng in sv.locals_.items():
                 did = eng.step() or did
+                # harvest preemption victims before the engine's next
+                # step would self-re-adopt them: packed KV parks to the
+                # node's host tier (ModelManager), the GPU pool stops
+                # paying for the sequence entirely
+                for seq, payload, pages in eng.take_preempted():
+                    self.nodes[nd].park_seq(
+                        model, seq.req_id,
+                        (seq, payload, self._tick_no, nd))
+                    self._preempt_events.append((model, seq.req_id, pages))
+                    self.audit_log.append(AuditEvent(
+                        self.clock, "preempt", model, seq.req_id,
+                        detail=f"node {nd}: {pages} pages reclaimed"))
+                    self.audit_log.append(AuditEvent(
+                        self.clock, "park", model, seq.req_id,
+                        detail=f"host tier node {nd}"))
+            did = self._reenter_parked(model, sv) or did
+            did = self._age_resume_parks(model, sv) or did
+        self._tick_no += 1
+        return did
+
+    def _resume_target(self, model: str, sv: ModelServing, seq, *,
+                       relaxed: bool, near: Sequence[int] = ()
+                       ) -> Optional[ContinuousBatchingEngine]:
+        """Decode-capable engine a preempted/parked sequence may resume
+        on: a free slot, pages for its worst-case footprint, and —
+        unless ``relaxed`` (the park-timeout path) — an empty fresh
+        queue, so a resumed victim never races the queued higher-class
+        work its preemption freed capacity for (re-preemption thrash).
+        Arbiter-ranked (locality to ``near``, then load) among the
+        eligible; None when nothing qualifies."""
+        cands: Dict[int, ContinuousBatchingEngine] = {}
+        for nd, eng in sv.locals_.items():
+            if self._ready_at.get((model, nd), 0.0) > self.clock:
+                continue
+            sched = eng.sched
+            if sched.in_flight >= eng.n_slots:
+                continue
+            if not relaxed and sched.queue:
+                continue
+            if sched.pages is not None and not sched.pages.can_admit(
+                    sched.admit_tokens(seq), prompt=seq.prompt):
+                continue
+            cands[nd] = eng
+        if not cands:
+            return None
+        return self.arbiter.handoff_target(cands, near=near)
+
+    def _reenter_parked(self, model: str, sv: ModelServing) -> bool:
+        """Re-enter host-tier parked sequences, oldest first per node.
+        Each goes back through the priced §4.4 handoff (ship the packed
+        pages or recompute from tokens) into an arbiter-ranked replica.
+        A park older than ``max_park_ticks`` relaxes the anti-thrash
+        gate to ANY admitting replica — and is shed, with an audit
+        entry, when none exists even then."""
+        did = False
+        for mm in self.nodes:
+            pen = mm.parked.get(model)
+            if not pen:
+                continue
+            for rid, (seq, payload, t_park, src) in list(pen.items()):
+                age = self._tick_no - t_park
+                timed_out = self.max_park_ticks is not None \
+                    and age >= self.max_park_ticks
+                target = self._resume_target(model, sv, seq,
+                                             relaxed=timed_out, near=(src,))
+                if target is not None:
+                    mm.pop_parked(model, rid)
+                    self._adopt_pairs(model, target, self._price_handoff(
+                        model, [(seq, payload)]))
+                    self.audit_log.append(AuditEvent(
+                        self.clock, "resume", model, rid,
+                        detail=f"parked {age} ticks on node {mm.node_id}"))
+                    did = True
+                elif timed_out:
+                    mm.pop_parked(model, rid)
+                    self.audit_log.append(AuditEvent(
+                        self.clock, "park_timeout", model, rid,
+                        detail=f"no admitting replica after {age} parked "
+                               f"ticks; shed"))
+                    self._shed_events.append((model, rid, 0.0))
+                    did = True
+        return did
+
+    def _age_resume_parks(self, model: str, sv: ModelServing) -> bool:
+        """Bound how long a handed-off sequence may sit in one engine's
+        resume queue waiting for pages: past ``max_park_ticks`` it is
+        evicted and re-routed through the arbiter to a replica that can
+        admit it NOW — or shed, with an audit entry, when none can.  A
+        wedged engine that could itself admit the sequence next tick is
+        left alone (the scheduler resumes it without a wire hop)."""
+        if self.max_park_ticks is None:
+            return False
+        did = False
+        live: Set[Tuple[str, int, int]] = set()
+        for nd, eng in list(sv.locals_.items()):
+            for seq in list(eng.sched.resume_queue):
+                key = (model, nd, seq.req_id)
+                live.add(key)
+                first = self._park_age.setdefault(key, self._tick_no)
+                age = self._tick_no - first
+                if age < self.max_park_ticks:
+                    continue
+                target = self._resume_target(model, sv, seq, relaxed=True)
+                if target is eng:
+                    continue
+                seq2, payload = eng.evict_parked(seq.req_id)
+                self._park_age.pop(key, None)
+                live.discard(key)
+                if target is not None:
+                    self._adopt_pairs(model, target, self._price_handoff(
+                        model, [(seq2, payload)]))
+                    self.audit_log.append(AuditEvent(
+                        self.clock, "resume", model, seq.req_id,
+                        detail=f"rerouted off node {nd} after {age} "
+                               f"resume-parked ticks"))
+                else:
+                    self.audit_log.append(AuditEvent(
+                        self.clock, "park_timeout", model, seq.req_id,
+                        detail=f"no admitting replica; shed off node {nd}"))
+                    self._shed_events.append((model, seq.req_id, 0.0))
+                did = True
+        for key in [k for k in self._park_age
+                    if k[0] == model and k not in live]:
+            del self._park_age[key]
         return did
 
     def drain_serving(self) -> None:
@@ -867,7 +1052,8 @@ class LiveCluster:
                       recent_ttft: Dict[str, List[float]],
                       log: Optional[MetricsLog] = None,
                       arrivals: Optional[Dict[str, int]] = None,
-                      recent_itl: Optional[Dict[str, List[float]]] = None
+                      recent_itl: Optional[Dict[str, List[float]]] = None,
+                      sheds: Optional[Dict[str, int]] = None
                       ) -> List[LoadSignals]:
         """Per-model load as the autoscaler vocabulary (queue depth, slot
         utilization, committed nodes, idle replicas, SLO pressure from
@@ -922,6 +1108,7 @@ class LiveCluster:
                     slo_pressure=log.slo_pressure(model, now)
                     if log else 0.0,
                     recent_arrivals=(arrivals or {}).get(model, 0),
+                    recent_sheds=(sheds or {}).get(model, 0),
                     role="prefill", pages_total=pt, pages_live=pl))
                 # decode pool: owns slot utilization, inter-token
                 # latency, generation pages
@@ -951,7 +1138,8 @@ class LiveCluster:
                     idle_nodes=idle,
                     slo_pressure=log.slo_pressure(model, now)
                     if log else 0.0,
-                    recent_arrivals=(arrivals or {}).get(model, 0)))
+                    recent_arrivals=(arrivals or {}).get(model, 0),
+                    recent_sheds=(sheds or {}).get(model, 0)))
             recent_ttft[model] = []
         return signals
 
@@ -1163,6 +1351,7 @@ class LiveCluster:
         recent_ttft: Dict[str, List[float]] = {}
         recent_itl: Dict[str, List[float]] = {}
         arr_count: Dict[str, int] = {}       # arrivals per control window
+        shed_count: Dict[str, int] = {}      # sheds per control window
         idx = 0
         now = self.clock
         next_ctrl = now
@@ -1180,13 +1369,22 @@ class LiveCluster:
             if now >= next_ctrl:
                 next_ctrl = now + dt_ctrl
                 sigs = self._load_signals(now, last_busy, recent_ttft,
-                                          log, arr_count, recent_itl)
+                                          log, arr_count, recent_itl,
+                                          shed_count)
                 arr_count = {}
+                shed_count = {}
                 self._apply_actions(autoscaler.decide(now, sigs), now, log,
                                     last_busy,
                                     {s.model: s.slo_pressure for s in sigs})
             self.step_due(now)
             self.tick()
+            for model, rid, retry in self.take_shed_events():
+                log.on_shed(rid, now, retry_after=retry)
+                shed_count[model] = shed_count.get(model, 0) + 1
+                if rid in log.requests:
+                    seen_done.add(rid)      # shed is terminal: converge
+            for model, rid, pages in self.take_preempt_events():
+                log.on_preempt(now, model, rid, pages=pages)
             self._observe(now, log, recent_ttft, seen_first, seen_done,
                           harvested, recent_itl, seen_decode)
             if idx >= len(arrivals) and not self.scales \

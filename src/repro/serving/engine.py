@@ -216,7 +216,9 @@ class ContinuousBatchingEngine:
                  block_k: Optional[int] = None,
                  prefix_sharing: bool = True,
                  policy: Optional[AdmissionPolicy] = None,
-                 role: str = "unified"):
+                 role: str = "unified",
+                 shed_limit: Optional[int] = None,
+                 preemption: bool = False):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -252,7 +254,8 @@ class ContinuousBatchingEngine:
                 self.pages.prefix = PrefixIndex(page_size)
             self.sched = Scheduler(
                 n_slots, max_prefill_per_tick=max_prefill_per_tick,
-                pages=self.pages, policy=policy, role=role)
+                pages=self.pages, policy=policy, role=role,
+                shed_limit=shed_limit)
             self.cache = init_paged_cache(
                 cfg, n_slots, n_pages=self.n_pages, page_size=page_size,
                 max_pages=self.max_pages)
@@ -266,7 +269,7 @@ class ContinuousBatchingEngine:
             self.pages = None
             self.sched = Scheduler(
                 n_slots, max_prefill_per_tick=max_prefill_per_tick,
-                policy=policy)
+                policy=policy, shed_limit=shed_limit)
             self.cache = init_cache(cfg, n_slots, max_len)
             self._prefill_scatter, self._step, self._axes = \
                 _cb_executables(cfg, max_len)
@@ -285,6 +288,17 @@ class ContinuousBatchingEngine:
         # pool page remap, pages held alive for parked sharers, and the
         # req_ids of batch payloads not yet restored here
         self._dedupe: Dict[int, Dict[str, Any]] = {}
+        # overload survival: page-granular preemption packs low-priority
+        # victims over the PackedKV wire into this outbox.  The cluster
+        # harvests it every tick (take_preempted → host-tier park); a
+        # standalone engine re-enqueues it at the NEXT step — one tick
+        # late on purpose, so the requester that triggered the
+        # preemption takes the freed slot/pages first.
+        self.preemption = bool(preemption and self.paged)
+        self.preempt_outbox: List[Tuple[SeqState, Any, int]] = []
+        # (req_id, slo_class_name, retry_after) of submits the scheduler
+        # rejected outright; drained by take_shed()
+        self.shed_log: List[Tuple[int, str, float]] = []
 
     # ------------------------------------------------------------- intake
     def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
@@ -309,9 +323,13 @@ class ContinuousBatchingEngine:
                 f"({self.n_pages} × {self.page_size} tokens)")
         if eos_id is not None:
             self._eager = True
-        self.sched.submit(SeqState(req_id, list(prompt), max_new_tokens,
-                                   eos_id=eos_id, t_arrive=t_arrive,
-                                   slo=slo))
+        res = self.sched.submit(SeqState(req_id, list(prompt),
+                                         max_new_tokens, eos_id=eos_id,
+                                         t_arrive=t_arrive, slo=slo))
+        if res.shed:
+            self.shed_log.append((req_id,
+                                  slo.name if slo is not None else "",
+                                  res.retry_after))
         return req_id
 
     # ------------------------------------------------------------ execution
@@ -508,6 +526,13 @@ class ContinuousBatchingEngine:
 
     def step(self) -> bool:
         """Run one scheduler tick.  Returns False when nothing ran."""
+        # un-harvested preemption victims (standalone engine — no
+        # cluster parked them to the host tier last tick) re-enter the
+        # resume queue now, AFTER the preempting requester was admitted
+        if self.preempt_outbox:
+            self.adopt([(s, p) for s, p, _ in self.preempt_outbox])
+            self.preempt_outbox = []
+        self._maybe_preempt()
         tick = self.sched.next_tick()
         # a parked sequence that finished while parked (EOS in its last
         # handed-off token) is retired by the scheduler without ever
@@ -601,6 +626,94 @@ class ContinuousBatchingEngine:
                                  self.page_size)
         return payload
 
+    # ------------------------------------------------------- preemption
+    def _maybe_preempt(self) -> None:
+        """Preempt low-priority decode slots when the policy's next
+        fresh admission is a HIGHER class that cannot be admitted for
+        lack of a slot or pages.  Victims are packed over the PackedKV
+        wire into ``preempt_outbox`` before the tick plans admissions,
+        so the requester takes the freed capacity this very tick."""
+        if not self.preemption or self.role == "prefill" \
+                or self.sched.draining or not self.sched.queue:
+            return
+        sched = self.sched
+        head = sched.queue[sched._pick(sched.queue)]
+        if head.priority <= 0:
+            return                  # lowest class preempts nobody
+        free = sched.free_slots()
+        if free and self.pages.can_admit(sched.admit_tokens(head),
+                                         prompt=head.prompt):
+            return                  # plain admission takes it this tick
+        if sched._quota_blocked(head):
+            return         # quota would veto it — don't shed live work
+        # worst-case incremental pages still missing (slot_claim sums
+        # are worst-case too, so coverage implies admissibility)
+        headroom = self.pages.n_pages - self.pages.n_reserved
+        need = pages_for(sched.admit_tokens(head), self.page_size) \
+            - max(headroom, 0)
+        victims = sched.pick_victims(need, head.slo,
+                                     need_slot=not free)
+        if victims:
+            self.preempt_export(victims)
+
+    def preempt_export(self, slots: Sequence[int]
+                       ) -> List[Tuple[SeqState, Any, int]]:
+        """Pack the live pages of each victim slot into the deduped
+        ``PackedKV`` wire form and evict it (``Scheduler.preempt``):
+        the slot and its pages free immediately (CoW sharers keep their
+        references — pack copies page contents, so the payload is
+        self-contained), and the (seq, payload, pages_reclaimed)
+        triples land in ``preempt_outbox`` for the cluster to park to
+        the host tier — or for the engine itself to re-enqueue next
+        step.  The sequence later re-enters through the ordinary
+        ``enqueue_resume``/adopt machinery, so its greedy tokens stay
+        bit-equal with an uninterrupted run."""
+        if not self.paged:
+            raise RuntimeError("preemption needs the paged KV layout")
+        self.flush()       # _restore stages seq.generated[-1] at resume
+        batch = next(_HANDOFF_BATCH) if self.prefix_sharing else None
+        shipped: set = set()
+        out: List[Tuple[SeqState, Any, int]] = []
+        for slot in slots:
+            seq = self.sched.slots[slot]
+            if seq is None or seq.finished:
+                continue           # EOS landed at flush — retires instead
+            claim = self.pages.slot_claim(slot)
+            payload = self._pack_slot(slot, seq, batch, shipped)
+            self.sched.preempt(slot)
+            out.append((seq, payload, claim))
+        self.preempt_outbox.extend(out)
+        return out
+
+    def take_preempted(self) -> List[Tuple[SeqState, Any, int]]:
+        """Drain the preemption outbox — (seq, payload, pages_reclaimed)
+        triples the caller must now own (park to the host tier and
+        re-enter them later, or hand them to ``adopt``)."""
+        out, self.preempt_outbox = self.preempt_outbox, []
+        return out
+
+    def take_shed(self) -> List[Tuple[int, str, float]]:
+        """Drain the shed log — (req_id, slo_class_name, retry_after)
+        for every submit the scheduler rejected since the last drain."""
+        out, self.shed_log = self.shed_log, []
+        return out
+
+    def evict_parked(self, req_id: int) -> Tuple[SeqState, Any]:
+        """Remove a parked (resume-queue) sequence from this engine so
+        the caller can re-route it to a less wedged instance.  Returns
+        (seq, payload); the payload degrades to None when it was
+        wire-deduped against THIS engine's adoption state — its page
+        references resolve nowhere else, so the target rebuilds the
+        cache from tokens instead (§4.4 recompute, still bit-equal)."""
+        seq = next(s for s in self.sched.resume_queue
+                   if s.req_id == req_id)
+        self.sched.resume_queue.remove(seq)
+        payload = self._parked.pop(req_id, None)
+        if isinstance(payload, PackedKV) and payload.batch is not None:
+            self._dedupe_discard(req_id, payload)
+            payload = None
+        return seq, payload
+
     # ----------------------------------------------------- disagg export
     def export_prefilled(self) -> List[Tuple[SeqState, Any]]:
         """Stream out every prefilled slot (prefill-role wire).
@@ -679,6 +792,12 @@ class ContinuousBatchingEngine:
                 payload = self._parked.pop(seq.req_id, None)
                 self._dedupe_discard(seq.req_id, payload)
                 out.append((seq, payload))
+        # un-harvested preemption victims ride along: they sit in no
+        # scheduler queue, but their packed payloads are live state
+        for seq, payload, _ in self.preempt_outbox:
+            if seq.req_id not in have:
+                out.append((seq, payload))
+        self.preempt_outbox = []
         return out
 
     def adopt(self, pairs: Sequence[Tuple[SeqState, Any]]) -> None:

@@ -78,6 +78,12 @@ class RequestMetric:
     slo: Optional["SLOClass"] = None
     t_start: Optional[float] = None          # entered a prefill slot
     t_first_decode: Optional[float] = None   # first decode-phase tick
+    t_shed: Optional[float] = None           # rejected under overload
+    retry_after: float = 0.0                 # back-off hint at shed time
+
+    @property
+    def shed(self) -> bool:
+        return self.t_shed is not None
 
     @property
     def ttft(self) -> Optional[float]:
@@ -158,6 +164,13 @@ class MetricsLog:
         # when the runtime doesn't split pools).  Sums to gpu_seconds
         # when the runtime attributes every busy tick.
         self.gpu_seconds_by_role: Dict[str, float] = {}
+        # overload-survival counters: preemptions executed, worst-case
+        # pages those preemptions reclaimed, and whether any shed was
+        # observed (gates the overload keys in summary() — a run that
+        # never exercised the machinery emits none of them)
+        self.preemptions: int = 0
+        self.pages_reclaimed: int = 0
+        self._shed_seen = False
         self._any_slo = False        # fast path for slo_pressure scans
         # classed requests not yet known to have a first token — the
         # working set slo_pressure scans (pruned lazily as first tokens
@@ -207,6 +220,27 @@ class MetricsLog:
     def on_scale(self, t: float, kind: str, model: str,
                  detail: str = "") -> None:
         self.scale_events.append(ScaleEvent(t, kind, model, detail))
+
+    def on_preempt(self, t: float, model: str, req_id: int,
+                   pages: int = 0) -> None:
+        """A live slot was preempted (its sequence parked, ``pages``
+        worst-case pages reclaimed for higher-class work)."""
+        self.preemptions += 1
+        self.pages_reclaimed += pages
+
+    def on_shed(self, req_id: int, t: float,
+                retry_after: float = 0.0) -> None:
+        """The request was rejected under overload (first-write-wins,
+        like the other marks).  A shed request never produces a first
+        token, so it also leaves the slo_pressure working set — a
+        rejected request must not keep weighing on placement."""
+        self._shed_seen = True
+        m = self.requests.get(req_id)
+        if m is None or m.t_shed is not None:
+            return
+        m.t_shed = t
+        m.retry_after = retry_after
+        self._open.get(m.model, set()).discard(req_id)
 
     # ------------------------------------------------------------ queries
     def ttfts(self) -> List[float]:
@@ -313,6 +347,15 @@ class MetricsLog:
             out["itl_p99"] = percentile(itls, 99)
         for role, secs in sorted(self.gpu_seconds_by_role.items()):
             out[f"gpu_seconds_{role}"] = secs
+        # overload-survival counters ride the same NaN-gate convention:
+        # emitted only when the machinery was actually exercised, so
+        # runs without it keep byte-identical summaries
+        overloaded = bool(self.preemptions or self._shed_seen)
+        if overloaded:
+            out["preemptions"] = float(self.preemptions)
+            out["pages_reclaimed"] = float(self.pages_reclaimed)
+            out["n_shed"] = float(sum(
+                1 for m in self.requests.values() if m.shed))
         classed = self.by_class()
         if classed:
             out["slo_attainment"] = self.slo_attainment()
@@ -320,6 +363,14 @@ class MetricsLog:
                 out[f"slo_attainment_{name}"] = self.slo_attainment(name)
                 out[f"ttft_p99_{name}"] = percentile(
                     [m.ttft for m in ms if m.ttft is not None], 99)
+                if overloaded:
+                    # goodput = completion fraction (arrivals that
+                    # finished); distinct from slo_attainment, which
+                    # judges timeliness of the ones that got served
+                    out[f"goodput_{name}"] = sum(
+                        1 for m in ms if m.t_finish is not None) / len(ms)
+                    out[f"shed_frac_{name}"] = sum(
+                        1 for m in ms if m.shed) / len(ms)
         return out
 
 
@@ -335,6 +386,9 @@ def merge(logs: Sequence[MetricsLog]) -> MetricsLog:
         for role, secs in lg.gpu_seconds_by_role.items():
             out.gpu_seconds_by_role[role] = (
                 out.gpu_seconds_by_role.get(role, 0.0) + secs)
+        out.preemptions += lg.preemptions
+        out.pages_reclaimed += lg.pages_reclaimed
+        out._shed_seen = out._shed_seen or lg._shed_seen
         out._any_slo = out._any_slo or lg._any_slo
         for model, ids in lg._open.items():
             out._open.setdefault(model, set()).update(ids)

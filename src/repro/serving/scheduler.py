@@ -50,7 +50,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
-from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, ClassVar, Dict, List, Optional, Tuple
 
 if TYPE_CHECKING:                                    # pragma: no cover
     from repro.models.cache_ops import PageTable
@@ -76,6 +76,52 @@ def instance_slot_count(kind: str, n_nodes: int,
     return base * (n_nodes if kind == "pipeline" else 1)
 
 
+# -------------------------------------------------------- overload surface
+@dataclasses.dataclass(frozen=True)
+class SubmitResult:
+    """Outcome of ``Scheduler.submit`` under overload control.
+
+    ``status`` is ``SubmitResult.OK`` (queued) or ``SubmitResult.SHED``
+    (rejected outright).  A shed carries ``retry_after`` — a hint in
+    scheduler ticks until queue pressure plausibly clears — so a client
+    (or the cluster's audit log) can back off deterministically rather
+    than hammering a saturated instance.  ``submit`` always returns one;
+    callers that predate shedding may ignore it (OK is falsy-free and
+    sheds only happen when a ``shed_limit`` is configured).
+    """
+    status: str = "ok"
+    retry_after: float = 0.0
+    reason: str = ""
+
+    OK: ClassVar[str] = "ok"
+    SHED: ClassVar[str] = "shed"
+
+    @property
+    def shed(self) -> bool:
+        return self.status == SubmitResult.SHED
+
+
+@dataclasses.dataclass(frozen=True)
+class PageQuota:
+    """Per-``SLOClass`` share of the page pool (quota admission).
+
+    ``reserved_frac`` is a floor: this fraction of the pool is kept
+    admissible for the class even when every other class is hungry —
+    other classes' fresh admissions may not eat into it.  ``ceiling_frac``
+    is a burstable cap: the class may grow past its floor into idle
+    capacity but never beyond the ceiling.  Fractions are of
+    ``PageTable.n_pages``; floors across classes should sum to <= 1.
+    """
+    reserved_frac: float = 0.0
+    ceiling_frac: float = 1.0
+
+    def floor_pages(self, total: int) -> int:
+        return int(math.ceil(self.reserved_frac * total - 1e-9))
+
+    def ceiling_pages(self, total: int) -> int:
+        return int(self.ceiling_frac * total + 1e-9)
+
+
 # ------------------------------------------------------- admission policies
 @dataclasses.dataclass(frozen=True)
 class Pending:
@@ -99,11 +145,42 @@ class Pending:
 class AdmissionPolicy:
     """FCFS baseline: admit in arrival order.  Subclasses override
     ``key``; the smallest key is admitted next.  Policies are stateless
-    and shareable across every scheduler/instance of a cluster run."""
+    and shareable across every scheduler/instance of a cluster run.
+
+    ``quotas`` (optional, per-``SLOClass``-name ``PageQuota``) adds a
+    page-share check on FRESH admissions: a class over its burstable
+    ceiling, or whose admission would eat into another class's reserved
+    floor, is *skipped* this tick — not a hard failure, and class-local,
+    so other classes behind it in the queue still admit.  Resumes and
+    adoptions are exempt (their pages were already paid for before the
+    handoff); each scheduler tracks its own per-class usage, the policy
+    object only carries the configuration and the rule.
+    """
     name = "fcfs"
+
+    def __init__(self, quotas: Optional[Dict[str, PageQuota]] = None):
+        self.quotas: Dict[str, PageQuota] = dict(quotas) if quotas else {}
 
     def key(self, p: Pending) -> Tuple:
         return (p.order,)
+
+    def quota_blocked(self, cls: str, need: int,
+                      used: Dict[str, int], total: int,
+                      headroom: int) -> bool:
+        """Would admitting ``need`` worst-case pages of class ``cls``
+        violate the quota rule?  ``used`` is the caller's per-class
+        pages charged, ``total`` the pool size, ``headroom`` the pages
+        still reservable (``n_pages - n_reserved``)."""
+        if not self.quotas:
+            return False
+        q = self.quotas.get(cls)
+        if q is not None and used.get(cls, 0) + need \
+                > q.ceiling_pages(total):
+            return True                          # burstable ceiling
+        # never dip into another class's unfilled reserved floor
+        owed = sum(max(qc.floor_pages(total) - used.get(c, 0), 0)
+                   for c, qc in self.quotas.items() if c != cls)
+        return headroom - need < owed
 
     def __repr__(self) -> str:
         return f"{type(self).__name__}()"
@@ -127,7 +204,9 @@ class StrictPriorityPolicy(AdmissionPolicy):
     the property tests assert.  ``aging=inf`` is pure strict priority."""
     name = "priority"
 
-    def __init__(self, aging: float = math.inf):
+    def __init__(self, aging: float = math.inf,
+                 quotas: Optional[Dict[str, PageQuota]] = None):
+        super().__init__(quotas)
         assert aging > 0
         self.aging = aging
 
@@ -271,7 +350,8 @@ class Scheduler:
                  max_prefill_per_tick: int = MAX_PREFILL_PER_TICK,
                  pages: Optional["PageTable"] = None,
                  policy: Optional[AdmissionPolicy] = None,
-                 role: str = "unified"):
+                 role: str = "unified",
+                 shed_limit: Optional[int] = None):
         if role not in ROLES:
             raise ValueError(f"unknown scheduler role {role!r}; "
                              f"expected one of {ROLES}")
@@ -279,6 +359,12 @@ class Scheduler:
         self.max_prefill_per_tick = max_prefill_per_tick
         self.policy = policy or AdmissionPolicy()
         self.role = role
+        # load shedding: reject a fresh submit outright once this many
+        # same-or-higher-priority requests are already queued (None =
+        # never shed, the historical behavior).  The bound is per class
+        # level, so a deep batch backlog never triggers sheds of
+        # interactive arrivals that would jump it anyway.
+        self.shed_limit = shed_limit
         # paged-KV admission control: a sequence is only admitted (or
         # resumed) when its worst-case page demand fits beside every
         # outstanding reservation; slots release their pages on retire
@@ -290,10 +376,17 @@ class Scheduler:
         self.draining = False
         self.tick_count = 0
         self.finished: Dict[int, SeqState] = {}
+        # per-class worst-case pages charged to occupied slots (quota
+        # admission accounting); _slot_quota remembers each slot's
+        # (class, pages) charge so every release path decrements exactly
+        self._class_pages: Dict[str, int] = {}
+        self._slot_quota: List[Optional[Tuple[str, int]]] = \
+            [None] * n_slots
         self.stats = SchedulerStats(self, {
             "prefills": 0, "decode_ticks": 0, "decode_tokens": 0,
             "admitted": 0, "retired": 0, "adopted": 0,
-            "prefill_tokens": 0, "shared_tokens": 0, "exported": 0})
+            "prefill_tokens": 0, "shared_tokens": 0, "exported": 0,
+            "shed": 0, "preempted": 0})
 
     # ------------------------------------------------------- role sizing
     def admit_tokens(self, seq: SeqState) -> int:
@@ -307,16 +400,31 @@ class Scheduler:
         return seq.total_tokens
 
     # ------------------------------------------------------------- intake
-    def submit(self, seq: SeqState) -> None:
+    def submit(self, seq: SeqState) -> SubmitResult:
         if self.role == "decode":
             raise RuntimeError(
                 "decode-role instance takes prefilled work only — route "
                 "prompts through a prefill-role (or unified) instance")
         if self.draining:
             raise RuntimeError("draining instance admits no new requests")
+        if self.shed_limit is not None:
+            ahead = sum(1 for s in self.queue
+                        if s.priority >= seq.priority)
+            if ahead >= self.shed_limit:
+                self.stats["shed"] += 1
+                # back-off hint: ticks until the same-or-higher backlog
+                # plausibly drains one slot's worth of headroom — the
+                # queue ahead plus the slots it must wait to free
+                retry = float(max(1, ahead + self.in_flight
+                                  - self.n_slots + 1))
+                return SubmitResult(
+                    SubmitResult.SHED, retry_after=retry,
+                    reason=f"{ahead} same-or-higher-priority queued "
+                           f">= shed_limit {self.shed_limit}")
         if seq.submit_tick is None:
             seq.submit_tick = self.tick_count
         self.queue.append(seq)
+        return SubmitResult(SubmitResult.OK)
 
     def adopt(self, seq: SeqState, slot: int) -> None:
         """Place a handed-off sequence directly into DECODE (mode switch):
@@ -332,6 +440,7 @@ class Scheduler:
         self.state[slot] = SlotState.DECODE
         if self.pages is not None:
             self.pages.reserve(slot, self.admit_tokens(seq))
+        self._quota_charge(slot, seq)
         self.stats["adopted"] += 1
 
     def enqueue_resume(self, seq: SeqState) -> None:
@@ -373,6 +482,49 @@ class Scheduler:
         return min(range(len(queue)),
                    key=lambda i: self.policy_key(queue[i], i))
 
+    # ---------------------------------------------------- page quotas
+    @staticmethod
+    def _cls_name(seq: SeqState) -> str:
+        return seq.slo.name if seq.slo is not None else ""
+
+    def _need_pages(self, seq: SeqState) -> int:
+        """Worst-case pages ``seq`` charges against its class quota —
+        the full reservation, deliberately ignoring prefix sharing (a
+        shared page can unshare under CoW, so the quota holds the class
+        to what it could end up owning)."""
+        assert self.pages is not None
+        ps = self.pages.page_size
+        return -(-self.admit_tokens(seq) // ps)
+
+    def _quota_blocked(self, seq: SeqState) -> bool:
+        """Class-local quota veto for a FRESH admission (resumes are
+        exempt — their pages were paid for before the handoff)."""
+        if self.pages is None or not self.policy.quotas:
+            return False
+        return self.policy.quota_blocked(
+            self._cls_name(seq), self._need_pages(seq),
+            self._class_pages, self.pages.n_pages,
+            self.pages.n_pages - self.pages.n_reserved)
+
+    def _quota_charge(self, slot: int, seq: SeqState) -> None:
+        if self.pages is None or not self.policy.quotas:
+            return
+        cls, n = self._cls_name(seq), self._need_pages(seq)
+        self._slot_quota[slot] = (cls, n)
+        self._class_pages[cls] = self._class_pages.get(cls, 0) + n
+
+    def _quota_release(self, slot: int) -> None:
+        charge = self._slot_quota[slot]
+        if charge is None:
+            return
+        cls, n = charge
+        self._slot_quota[slot] = None
+        left = self._class_pages.get(cls, 0) - n
+        if left > 0:
+            self._class_pages[cls] = left
+        else:
+            self._class_pages.pop(cls, None)
+
     # ------------------------------------------------------------ tick
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.state) if s is SlotState.FREE]
@@ -410,7 +562,17 @@ class Scheduler:
             for slot in self.free_slots():
                 if not self.queue or len(admit) >= self.max_prefill_per_tick:
                     break
-                qi = self._pick(self.queue)
+                # a quota-blocked candidate is SKIPPED, not a head-of-
+                # line block: the veto is class-specific, so requests of
+                # other classes behind it must still admit this tick
+                order = sorted(range(len(self.queue)),
+                               key=lambda i: self.policy_key(
+                                   self.queue[i], i))
+                qi = next((i for i in order
+                           if not self._quota_blocked(self.queue[i])),
+                          None)
+                if qi is None:
+                    break        # every queued class over its quota
                 # with a prefix index attached, admission charges only
                 # the INCREMENTAL worst-case pages (shared prefix pages
                 # already live cost nothing)
@@ -427,6 +589,7 @@ class Scheduler:
                     # when no prefix index is attached
                     seq.shared_tokens = self.pages.bind(
                         slot, seq.prompt, self.admit_tokens(seq))
+                self._quota_charge(slot, seq)
                 admit.append((slot, seq))
                 self.stats["admitted"] += 1
                 self.stats["prefill_tokens"] += (len(seq.prompt)
@@ -465,7 +628,68 @@ class Scheduler:
                 self.state[i] = SlotState.FREE
                 if self.pages is not None:
                     self.pages.release(i)
+                self._quota_release(i)
                 self.stats["retired"] += 1
+
+    # ------------------------------------------------------- preemption
+    def pick_victims(self, pages_needed: int,
+                     requester_slo: Optional["SLOClass"] = None, *,
+                     need_slot: bool = False) -> List[int]:
+        """Victim slots whose release covers ``pages_needed`` worst-case
+        pages for a requester of class ``requester_slo`` — or ``[]``
+        when no adequate victim set exists (partial preemption frees
+        pages without unblocking the requester, so it sheds live work
+        for nothing and is never proposed).
+
+        Eligibility: DECODE-state slots strictly BELOW the requester's
+        class priority (never preempt same-or-higher class) that have
+        produced at least one token (a mid-prefill slot has no device
+        state worth packing).  Ordering is lowest priority first, then
+        latest deadline (most slack loses first), then fewest lost
+        pages (``PageTable.slot_claim``), then slot index — fully
+        deterministic.  ``need_slot`` forces at least one victim even
+        when ``pages_needed <= 0`` (the requester is slot-starved, not
+        page-starved)."""
+        pri = requester_slo.priority if requester_slo is not None else 0
+        if self.pages is None or (pages_needed <= 0 and not need_slot):
+            return []
+        cands = [i for i in self.live_slots()
+                 if self.slots[i] is not None
+                 and not self.slots[i].finished
+                 and self.slots[i].generated
+                 and self.slots[i].priority < pri]
+        cands.sort(key=lambda i: (self.slots[i].priority,
+                                  -self.slots[i].deadline,
+                                  self.pages.slot_claim(i), i))
+        victims: List[int] = []
+        got = 0
+        for i in cands:
+            victims.append(i)
+            got += self.pages.slot_claim(i)
+            if got >= pages_needed:
+                break
+        if got < pages_needed:
+            return []
+        return victims
+
+    def preempt(self, slot: int) -> SeqState:
+        """Evict the live sequence in ``slot`` (the engine has already
+        packed its pages over the PackedKV wire): the slot frees, its
+        pages/reservation release (CoW sharers keep their references),
+        and the sequence is returned for parking — it re-enters later
+        through ``enqueue_resume``/``adopt`` exactly like a mode-switch
+        handoff, so its tokens stay bit-equal."""
+        seq = self.slots[slot]
+        assert seq is not None and self.state[slot] is SlotState.DECODE \
+            and not seq.finished, \
+            (slot, "preempt needs a live (unfinished) DECODE slot")
+        self.slots[slot] = None
+        self.state[slot] = SlotState.FREE
+        if self.pages is not None:
+            self.pages.release(slot)
+        self._quota_release(slot)
+        self.stats["preempted"] += 1
+        return seq
 
     # ----------------------------------------------------- disagg export
     def prefilled_slots(self) -> List[int]:
@@ -488,6 +712,7 @@ class Scheduler:
         self.state[slot] = SlotState.FREE
         if self.pages is not None:
             self.pages.release(slot)
+        self._quota_release(slot)
         self.stats["exported"] += 1
         return seq
 
@@ -517,6 +742,7 @@ class Scheduler:
             self.state[i] = SlotState.FREE
             if self.pages is not None:
                 self.pages.release(i)    # engine packed live pages already
+            self._quota_release(i)
         out = self.handoff_order(out)
         out.extend(self.handoff_order(self.resume_queue))
         self.resume_queue = []

@@ -133,6 +133,12 @@ class ModelManager:
         default_factory=lambda: LRUCache(capacity=3))
     gpu_busy_since: Dict[str, float] = dataclasses.field(
         default_factory=dict)
+    # host-tier holding pen for preempted sequences: model → req_id →
+    # opaque (seq, payload, …) parking record, FIFO per model.  Packed
+    # KV pages are host-memory bytes like a demoted shard's buffers —
+    # the GPU pool stops paying for a parked sequence entirely.
+    parked: Dict[str, "OrderedDict[int, Any]"] = dataclasses.field(
+        default_factory=dict)
 
     # -------------------------------------------------------- tier queries
     @property
@@ -205,6 +211,24 @@ class ModelManager:
             return None
         self.admit(model, shard.n_blocks, now, shard=shard)
         return shard
+
+    # ------------------------------------------- preempted-sequence park
+    def park_seq(self, model: str, req_id: int, record: Any) -> None:
+        """Park a preempted sequence's record in host memory (FIFO per
+        model).  Re-parking an id overwrites its record."""
+        self.parked.setdefault(model, OrderedDict())[req_id] = record
+
+    def pop_parked(self, model: str, req_id: int) -> Any:
+        """Take one parked record back out (resume or shed)."""
+        pen = self.parked.get(model)
+        record = pen.pop(req_id)
+        if not pen:
+            del self.parked[model]
+        return record
+
+    def parked_ids(self, model: str) -> List[int]:
+        """Parked req_ids for ``model``, oldest first."""
+        return list(self.parked.get(model, ()))
 
 
 class ClusterState:

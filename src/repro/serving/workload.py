@@ -146,6 +146,29 @@ def constant_stress(rps: float, duration: float, *, model: str,
     return reqs
 
 
+def overload_trace(*, model: str, capacity_rps: float,
+                   overload: float = 3.0, duration: float = 10.0,
+                   warmup: float = 0.0, prompt_len: int = 16,
+                   out_tokens: int = 8, seed: int = 0,
+                   mix: Optional[Sequence[Tuple[SLOClass, float]]] = None,
+                   ) -> List[Request]:
+    """Sustained mixed-class overload (the degradation-order scenario):
+    arrivals at ``capacity_rps`` during ``warmup`` seconds, then a step
+    to ``overload × capacity_rps`` held for the rest of ``duration`` —
+    no spike shape, no relief, so no amount of scale-out arrives in
+    time and who-keeps-decoding / who-parks / who-sheds IS the outcome.
+    ``mix`` defaults to a 30/30/40 interactive/standard/batch split."""
+    if mix is None:
+        mix = ((INTERACTIVE, 0.3), (STANDARD, 0.3), (BATCH, 0.4))
+    rng = np.random.default_rng(seed)
+    rate = lambda t: capacity_rps if t < warmup \
+        else overload * capacity_rps                          # noqa: E731
+    ts = _poisson_arrivals(rate, duration, rng)
+    reqs = [Request(i, model, float(t), prompt_len, out_tokens)
+            for i, t in enumerate(ts)]
+    return assign_slo(reqs, mix, seed=seed + 1)
+
+
 # ----------------------------------------------------- shared-prefix traces
 def make_shared_prefix_prompts(vocab_size: int, *, prefix_len: int,
                                kind: str = "chat", n_docs: int = 3,

@@ -90,7 +90,9 @@ def test_floor_fails_below_and_passes_at_floor(tmp_path):
     assert DEFAULT_FLOORS == {"relative_throughput": 1.0,
                               "prefill_tokens_skipped_frac": 0.3,
                               "relative_ttft": 1.0,
-                              "relative_itl_p99": 1.0}
+                              "relative_itl_p99": 1.0,
+                              "relative_interactive_p99": 1.0,
+                              "goodput_interactive": 0.9}
     assert "relative_throughput" not in DEFAULT_WATCH_UP
     base, cand = _dirs(tmp_path, {"paged/relative_throughput": 0.9},
                        {"paged/relative_throughput": 0.97})
@@ -122,6 +124,35 @@ def test_floor_nan_is_hard_failure(tmp_path):
                        {"paged/relative_throughput": float("nan")})
     regs, _ = compare(base, cand, 1.5, ("p99",))
     assert len(regs) == 1 and math.isnan(regs[0][3])
+
+
+def test_overload_floors_gate_survival_stack(tmp_path):
+    """The PR-9 pair: the survival stack may never let the interactive
+    class do worse than FCFS collapse (relative_interactive_p99 >= 1)
+    nor drop interactive completion below 0.9 (goodput_interactive) —
+    candidate-side absolute, enforced even with no committed baseline."""
+    base, cand = tmp_path / "base", tmp_path / "cand"
+    base.mkdir(), cand.mkdir()
+    _write(str(cand), "overload",
+           {"overload/relative_interactive_p99": 0.8,
+            "overload/goodput_interactive": 0.7})
+    regs, _ = compare(str(base), str(cand), 1.5, ("p99",))
+    assert sorted((r[1], r[2], r[3]) for r in regs) == \
+        [("overload/goodput_interactive", 0.9, 0.7),
+         ("overload/relative_interactive_p99", 1.0, 0.8)]
+    # at/above both floors: clean (per-condition rows pass too)
+    sub = tmp_path / "ok"
+    sub.mkdir()
+    (sub / "base").mkdir(), (sub / "cand").mkdir()
+    _write(str(sub / "cand"), "overload",
+           {"overload/relative_interactive_p99": 2.5,
+            "overload/goodput_interactive": 1.0,
+            "overload/fcfs/goodput_interactive": 1.0,
+            "overload/survival/goodput_interactive": 1.0})
+    regs, notes = compare(str(sub / "base"), str(sub / "cand"),
+                          1.5, ("p99",))
+    assert regs == []
+    assert any("floor" in n for n in notes)
 
 
 def test_custom_floor_overrides_default(tmp_path):

@@ -21,6 +21,7 @@ from repro.serving.engine import ContinuousBatchingEngine
 from repro.serving.metrics import MetricsLog, merge
 from repro.serving.placement import PlacementArbiter
 from repro.serving.scheduler import ROLES, Scheduler, SeqState
+from repro.serving.workload import BATCH, INTERACTIVE
 
 
 # ------------------------------------------------------------ fixtures
@@ -370,3 +371,38 @@ def test_gpu_seconds_by_role_and_merge():
     s = merged.summary()
     assert s["gpu_seconds_prefill"] == pytest.approx(2.0)
     assert s["gpu_seconds_decode"] == pytest.approx(4.0)
+
+
+def test_merge_carries_overload_counters():
+    """Preemption/shed counters ride through merge() with the same
+    NaN-gate convention as the phase tails: a merged log whose shards
+    never preempted or shed emits none of the overload keys, and one
+    that did sums counts and unions the shed flag across shards."""
+    a, b = MetricsLog(), MetricsLog()
+    a.on_arrival(1, "m", 0.0, slo=INTERACTIVE)
+    a.on_first_token(1, 0.1)
+    a.on_finish(1, 0.2, 4)
+    a.on_preempt(0.15, "m", 1, pages=3)
+    a.on_preempt(0.18, "m", 1, pages=2)
+    b.on_arrival(2, "m", 0.0, slo=BATCH)
+    b.on_shed(2, 0.1, retry_after=1.5)
+    merged = merge([a, b])
+    assert merged.preemptions == 2
+    assert merged.pages_reclaimed == 5
+    s = merged.summary()
+    assert s["preemptions"] == 2 and s["pages_reclaimed"] == 5
+    assert s["n_shed"] == 1
+    assert s["goodput_interactive"] == 1.0
+    assert s["goodput_batch"] == 0.0
+    assert s["shed_frac_batch"] == 1.0
+    assert s["shed_frac_interactive"] == 0.0
+    # the gate: shards that never hit the overload machinery stay silent
+    c, d = MetricsLog(), MetricsLog()
+    c.on_arrival(3, "m", 0.0, slo=BATCH)
+    c.on_first_token(3, 0.1)
+    c.on_finish(3, 0.2, 2)
+    d.on_gpu_time("decode", 1.0)
+    quiet = merge([c, d]).summary()
+    assert not any(k in quiet for k in
+                   ("preemptions", "pages_reclaimed", "n_shed",
+                    "goodput_batch", "shed_frac_batch"))

@@ -1,0 +1,220 @@
+"""Cold-start fast path A/B: pipelined multi-tier loading + persistent
+compile cache vs the naive blocking fetch, then the scale-to-zero
+GPU-seconds-saved vs cold-start-SLO tradeoff.
+
+Part 1 — live cold starts (real JAX tokens, simulated clock): the SAME
+trace — a cold burst, a probe-punctuated idle gap long enough for
+scale-to-zero (park to a block-granular SSD snapshot), and a second
+burst that restores from the snapshot — replayed through two cluster
+configurations:
+
+  * ``pipelined``: chunked SSD→host→GPU loading overlapped across
+    stages (execute-while-load starts when the FIRST chunk lands) plus
+    a persistent ``CompileCache``, so only the first cold replica of
+    the geometry pays the jit cost;
+  * ``naive``: whole-blob blocking fetch one stage at a time, no
+    compile persistence — every cold start repays compilation.
+
+In-bench acceptance (the PR's exactness bar): greedy tokens bit-equal
+to the static reference engine across warm, cold, AND snapshot-restored
+replicas; probes answered while scaled to zero without waking the
+model; the snapshot-restored cold start pays zero compile seconds under
+the compile cache.
+
+Part 2 — diurnal many-model registry (discrete-event simulator):
+100 registered 13B models, 4 hot, the long tail nearly idle.  A
+keep-alive sweep against an always-on fleet prices the headline
+tradeoff: GPU-seconds saved by scaling the tail to zero vs the
+cold-start SLO attainment the extra restores cost.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import init_params
+from repro.serving.autoscaler import Autoscaler, AutoscalerConfig
+from repro.serving.baselines import POLICIES
+from repro.serving.cluster import LiveCluster
+from repro.serving.engine import InferenceEngine
+from repro.kernels.compile_cache import CompileCache
+from repro.serving.simulator import Simulator
+from repro.serving.tiers import HardwareProfile
+from repro.serving.workload import (Request, diurnal_trace, probe_trace)
+
+MAX_LEN = 48
+
+# ---- part 1 knobs: bandwidths sized so the reduced model's cold fetch
+# is a visible fraction of a simulated second (equal-bandwidth stages
+# are the honest case for the pipeline: naive pays the sum, pipelined
+# pays ~one stage plus a chunk fill)
+SLOW_BW = 2.6e6                      # bytes/s per loading stage
+JIT_COMPILE_S = 0.3                  # simulated cold-compile cost
+COLDSTART_SLO = 1.5                  # per-model budget (park-tier pick)
+
+# ---- part 2 knobs
+N_MODELS, N_HOT = 100, 4
+DURATION = 300.0
+COLD_SLO = 5.0                       # request-level cold TTFT budget (s)
+KEEPALIVES = {"alwayson": 1e9, "ka60": 60.0, "ka20": 20.0, "ka5": 5.0}
+
+
+def _prompt(cfg, req):
+    rng = np.random.default_rng(10_000 + req.req_id)
+    return list(map(int, rng.integers(0, cfg.vocab_size,
+                                      size=max(1, req.prompt_len))))
+
+
+def _hw_slow() -> HardwareProfile:
+    return HardwareProfile(ssd_bw=SLOW_BW, host_to_gpu_bw=SLOW_BW,
+                           jit_compile_s=JIT_COMPILE_S)
+
+
+def _trace():
+    """Cold burst → probed idle gap (scale-to-zero window) → second
+    burst that must restore from the SSD snapshot."""
+    reqs = [Request(i, "m", 0.005 + 0.01 * i, 6, 5) for i in range(8)]
+    reqs += [Request(100 + i, "m", 3.0 + 0.01 * i, 6, 5) for i in range(8)]
+    reqs += probe_trace("m", period=0.2, duration=2.9, start=0.5)
+    return sorted(reqs, key=lambda r: r.t_arrive)
+
+
+def run_condition(cfg, params, trace, *, pipelined: bool, cache):
+    hw = _hw_slow()
+    lc = LiveCluster(n_nodes=3, n_slots=2, max_len=MAX_LEN, hw=hw,
+                     pipelined_loading=pipelined, compile_cache=cache)
+    lc.register("m", cfg, params, n_blocks=6)    # NO hot/warm placement
+    asc = Autoscaler(AutoscalerConfig(keepalive=0.3, max_k=2,
+                                      coldstart_slo=COLDSTART_SLO),
+                     hw=hw)
+    log = lc.replay(trace, autoscaler=asc, tick_seconds=0.002,
+                    tail_seconds=0.2, max_ticks=500_000)
+    return lc, log
+
+
+def run(report) -> None:
+    cfg = reduced(get_config("qwen2.5-3b"), d_model=64, n_layers=6)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    ref = InferenceEngine(cfg, params, max_len=MAX_LEN)
+    trace = _trace()
+    served = [r for r in trace if not r.probe]
+
+    results = {}
+    with tempfile.TemporaryDirectory() as td:
+        cache = CompileCache(os.path.join(td, "compile_cpu.json"))
+        for name, cond in (("pipelined", dict(pipelined=True, cache=cache)),
+                           ("naive", dict(pipelined=False, cache=None))):
+            lc, log = run_condition(cfg, params, trace, **cond)
+            # exactness bar: warm, cold AND snapshot-restored replicas
+            # produce bit-equal greedy tokens
+            out = lc.results("m")
+            for r in served:
+                assert r.req_id in out, f"{name}: req {r.req_id} unserved"
+                toks = ref.generate(
+                    {"tokens": jnp.asarray(_prompt(cfg, r),
+                                           jnp.int32)[None]},
+                    r.out_tokens, cache_len=MAX_LEN)
+                assert out[r.req_id] == list(map(int, toks[0])), \
+                    f"{name}: req {r.req_id} tokens diverge from reference"
+            # the gap's probes were answered while scaled to zero —
+            # without waking the model (no scale-up between the bursts
+            # beyond the two cold starts)
+            assert lc.probe_answers.get("m", 0) > 0, \
+                f"{name}: no probe answered at the control plane"
+            assert len(lc.coldstart_log) == 2, \
+                f"{name}: expected cold registry start + snapshot restore"
+            results[name] = (lc, log, log.summary())
+
+    for name, (lc, log, s) in results.items():
+        report(f"coldstart/{name}/cold_ttft_p99", s["ttft_p99"],
+               "sim-clock s; both bursts start from a cold model")
+        report(f"coldstart/{name}/cold_fetch_seconds_mean",
+               s["cold_fetch_seconds_mean"],
+               "loading-pipeline time per cold start")
+        report(f"coldstart/{name}/cold_compile_seconds_mean",
+               s["cold_compile_seconds_mean"],
+               "jit time the compile cache did not absorb")
+        report(f"coldstart/{name}/cold_first_token_gap_p99",
+               s["cold_first_token_gap_p99"],
+               "cold scale request -> first token anywhere")
+    pip, nai = results["pipelined"][2], results["naive"][2]
+    # compile persistence across replica death: the snapshot restore
+    # (second cold start) pays ZERO compile under the cache; naive
+    # repays the full jit cost every time
+    pip_cs = results["pipelined"][0].coldstart_log
+    assert pip_cs[0][4] == JIT_COMPILE_S and pip_cs[1][4] == 0.0, \
+        f"compile cache should absorb the second cold start: {pip_cs}"
+    nai_cs = results["naive"][0].coldstart_log
+    assert all(e[4] == JIT_COMPILE_S for e in nai_cs), \
+        f"naive must repay compile every cold start: {nai_cs}"
+    report("coldstart/compile_seconds_saved",
+           sum(e[4] for e in nai_cs) - sum(e[4] for e in pip_cs),
+           "persistent compile cache, across replica death")
+    # headline 1 (diff floor >= 1.0): cold-tail TTFT advantage of the
+    # pipelined loading engine + compile cache over the naive fetch
+    report("coldstart/relative_cold_p99_ttft",
+           nai["ttft_p99"] / pip["ttft_p99"],
+           "naive/pipelined cold p99 TTFT; floor >= 1")
+
+    # paper-scale restore-plan pricing (default profile, llama2-13b):
+    # what the same pipeline buys at real bandwidths
+    hw = HardwareProfile()
+    big = get_config("llama2-13b")
+    nbytes = 2.0 * big.param_count()
+    for tier in ("ssd", "host"):
+        pipe = hw.restore_plan(nbytes, 8, tier)
+        naiv = hw.restore_plan(nbytes, 8, tier, pipelined=False)
+        report(f"coldstart/plan13b/{tier}/pipelined_total", pipe.t_total,
+               f"first chunk at {pipe.t_first:.3f}s")
+        report(f"coldstart/plan13b/{tier}/naive_total", naiv.t_total,
+               "blocking whole-blob, stage after stage")
+
+    # ---- part 2: scale-to-zero sweep on the diurnal registry
+    reqs = diurnal_trace(N_MODELS, DURATION, n_hot=N_HOT, hot_rpm=30.0,
+                         cold_rpm=0.5, day=DURATION, seed=7,
+                         prompt_len=256, out_tokens=16)
+    cfgs = {f"model-{m:03d}": get_config("llama2-13b")
+            for m in range(N_MODELS)}
+    sweep = {}
+    for name, ka in KEEPALIVES.items():
+        sim = Simulator(POLICIES["lambdascale"](hw), 120, hw,
+                        keepalive=ka, model_configs=cfgs,
+                        autoscaler=Autoscaler(AutoscalerConfig(
+                            keepalive=ka)))
+        res = sim.run(reqs, duration=DURATION + 30.0)
+        ttfts = [t for _, t in res.ttft]
+        attain = (sum(1 for t in ttfts if t <= COLD_SLO)
+                  / max(len(ttfts), 1))
+        sweep[name] = (res.gpu_seconds, attain,
+                       res.ttft_percentile(99))
+        report(f"coldstart/sweep/{name}/gpu_seconds", res.gpu_seconds,
+               f"{N_MODELS} models, {N_HOT} hot, diurnal {DURATION:.0f}s")
+        report(f"coldstart/sweep/{name}/ttft_p99",
+               res.ttft_percentile(99), "s")
+        report(f"coldstart/sweep/{name}/cold_slo_attainment", attain,
+               f"TTFT <= {COLD_SLO}s")
+    base = sweep["alwayson"][0]
+    # pick the most aggressive keep-alive still meeting the SLO bar —
+    # the operating point the headline tradeoff reports
+    chosen = None
+    for name in ("ka5", "ka20", "ka60"):
+        if sweep[name][1] >= 0.9:
+            chosen = name
+            break
+    assert chosen is not None, \
+        f"no keep-alive meets 0.9 cold-SLO attainment: {sweep}"
+    saved = 1.0 - sweep[chosen][0] / max(base, 1e-9)
+    assert saved >= 0.2, \
+        f"scale-to-zero must save >= 20% GPU-seconds: {saved:.3f}"
+    report("coldstart/chosen_keepalive_s", KEEPALIVES[chosen],
+           "most aggressive keep-alive with attainment >= 0.9")
+    # headline 2 (diff floor >= 0.2): GPU-seconds saved at SLO
+    report("coldstart/gpu_seconds_saved_frac", saved,
+           f"vs always-on, attainment {sweep[chosen][1]:.3f}")
+    report("coldstart/cold_slo_attainment", sweep[chosen][1],
+           f"at the chosen keep-alive ({KEEPALIVES[chosen]:.0f}s)")

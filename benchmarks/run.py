@@ -31,6 +31,9 @@ perf trajectory across PRs can be diffed without parsing stdout.  Modules:
   disagg   bench_disagg         (prefill/decode disaggregation on the
                                  PackedKV wire: inter-token p99 + TTFT
                                  vs unified serving, priced wire bytes)
+  coldstart bench_coldstart     (scale-to-zero: pipelined multi-tier
+                                 loading + compile cache vs naive fetch,
+                                 GPU-seconds saved vs cold-start SLO)
 
 ``benchmarks.diff`` compares two directories of these JSON summaries and
 exits non-zero on tail-latency/GPU-cost regressions (the nightly CI gate
@@ -49,7 +52,7 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_autoscale, bench_cache,
+from benchmarks import (bench_autoscale, bench_cache, bench_coldstart,
                         bench_continuous_batching, bench_disagg,
                         bench_engine, bench_kway, bench_latency,
                         bench_multicast, bench_multimodel,
@@ -67,7 +70,7 @@ MODULES = {
     "cbatch": bench_continuous_batching, "mmodel": bench_multimodel,
     "autoscale": bench_autoscale, "paged": bench_paged, "slo": bench_slo,
     "prefix": bench_prefix, "disagg": bench_disagg,
-    "overload": bench_overload,
+    "overload": bench_overload, "coldstart": bench_coldstart,
 }
 
 

@@ -245,3 +245,54 @@ class LinkModel:
         group = math.ceil(n_nodes / k)
         steps = optimal_steps(group, n_blocks)
         return steps * self.step_time(model_bytes / n_blocks)
+
+
+# ----------------------------------------------- multi-tier restore model
+@dataclasses.dataclass(frozen=True)
+class RestorePlan:
+    """Timing of a chunked multi-stage (e.g. SSD→host→GPU) model restore.
+
+    ``t_first`` is when the FIRST chunk is resident on the final stage
+    (GPU) — the moment execute-while-load can begin; ``chunk_dt`` is the
+    steady-state interval between chunk arrivals (the bottleneck stage);
+    ``t_total`` is when the LAST chunk lands.  All times are relative to
+    the restore's start.
+    """
+    n_chunks: int
+    t_first: float
+    chunk_dt: float
+    t_total: float
+
+    def t_chunk(self, i: int) -> float:
+        """Arrival time of chunk ``i`` (0-based) on the final stage."""
+        if i <= 0:
+            return self.t_first
+        return self.t_first + min(i, self.n_chunks - 1) * self.chunk_dt
+
+
+def pipelined_restore(nbytes: float, n_chunks: int, stage_bws,
+                      overhead: float = 0.0,
+                      pipelined: bool = True) -> RestorePlan:
+    """ServerlessLLM-style chunked loading through a bandwidth pipeline.
+
+    ``stage_bws`` is the ordered per-stage bandwidth list (bytes/s), e.g.
+    ``(ssd_bw, host_to_gpu_bw)``.  Pipelined, chunks are in flight
+    through every stage simultaneously: the first chunk fills the
+    pipeline (sum over stages), then one chunk emerges per bottleneck-
+    stage interval.  Naive, each stage moves the WHOLE blob before the
+    next starts — the blocking fetch ``fetch_seconds`` prices.  With a
+    single chunk the two are identical (no overlap is possible).
+    """
+    bws = [float(b) for b in stage_bws if b]
+    n = max(1, int(n_chunks))
+    if not bws:
+        return RestorePlan(n, overhead, 0.0, overhead)
+    if not pipelined or n == 1:
+        total = overhead + sum(nbytes / b for b in bws)
+        return RestorePlan(n, total, 0.0, total)
+    chunk = nbytes / n
+    fill = sum(chunk / b for b in bws)
+    bottleneck = max(chunk / b for b in bws)
+    t_first = overhead + fill
+    return RestorePlan(n, t_first, bottleneck,
+                       t_first + (n - 1) * bottleneck)

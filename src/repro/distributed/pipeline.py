@@ -141,14 +141,15 @@ class PipelinedEngine:
     def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
                req_id: Optional[int] = None,
                eos_id: Optional[int] = None,
-               t_arrive: Optional[float] = None, slo=None) -> int:
+               t_arrive: Optional[float] = None, slo=None,
+               probe: bool = False) -> int:
         if req_id is None:
             req_id = self._next_id
         self._next_id = max(self._next_id, req_id) + 1
         assert len(prompt) + max_new_tokens <= self.max_len
         self.sched.submit(SeqState(req_id, list(prompt), max_new_tokens,
                                    eos_id=eos_id, t_arrive=t_arrive,
-                                   slo=slo))
+                                   slo=slo, probe=probe))
         return req_id
 
     # ---------------------------------------------------------- execution

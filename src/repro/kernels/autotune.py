@@ -14,7 +14,11 @@ requested geometry, and keeps the fastest.
 Results persist as a JSON table so only the FIRST engine built for a
 given (config geometry, pool, impl, backend) pays the sweep:
 
-    location   $REPRO_AUTOTUNE_CACHE, else ~/.cache/repro/autotune.json
+    location   $REPRO_AUTOTUNE_CACHE, else the shared cache layout of
+               ``kernels.compile_cache``: $REPRO_CACHE_DIR (default
+               ~/.cache/repro/) / autotune_<backend>.json — the backend
+               device kind is part of the FILENAME, so tables measured
+               on different device kinds never share a file
     key        schema-versioned string of every input that can change
                the winner (head/dim geometry, slots, max_len, impl,
                jax backend) — bumping ``_SCHEMA`` or changing any key
@@ -26,12 +30,13 @@ without timing anything.
 """
 from __future__ import annotations
 
-import json
 import math
 import os
 import time
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.kernels.compile_cache import cache_file, load_table, store_table
 
 _SCHEMA = 1
 DEFAULT_PAGE_SIZES = (8, 16, 32)
@@ -40,12 +45,12 @@ DEFAULT_BLOCK_KS = (None, 8)
 
 
 def cache_path() -> str:
-    """Autotune table location (env-overridable for tests/CI)."""
+    """Autotune table location: $REPRO_AUTOTUNE_CACHE override, else the
+    backend-suffixed shared layout (``compile_cache.cache_file``)."""
     env = os.environ.get("REPRO_AUTOTUNE_CACHE")
     if env:
         return env
-    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
-                        "autotune.json")
+    return cache_file("autotune")
 
 
 def autotune_key(cfg, n_slots: int, max_len: int, attn_impl: str,
@@ -71,22 +76,11 @@ class TuneResult:
 
 
 def _load(path: str) -> dict:
-    try:
-        with open(path) as f:
-            data = json.load(f)
-        if data.get("schema") == _SCHEMA:
-            return data
-    except (OSError, ValueError):
-        pass
-    return {"schema": _SCHEMA, "entries": {}}
+    return load_table(path, _SCHEMA)
 
 
 def _store(path: str, data: dict) -> None:
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump(data, f, indent=1, sort_keys=True)
-    os.replace(tmp, path)
+    store_table(path, data)
 
 
 def _default_measure(cfg, n_slots: int, max_len: int, page_size: int,

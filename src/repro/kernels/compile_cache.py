@@ -1,0 +1,127 @@
+"""Persistent compile cache + the shared on-disk cache layout.
+
+Two kinds of per-backend artifact survive replica death in this repo:
+
+  * the paged-decode autotune table (``kernels.autotune``) — which
+    (page_size, block_k) won the sweep for a geometry;
+  * jit/compile artifacts — the fact that an executable for a given
+    (model config geometry, pool geometry, attention impl) has already
+    been built, so a cold replica skips recompilation and a cold start
+    pays fetch time only.
+
+Both share one documented layout so cold replicas and CI hit the same
+files:
+
+    directory   $REPRO_CACHE_DIR, else ~/.cache/repro/
+    filename    <kind>_<backend>.json   (backend = jax.default_backend(),
+                e.g. ``autotune_cpu.json``, ``compile_tpu.json``) — the
+                device kind lives in the FILENAME, not just the key, so
+                caches rsync'd between heterogeneous hosts can never
+                collide and ``ls`` shows at a glance which backend a
+                table was measured on
+    contents    {"schema": N, "entries": {key: value}} — bumping the
+                module's schema constant invalidates the whole file
+
+``CompileCache`` is the jit-artifact table: schema-versioned keys built
+by ``compile_key`` from everything that changes the executable, with
+hit/miss counters the cold-start bench reads to report its
+fetch-vs-compile breakdown honestly.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+_SCHEMA = 1
+
+
+def cache_dir() -> str:
+    """Root of the shared on-disk cache (env-overridable for tests/CI)."""
+    env = os.environ.get("REPRO_CACHE_DIR")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro")
+
+
+def backend_kind() -> str:
+    """The jax backend the cached artifacts are valid for ('cpu', 'tpu',
+    'gpu'); 'nojax' when jax is unavailable (metadata-only callers)."""
+    try:
+        import jax
+        return jax.default_backend()
+    except Exception:                         # pragma: no cover
+        return "nojax"
+
+
+def cache_file(kind: str) -> str:
+    """Backend-suffixed cache path for one artifact kind, e.g.
+    ``cache_file("autotune") -> ~/.cache/repro/autotune_cpu.json``."""
+    return os.path.join(cache_dir(), f"{kind}_{backend_kind()}.json")
+
+
+def load_table(path: str, schema: int) -> dict:
+    """Read a cache table, dropping it wholesale on schema mismatch or
+    corruption — a cache must never be able to crash its user."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        if data.get("schema") == schema:
+            return data
+    except (OSError, ValueError):
+        pass
+    return {"schema": schema, "entries": {}}
+
+
+def store_table(path: str, data: dict) -> None:
+    """Atomic write (tmp + rename): a crashed writer leaves the old
+    table intact, concurrent readers never see a torn file."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def compile_key(cfg, n_slots: int, max_len: int, attn_impl: str,
+                shared: bool = False, role: str = "unified") -> str:
+    """Everything that changes the compiled executable, schema-versioned:
+    model geometry (not weights — recompilation does not depend on the
+    parameter values), pool geometry, attention impl, engine role, and
+    prefix-sharing mode (suffix-only prefill builds per-suffix-length
+    executables)."""
+    return (f"v{_SCHEMA}|{cfg.n_layers}L|{cfg.n_heads}h|"
+            f"{cfg.n_kv_heads}kv|{cfg.d_head}dh|{cfg.d_model}dm|"
+            f"{cfg.vocab_size}V|{n_slots}slots|{max_len}len|"
+            f"{attn_impl}|{role}" + ("|shared" if shared else ""))
+
+
+class CompileCache:
+    """Schema-versioned jit-artifact table persisted across replica
+    death.  ``check(key)`` is the single entry point: it records a hit
+    (executable already built somewhere — this replica skips compile) or
+    a miss (this replica pays the compile and publishes the artifact),
+    returning True on hit.  In-memory state mirrors disk so one process'
+    replicas share artifacts even before the table is flushed."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or cache_file("compile")
+        self._data = load_table(self.path, _SCHEMA)
+        self.hits = 0
+        self.misses = 0
+
+    @property
+    def entries(self) -> Dict[str, Any]:
+        return self._data["entries"]
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.entries
+
+    def check(self, key: str) -> bool:
+        if key in self.entries:
+            self.hits += 1
+            return True
+        self.misses += 1
+        self.entries[key] = {"built": True}
+        store_table(self.path, self._data)
+        return False

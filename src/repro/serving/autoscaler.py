@@ -61,6 +61,12 @@ class LoadSignals:
     pages_total: int = 0             # KV page pool size (0 = not reported)
     pages_live: int = 0              # allocated pages across the pool
     recent_sheds: int = 0            # submits rejected since last decision
+    # cold-start budgeting inputs (scale-to-zero): the model's replica
+    # footprint and block count let the controller price a restore from
+    # each tier against the per-model cold-start SLO when picking where
+    # a scaled-to-zero replica parks (0 = not reported → host parking)
+    model_nbytes: float = 0.0
+    model_blocks: int = 0
 
     @property
     def utilization(self) -> float:
@@ -92,6 +98,10 @@ class ScaleDown:
     nodes: Tuple[int, ...]
     reason: str = ""
     role: Optional[str] = None       # pool the released nodes leave
+    # where the released replica's blocks land: "host" (LRU fallback,
+    # the pre-scale-to-zero behavior) or "ssd" (snapshot park — frees
+    # the host slot, restore streams back through the loading pipeline)
+    park: str = "host"
 
 
 Action = Union[ScaleUp, ScaleDown]
@@ -144,14 +154,25 @@ class AutoscalerConfig:
     forecast: bool = False
     forecast_alpha: float = 0.5      # EWMA smoothing for level and trend
     forecast_horizon: float = 2.0    # seconds of lookahead
+    # per-model cold-start SLO budget (seconds from scale-up decision to
+    # a servable replica).  With a HardwareProfile attached to the
+    # controller, scale-to-zero parks each released replica in the
+    # CHEAPEST tier whose restore still fits the budget (ssd < host in
+    # $-terms; gpu = stay resident when nothing fits, which degenerates
+    # to a min_replicas floor of 1).  None → park to host (legacy).
+    coldstart_slo: Optional[float] = None
 
 
 # -------------------------------------------------------------- controller
 class Autoscaler:
     """Reactive closed-loop controller (queue / utilization / SLO)."""
 
-    def __init__(self, config: Optional[AutoscalerConfig] = None):
+    def __init__(self, config: Optional[AutoscalerConfig] = None,
+                 hw=None):
         self.config = config or AutoscalerConfig()
+        # optional HardwareProfile: prices tier restores against the
+        # cold-start SLO budget (park_tier); None → host parking only
+        self.hw = hw
         # pacing and forecast state key by (model, role): a
         # disaggregated model's prefill and decode pools pace and
         # forecast independently (role None = the whole-model signal)
@@ -260,8 +281,11 @@ class Autoscaler:
                     n_new = min(n_new, c.max_nodes - sig.nodes_busy)
             if n_new > 0 and not sig.scaling_in_flight:
                 # cold start bypasses the cooldown: a model with zero
-                # capacity and waiting requests cannot afford to pace
-                cold = sig.slots_total == 0 and sig.queue_depth > 0
+                # capacity and waiting requests cannot afford to pace —
+                # nor can a forecast pre-warm FROM zero, whose whole
+                # point is to beat the burst it predicts
+                cold = sig.slots_total == 0 and \
+                    (sig.queue_depth > 0 or "forecast" in reason)
                 if cold or now - self._last_up.get(key, -math.inf) \
                         >= c.cooldown_up:
                     self._last_up[key] = now
@@ -279,13 +303,40 @@ class Autoscaler:
                 continue
             idle = [nd for nd, idle_s in sig.idle_nodes
                     if idle_s >= c.keepalive]
-            n_down = min(len(idle), sig.n_replicas - c.min_replicas)
+            tier = self.park_tier(sig)
+            floor = c.min_replicas if tier != "gpu" \
+                else max(c.min_replicas, 1)
+            n_down = min(len(idle), sig.n_replicas - floor)
             if n_down > 0:
                 self._last_down[key] = now
                 actions.append(ScaleDown(m, tuple(idle[:n_down]),
-                                         "keepalive", sig.role))
+                                         "keepalive", sig.role,
+                                         park=tier if tier != "gpu"
+                                         else "host"))
         self.decisions.extend((now, a) for a in actions)
         return actions
+
+    # -------------------------------------------------- cold-start budget
+    def park_tier(self, sig: LoadSignals) -> str:
+        """The cheapest tier a scaled-down replica of this model may park
+        in while a later cold start still meets the per-model cold-start
+        SLO budget.  Tier $-cost ordering is ssd < host < gpu; restore
+        latency orders the other way, so this walks cheapest-first and
+        returns the first tier whose pipelined restore fits the budget.
+        Without a budget, a HardwareProfile, or a reported model size,
+        parking stays on the host tier (the legacy keep-alive fallback).
+        "gpu" means NO parkable tier fits — the replica must stay
+        resident (an effective min_replicas floor of 1)."""
+        c = self.config
+        if c.coldstart_slo is None or self.hw is None \
+                or sig.model_nbytes <= 0:
+            return "host"
+        n_chunks = max(sig.model_blocks, 1)
+        for tier in ("ssd", "host"):
+            plan = self.hw.restore_plan(sig.model_nbytes, n_chunks, tier)
+            if plan.t_total <= c.coldstart_slo:
+                return tier
+        return "gpu"
 
     # --------------------------------------------------------- keep-alive
     def should_retire(self, now: float, last_active: float) -> bool:

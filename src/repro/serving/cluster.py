@@ -160,6 +160,11 @@ class ScaleReport:
     t_source_ready: float            # multicast start (source on GPU tier)
     t_first_serve: float             # first NEW serving instance available
     t_complete: float                # every destination mode-switched
+    # cold-start breakdown (0 on GPU-tier scales): seconds the source
+    # spent moving bytes through the loading pipeline vs building
+    # executables the compile cache did not already hold
+    fetch_seconds: float = 0.0
+    compile_seconds: float = 0.0
 
     @property
     def startup_latency(self) -> float:
@@ -212,7 +217,9 @@ class LiveCluster:
                  arbiter: Optional[PlacementArbiter] = None,
                  preemption: bool = False,
                  shed_limit: Optional[int] = None,
-                 max_park_ticks: Optional[int] = None):
+                 max_park_ticks: Optional[int] = None,
+                 pipelined_loading: bool = True,
+                 compile_cache=None):
         self.hw = hw or HardwareProfile()
         self.state = ClusterState(n_nodes, self.hw)
         self.nodes = self.state.nodes
@@ -239,11 +246,31 @@ class LiveCluster:
         self.preemption = preemption
         self.shed_limit = shed_limit
         self.max_park_ticks = max_park_ticks
+        # cold-start fast path: pipelined multi-tier loading engine
+        # (False = the naive blocking whole-blob fetch, the comparator
+        # bench_coldstart beats) and an optional persistent CompileCache
+        # (kernels.compile_cache) — with one attached, only the FIRST
+        # cold replica of a geometry pays ``hw.jit_compile_s``; without
+        # one, every cold source pays it (artifacts die with replicas)
+        self.pipelined_loading = pipelined_loading
+        self.compile_cache = compile_cache
+        # every cold (non-GPU-source) scale's breakdown, append-only —
+        # (t_request, model, tier, fetch_s, compile_s, t_ready)
+        self.coldstart_log: List[Tuple[float, str, str, float, float,
+                                       float]] = []
         self.audit_log: List[AuditEvent] = []
+        # control-plane-answered health probes (no replica existed —
+        # liveness was answered WITHOUT waking the model)
+        self.probe_answers: Dict[str, int] = {}
         # event outboxes the replay loop drains into the MetricsLog
         # ((model, req_id, retry_after) / (model, req_id, pages))
         self._shed_events: List[Tuple[str, int, float]] = []
         self._preempt_events: List[Tuple[str, int, int]] = []
+        self._coldstart_events: List[Tuple[float, str, str, float, float,
+                                           float]] = []
+        # model → {req_id: generated} of engines torn down by scale_down
+        # (``results`` merges these — scale-to-zero must not lose tokens)
+        self._retired_results: Dict[str, Dict[int, List[int]]] = {}
         self._tick_no = 0
         # (model, node, req_id) -> tick a resume-queue park was first seen
         self._park_age: Dict[Tuple[str, int, int], int] = {}
@@ -399,12 +426,29 @@ class LiveCluster:
         sources = self.state.gpu_nodes(model)
         tier, t0 = "gpu", t_req
         fresh_source = None
+        fetch_s = compile_s = src_chunk_dt = 0.0
+        t_local = t_req
         if not sources:
             nd, tier = self._acquire_source(model)
-            t0 = t_req + self.hw.fetch_seconds(dep.nbytes, tier)
+            # chunked restore through the tier's bandwidth pipeline
+            # (SSD→host→GPU stages overlapped when pipelined_loading):
+            # the FIRST block is GPU-resident at t_first — the multicast
+            # (and with it execute-while-load) starts THERE, not after
+            # the whole blob lands — while the source itself serves only
+            # once fully loaded and compiled (t_total + compile)
+            rp = self.hw.restore_plan(dep.nbytes, dep.n_blocks, tier,
+                                      pipelined=self.pipelined_loading)
+            compile_s = self._charge_compile(model)
+            fetch_s, src_chunk_dt = rp.t_total, rp.chunk_dt
+            t0 = t_req + rp.t_first
+            t_local = t_req + rp.t_total + compile_s
             sources, fresh_source = [nd], nd
             self._ensure_local(model, nd)
-            self._ready_at[(model, nd)] = t0
+            self._ready_at[(model, nd)] = t_local
+            self.coldstart_log.append(
+                (t_req, model, tier, fetch_s, compile_s, t_local))
+            self._coldstart_events.append(
+                (t_req, model, tier, fetch_s, compile_s, t_local))
         k = max(1, min(k or DEFAULT_MAX_K, len(sources), DEFAULT_MAX_K))
         srcs = sources[:k]
         # arbiter-ranked destinations (§5 locality: warm-for-this-model
@@ -418,15 +462,19 @@ class LiveCluster:
             near = tuple(sv.locals_)
         dests = self.arbiter.pick_dests(self.state, model, max(n_new, 0),
                                         exclude=srcs, near=near)
-        first_serve = [t0] if fresh_source is not None else []
-        t_complete = t0
+        first_serve = [t_local] if fresh_source is not None else []
+        t_complete = t_local
         if dests:
             for nd in dests:
                 self.nodes[nd].admit(model, dep.n_blocks, self.clock)
             plan = plan_scale(k + len(dests), dep.n_blocks, k, model=model)
             node_map = {i: nd for i, nd in enumerate(srcs + list(dests))}
+            # a still-loading source releases blocks one restore chunk
+            # at a time: the multicast step pace can never outrun the
+            # bottleneck loading stage feeding it
             sc = ActiveScale(model, plan, node_map, t0,
-                             self.link.step_time(dep.block_nbytes),
+                             max(self.link.step_time(dep.block_nbytes),
+                                 src_chunk_dt),
                              role=role)
             self.scales[model] = sc
             first_serve += [sc.time_at(r) for r in plan.pipeline_ready
@@ -434,11 +482,43 @@ class LiveCluster:
             dest_done = [plan.node_complete[i]
                          for i in range(k, k + len(dests))]
             first_serve.append(sc.time_at(min(dest_done)))
-            t_complete = sc.time_at(plan.total_steps)
+            t_complete = max(sc.time_at(plan.total_steps), t_local)
         return ScaleReport(model, tier, tuple(srcs), tuple(dests), k,
                            t_req, t0,
                            min(first_serve) if first_serve else t0,
-                           t_complete)
+                           t_complete, fetch_seconds=fetch_s,
+                           compile_seconds=compile_s)
+
+    def _charge_compile(self, model: str) -> float:
+        """Simulated-clock cost of building this geometry's executables
+        on a fresh cold replica.  0 when the profile does not model
+        compilation (``hw.jit_compile_s == 0``) or when the persistent
+        compile cache already holds the artifact (the cache records a
+        miss and the artifact persists for every later replica — across
+        LiveCluster instances and, through disk, across processes).
+        Within one cluster, multicast destinations inherit the source's
+        executables (the process-wide jit cache), so only the cold
+        source ever pays."""
+        if self.hw.jit_compile_s <= 0:
+            return 0.0
+        cfg = self.models[model].cfg
+        if self.compile_cache is not None:
+            from repro.kernels.compile_cache import compile_key
+            key = compile_key(cfg, self.n_slots, self.max_len, "xla",
+                              shared=self.prefix_sharing)
+            if self.compile_cache.check(key):
+                return 0.0
+        return self.hw.jit_compile_s
+
+    def _restore_from_snapshot(self, model: str, node_id: int,
+                               shard: ModelShard) -> None:
+        """Materialize a GPU-tier replica from a local block-granular
+        SSD snapshot (caller prices the chunked restore on the clock)."""
+        dep = self.models[model]
+        mm = self.nodes[node_id]
+        mm.admit(model, dep.n_blocks, self.clock)
+        for b, buf in sorted(shard.buffers.items()):
+            mm.receive(model, b, buf, self._unpack(dep, b, buf))
 
     def _host_payload_nodes(self, model: str) -> List[int]:
         """Nodes whose host cache holds the model's FULL packed payload —
@@ -471,18 +551,33 @@ class LiveCluster:
         free = self.state.free_nodes()
         if not free:
             raise RuntimeError(f"{model}: no free node for a source")
-        nd = free[0]
         # one-sided read of a remote node's host copy beats SSD (§5) —
         # but only a payload-carrying copy counts
-        tier = "remote" if payload_nodes else "ssd"
+        if payload_nodes:
+            nd = free[0]
+            self._load_full(model, nd)
+            return nd, "remote"
+        # local SSD snapshot (scale-to-zero park) restores through the
+        # chunked pipeline; same tier pricing as the NVMe-backed
+        # registry, but the blocks come from the snapshot itself
+        for nd in self.state.ssd_nodes(model):
+            shard = self.nodes[nd].promote_from_ssd(model)
+            if shard is not None:
+                self._restore_from_snapshot(model, nd, shard)
+                return nd, "ssd"
+        nd = free[0]
         self._load_full(model, nd)
-        return nd, tier
+        return nd, "ssd"
 
-    def scale_down(self, model: str, nodes: Sequence[int]) -> None:
+    def scale_down(self, model: str, nodes: Sequence[int],
+                   park: str = "host") -> None:
         """Release GPU replicas; the model falls back to the host-memory
-        tier (§5) where a later ``scale`` finds it warm.  In-flight
-        sequences drain and hand off to a surviving local replica (or
-        park in its resume queue)."""
+        tier (§5) where a later ``scale`` finds it warm — or, with
+        ``park="ssd"``, straight through to a block-granular SSD
+        snapshot (scale-to-zero: the host LRU slot is freed too, and a
+        later cold start streams the snapshot back up the loading
+        pipeline).  In-flight sequences drain and hand off to a
+        surviving local replica (or park in its resume queue)."""
         sc = self.scales.get(model)
         if sc is not None:
             busy = set(sc.node_map.values()) & set(nodes)
@@ -496,6 +591,12 @@ class LiveCluster:
                 eng = sv.prefills.pop(nd, None)
             if eng is not None:
                 eng.drain()
+                # finished generations must survive the replica
+                # (scale-to-zero tears down the last engine; ``results``
+                # still owes the tokens to the bit-equality bar)
+                arch = self._retired_results.setdefault(model, {})
+                arch.update({rid: s.generated
+                             for rid, s in eng.sched.finished.items()})
                 pairs = eng.handoff()
                 target = self._adoption_target(model, exclude=nd)
                 if pairs:
@@ -505,6 +606,8 @@ class LiveCluster:
                     self._adopt_pairs(model, target,
                                       self._price_handoff(model, pairs))
             self.state.release(nd, self.clock, model)
+            if park == "ssd":
+                self.nodes[nd].demote_to_ssd(model, self.clock)
 
     # ------------------------------------------------------------- control
     def _advance_one(self, model: str) -> None:
@@ -731,23 +834,37 @@ class LiveCluster:
                max_new_tokens: int, *,
                req_id: Optional[int] = None,
                t_arrive: Optional[float] = None,
-               slo: Optional[SLOClass] = None) -> int:
+               slo: Optional[SLOClass] = None,
+               probe: bool = False) -> int:
         """Admit a request for ``model`` into a scheduler-driven serving
         instance (ready pipelines preferred over local replicas during a
         scale-out — offload spikes to the scaling nodes); queued until
         capacity exists when the model has no instance yet.
         ``t_arrive`` (simulated-clock arrival) and the ``slo`` class ride
-        on the sequence for the control plane and survive handoffs."""
+        on the sequence for the control plane and survive handoffs.
+
+        ``probe`` marks health-check traffic: served normally when a
+        replica exists, but answered at the control plane (a counter,
+        no engine) when none does — a probe must NEVER wake a
+        scaled-to-zero model or queue as demand, and the liveness/
+        activity split keeps engine-served probes from resetting
+        keep-alive (zepfu SCALE_TO_ZERO pattern)."""
         if req_id is None:
             req_id = self._next_id
         self._next_id = max(self._next_id, req_id) + 1
         inst = self._route(model)
         if inst is None:
+            if probe:
+                # liveness answered from cluster metadata — the model
+                # stays parked, no demand signal is generated
+                self.probe_answers[model] = \
+                    self.probe_answers.get(model, 0) + 1
+                return req_id
             self.serving[model].pending.append(
                 (req_id, list(prompt), max_new_tokens, t_arrive, slo))
         else:
             inst.submit(prompt, max_new_tokens, req_id=req_id,
-                        t_arrive=t_arrive, slo=slo)
+                        t_arrive=t_arrive, slo=slo, probe=probe)
             self._harvest_shed(model, inst)
         return req_id
 
@@ -774,6 +891,14 @@ class LiveCluster:
         """Drain (model, req_id, pages_reclaimed) preemption events —
         the replay loop's feed into ``MetricsLog.on_preempt``."""
         out, self._preempt_events = self._preempt_events, []
+        return out
+
+    def take_coldstart_events(self) -> List[Tuple[float, str, str,
+                                                  float, float, float]]:
+        """Drain (t_request, model, tier, fetch_s, compile_s, t_ready)
+        cold-scale events — the replay loop's feed into
+        ``MetricsLog.on_cold_start``."""
+        out, self._coldstart_events = self._coldstart_events, []
         return out
 
     def _route(self, model: str):
@@ -1083,8 +1208,11 @@ class LiveCluster:
                     slots_busy += eng.sched.in_flight
                     # a replica's keep-alive window starts when it is
                     # first observed (fresh replicas are not instantly
-                    # "idle")
-                    if not eng.sched.done:
+                    # "idle").  Liveness/activity split: probe-only work
+                    # keeps the replica LIVE but not ACTIVE — health
+                    # checks must not reset keep-alive, or a model with
+                    # a prober can never scale to zero
+                    if eng.sched.has_active:
                         last_busy[(model, nd)] = now
                     else:
                         last_busy.setdefault((model, nd), now)
@@ -1109,7 +1237,9 @@ class LiveCluster:
                     if log else 0.0,
                     recent_arrivals=(arrivals or {}).get(model, 0),
                     recent_sheds=(sheds or {}).get(model, 0),
-                    role="prefill", pages_total=pt, pages_live=pl))
+                    role="prefill", pages_total=pt, pages_live=pl,
+                    model_nbytes=self.models[model].nbytes,
+                    model_blocks=self.models[model].n_blocks))
                 # decode pool: owns slot utilization, inter-token
                 # latency, generation pages
                 q, st, sb, idle = pool_counts(sv.locals_, True)
@@ -1123,7 +1253,9 @@ class LiveCluster:
                     n_replicas=len(sv.locals_),
                     idle_nodes=idle,
                     role="decode", pages_total=pt, pages_live=pl,
-                    recent_itl=tuple((recent_itl or {}).get(model, ()))))
+                    recent_itl=tuple((recent_itl or {}).get(model, ())),
+                    model_nbytes=self.models[model].nbytes,
+                    model_blocks=self.models[model].n_blocks))
                 (recent_itl or {}).pop(model, None)
             else:
                 q, st, sb, idle = pool_counts(sv.locals_, True)
@@ -1139,7 +1271,9 @@ class LiveCluster:
                     slo_pressure=log.slo_pressure(model, now)
                     if log else 0.0,
                     recent_arrivals=(arrivals or {}).get(model, 0),
-                    recent_sheds=(sheds or {}).get(model, 0)))
+                    recent_sheds=(sheds or {}).get(model, 0),
+                    model_nbytes=self.models[model].nbytes,
+                    model_blocks=self.models[model].n_blocks))
             recent_ttft[model] = []
         return signals
 
@@ -1159,14 +1293,15 @@ class LiveCluster:
                 nodes = [nd for nd in act.nodes
                          if nd in pool and pool[nd].sched.done]
                 if nodes and act.model not in self.scales:
-                    self.scale_down(act.model, nodes)
+                    park = getattr(act, "park", "host")
+                    self.scale_down(act.model, nodes, park=park)
                     for nd in nodes:
                         # a later re-scale-up of this node must start a
                         # fresh keep-alive window, not inherit this one
                         last_busy.pop((act.model, nd), None)
                     log.on_scale(now, "down", act.model,
                                  f"{act.reason}: -{len(nodes)} nodes "
-                                 f"→ host tier")
+                                 f"→ {park} tier")
         # several models asking for nodes in the same decision round
         # contend for the free pool: the arbiter divides it weighted by
         # per-model SLO pressure (uncontended asks are granted in full).
@@ -1361,6 +1496,14 @@ class LiveCluster:
                 r = arrivals[idx]
                 idx += 1
                 prompt = prompt_fn(r)
+                if r.probe:
+                    # health checks never enter the metrics log (they
+                    # are not demand — see the liveness/activity split),
+                    # so replay convergence does not wait on them either
+                    self.submit(r.model, prompt, r.out_tokens,
+                                req_id=r.req_id, t_arrive=r.t_arrive,
+                                probe=True)
+                    continue
                 log.on_arrival(r.req_id, r.model, r.t_arrive, len(prompt),
                                slo=r.slo)
                 arr_count[r.model] = arr_count.get(r.model, 0) + 1
@@ -1385,6 +1528,11 @@ class LiveCluster:
                     seen_done.add(rid)      # shed is terminal: converge
             for model, rid, pages in self.take_preempt_events():
                 log.on_preempt(now, model, rid, pages=pages)
+            for (t_req, model, tier, fetch_s, compile_s,
+                 t_ready) in self.take_coldstart_events():
+                log.on_cold_start(t_req, model, tier, fetch_s, compile_s,
+                                  t_ready,
+                                  slo_budget=autoscaler.config.coldstart_slo)
             self._observe(now, log, recent_ttft, seen_first, seen_done,
                           harvested, recent_itl, seen_decode)
             if idx >= len(arrivals) and not self.scales \
@@ -1410,7 +1558,8 @@ class LiveCluster:
     def results(self, model: str) -> Dict[int, List[int]]:
         """req_id → generated tokens, across every instance the request
         may have touched (pipelines, handoffs, locals)."""
-        out: Dict[int, List[int]] = {}
+        out: Dict[int, List[int]] = dict(
+            self._retired_results.get(model, {}))
         sv = self.serving[model]
         for pinst in sv.pipes:
             out.update({rid: s.generated

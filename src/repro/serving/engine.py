@@ -305,7 +305,8 @@ class ContinuousBatchingEngine:
                req_id: Optional[int] = None,
                eos_id: Optional[int] = None,
                t_arrive: Optional[float] = None,
-               slo: Optional["SLOClass"] = None) -> int:
+               slo: Optional["SLOClass"] = None,
+               probe: bool = False) -> int:
         if req_id is None:
             req_id = self._next_id
         self._next_id = max(self._next_id, req_id) + 1
@@ -325,7 +326,8 @@ class ContinuousBatchingEngine:
             self._eager = True
         res = self.sched.submit(SeqState(req_id, list(prompt),
                                          max_new_tokens, eos_id=eos_id,
-                                         t_arrive=t_arrive, slo=slo))
+                                         t_arrive=t_arrive, slo=slo,
+                                         probe=probe))
         if res.shed:
             self.shed_log.append((req_id,
                                   slo.name if slo is not None else "",

@@ -153,12 +153,34 @@ class ScaleEvent:
     detail: str = ""
 
 
+@dataclasses.dataclass
+class ColdStartEvent:
+    """One cold (non-GPU-source) scale event's latency breakdown: where
+    the startup time actually went — bytes moved (``fetch_seconds``,
+    pipeline-overlapped when the loading engine is on) vs executables
+    built (``compile_seconds``) — plus when the first replica became
+    servable (``t_ready``) and the per-model budget it was judged
+    against (``slo_budget``; None = unbudgeted)."""
+    t: float                # when the scale was requested
+    model: str
+    tier: str               # source tier: host | ssd | remote | registry
+    fetch_seconds: float
+    compile_seconds: float
+    t_ready: float          # first replica servable (absolute clock)
+    slo_budget: Optional[float] = None
+
+    @property
+    def startup(self) -> float:
+        return self.t_ready - self.t
+
+
 class MetricsLog:
     """Accumulates per-request timings + scale events for one run."""
 
     def __init__(self) -> None:
         self.requests: Dict[int, RequestMetric] = {}
         self.scale_events: List[ScaleEvent] = []
+        self.cold_starts: List[ColdStartEvent] = []
         self.gpu_seconds: float = 0.0
         # role → GPU-seconds burned by instances of that role ("unified"
         # when the runtime doesn't split pools).  Sums to gpu_seconds
@@ -221,6 +243,16 @@ class MetricsLog:
                  detail: str = "") -> None:
         self.scale_events.append(ScaleEvent(t, kind, model, detail))
 
+    def on_cold_start(self, t: float, model: str, tier: str,
+                      fetch_seconds: float, compile_seconds: float,
+                      t_ready: float,
+                      slo_budget: Optional[float] = None) -> None:
+        """A scale-up had to materialize a replica from a non-GPU tier —
+        record where the startup latency went (fetch vs compile)."""
+        self.cold_starts.append(ColdStartEvent(
+            t, model, tier, fetch_seconds, compile_seconds, t_ready,
+            slo_budget))
+
     def on_preempt(self, t: float, model: str, req_id: int,
                    pages: int = 0) -> None:
         """A live slot was preempted (its sequence parked, ``pages``
@@ -255,6 +287,15 @@ class MetricsLog:
 
     def e2e_percentile(self, q: float) -> float:
         return percentile(self.e2es(), q)
+
+    def first_token_gap(self, e: ColdStartEvent) -> Optional[float]:
+        """Seconds from the cold scale's request to the first token the
+        model produced at-or-after it — what the cold start actually
+        cost the first user; None when no such token was observed."""
+        ts = [m.t_first_token for m in self.requests.values()
+              if m.model == e.model and m.t_first_token is not None
+              and m.t_first_token >= e.t]
+        return min(ts) - e.t if ts else None
 
     def scale_ups(self) -> List[ScaleEvent]:
         return [e for e in self.scale_events if e.kind == "up"]
@@ -356,6 +397,27 @@ class MetricsLog:
             out["pages_reclaimed"] = float(self.pages_reclaimed)
             out["n_shed"] = float(sum(
                 1 for m in self.requests.values() if m.shed))
+        # cold-start breakdown: emitted only when a cold (non-GPU-tier)
+        # scale actually happened — same NaN-gate convention as above
+        if self.cold_starts:
+            out["cold_starts"] = float(len(self.cold_starts))
+            out["cold_fetch_seconds_mean"] = (
+                sum(e.fetch_seconds for e in self.cold_starts)
+                / len(self.cold_starts))
+            out["cold_compile_seconds_mean"] = (
+                sum(e.compile_seconds for e in self.cold_starts)
+                / len(self.cold_starts))
+            gaps = [g for g in (self.first_token_gap(e)
+                                for e in self.cold_starts)
+                    if g is not None]
+            if gaps:
+                out["cold_first_token_gap_p50"] = percentile(gaps, 50)
+                out["cold_first_token_gap_p99"] = percentile(gaps, 99)
+            budgeted = [e for e in self.cold_starts
+                        if e.slo_budget is not None]
+            if budgeted:
+                out["cold_start_slo_miss"] = float(sum(
+                    1 for e in budgeted if e.startup > e.slo_budget))
         classed = self.by_class()
         if classed:
             out["slo_attainment"] = self.slo_attainment()
@@ -382,6 +444,7 @@ def merge(logs: Sequence[MetricsLog]) -> MetricsLog:
         assert not overlap, f"duplicate req_ids across logs: {overlap}"
         out.requests.update(lg.requests)
         out.scale_events.extend(lg.scale_events)
+        out.cold_starts.extend(lg.cold_starts)
         out.gpu_seconds += lg.gpu_seconds
         for role, secs in lg.gpu_seconds_by_role.items():
             out.gpu_seconds_by_role[role] = (
@@ -393,4 +456,5 @@ def merge(logs: Sequence[MetricsLog]) -> MetricsLog:
         for model, ids in lg._open.items():
             out._open.setdefault(model, set()).update(ids)
     out.scale_events.sort(key=lambda e: e.t)
+    out.cold_starts.sort(key=lambda e: e.t)
     return out

@@ -256,6 +256,10 @@ class SeqState:
     # (``PageTable.bind``): the engine's prefill skips exactly these and
     # runs only the suffix through the model
     shared_tokens: int = 0
+    # health-check traffic: runs like any request but does not count as
+    # *activity* — the autoscaler's keep-alive clock ignores probe-only
+    # replicas so a parked model's prober can't hold it at one replica
+    probe: bool = False
 
     @property
     def deadline(self) -> float:
@@ -769,3 +773,14 @@ class Scheduler:
     def done(self) -> bool:
         return not self.queue and not self.resume_queue \
             and self.in_flight == 0
+
+    @property
+    def has_active(self) -> bool:
+        """Any NON-probe work anywhere on the instance.  The activity
+        half of the liveness/activity split: ``done`` (liveness) says
+        whether the replica can be torn down right now, ``has_active``
+        says whether real traffic should reset its keep-alive window —
+        probe requests keep a replica live without keeping it *busy*."""
+        return any(s is not None and not s.probe for s in self.slots) \
+            or any(not s.probe for s in self.queue) \
+            or any(not s.probe for s in self.resume_queue)

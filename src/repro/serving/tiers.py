@@ -23,7 +23,7 @@ from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Set
 
 from repro.core.multicast import (DEFAULT_LINK_BW, DEFAULT_STEP_OVERHEAD,
-                                  LinkModel)
+                                  LinkModel, RestorePlan, pipelined_restore)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,6 +39,12 @@ class HardwareProfile:
     gpu_mem_models: int = 1          # full model replicas per node GPU
     host_mem_models: int = 3         # paper §2.3 simulation setting
     nccl_group_init: float = 0.30    # s (paper §7.2: 100s of ms)
+    # cold-start fast path (ServerlessLLM-style multi-tier loading):
+    # fixed cost to open a block-granular snapshot (metadata + mmap),
+    # and the one-time jit/compile cost a replica pays when the
+    # persistent compile cache misses (0 ⇒ compilation not modelled)
+    snapshot_restore_s: float = 0.02
+    jit_compile_s: float = 0.0
 
     def link_model(self) -> LinkModel:
         """The multicast step-time model this profile calibrates."""
@@ -54,6 +60,31 @@ class HardwareProfile:
               "registry": self.remote_bw}[tier]
         return nbytes / bw
 
+    def restore_stages(self, tier: str):
+        """(overhead, ordered per-stage bandwidths) a restore from
+        ``tier`` moves through before the bytes are GPU-resident.  The
+        'ssd' path is the snapshot tier: NVMe read then host→GPU copy,
+        plus the fixed snapshot-open cost; 'remote'/'registry' stage
+        through the puller's host memory the same way."""
+        return {
+            "gpu": (0.0, ()),
+            "host": (0.0, (self.host_to_gpu_bw,)),
+            "ssd": (self.snapshot_restore_s,
+                    (self.ssd_bw, self.host_to_gpu_bw)),
+            "remote": (0.0, (self.link_bw, self.host_to_gpu_bw)),
+            "registry": (0.0, (self.remote_bw, self.host_to_gpu_bw)),
+        }[tier]
+
+    def restore_plan(self, nbytes: float, n_chunks: int, tier: str,
+                     pipelined: bool = True) -> RestorePlan:
+        """Chunked multi-stage restore timing from ``tier`` to GPU.
+        Pipelined, chunks overlap across stages (execute-while-load can
+        start at ``t_first``); naive reproduces the blocking whole-blob
+        fetch each stage at a time."""
+        overhead, bws = self.restore_stages(tier)
+        return pipelined_restore(nbytes, n_chunks, bws,
+                                 overhead=overhead, pipelined=pipelined)
+
 
 H800 = HardwareProfile(name="h800", hbm_bw=3350e9, peak_flops=990e12)
 
@@ -63,13 +94,16 @@ class LRUCache:
 
     Optionally carries a payload per model (the live cluster stores the
     packed block shard there; the simulator stores nothing) — evicting a
-    model drops its payload."""
+    model drops its payload, unless a ``spill`` callback is installed
+    (``ModelManager`` wires one so payload-carrying evictions demote to
+    the SSD snapshot tier instead of vanishing)."""
 
     def __init__(self, capacity: int):
         self.capacity = capacity
         self._d: "OrderedDict[str, float]" = OrderedDict()
         self._payload: Dict[str, Any] = {}
         self.evictions: List[tuple] = []     # (model, t_in, t_out)
+        self.spill = None                    # (model, payload, now) -> None
 
     def touch(self, model: str, now: float, payload: Any = None) -> None:
         if payload is not None:
@@ -80,7 +114,9 @@ class LRUCache:
         self._d[model] = now
         while len(self._d) > self.capacity:
             old, t_in = self._d.popitem(last=False)
-            self._payload.pop(old, None)
+            dropped = self._payload.pop(old, None)
+            if dropped is not None and self.spill is not None:
+                self.spill(old, dropped, now)
             self.evictions.append((old, t_in, now))
 
     def get(self, model: str) -> Any:
@@ -124,6 +160,10 @@ class ModelManager:
     GPU tier: up to ``gpu_capacity`` resident models (unpacked, servable).
     Host tier: ``host_cache`` LRU of packed shards (fallback on
     scale-down; the locality-driven startup's warm source).
+    SSD tier: ``ssd`` block-granular snapshots — unbounded (NVMe is
+    cheap), fed by host-LRU pressure spills and explicit
+    ``demote_to_ssd`` parks; a restore streams back through the host
+    tier chunk-by-chunk (``HardwareProfile.restore_plan``).
     """
     node_id: int
     gpu_capacity: int = 1
@@ -131,6 +171,7 @@ class ModelManager:
         default_factory=OrderedDict)
     host_cache: LRUCache = dataclasses.field(
         default_factory=lambda: LRUCache(capacity=3))
+    ssd: Dict[str, ModelShard] = dataclasses.field(default_factory=dict)
     gpu_busy_since: Dict[str, float] = dataclasses.field(
         default_factory=dict)
     # host-tier holding pen for preempted sequences: model → req_id →
@@ -139,6 +180,13 @@ class ModelManager:
     # the GPU pool stops paying for a parked sequence entirely.
     parked: Dict[str, "OrderedDict[int, Any]"] = dataclasses.field(
         default_factory=dict)
+
+    def __post_init__(self) -> None:
+        # host-LRU pressure spills payload-carrying shards down to the
+        # snapshot tier instead of dropping them — a later cold start
+        # restores from local NVMe rather than the remote registry
+        self.host_cache.spill = \
+            lambda model, shard, now: self.ssd.setdefault(model, shard)
 
     # -------------------------------------------------------- tier queries
     @property
@@ -212,6 +260,35 @@ class ModelManager:
         self.admit(model, shard.n_blocks, now, shard=shard)
         return shard
 
+    def demote_to_ssd(self, model: str, now: float) -> bool:
+        """Host → SSD park (scale-to-zero): move the packed shard out of
+        the host LRU into a block-granular snapshot, freeing the host
+        slot.  Metadata-only entries park as metadata-only snapshots (the
+        simulator's tier bookkeeping).  Returns False when the model held
+        no host-tier entry at all."""
+        if model not in self.host_cache:
+            return False
+        shard = self.host_cache.pop(model)
+        self.ssd[model] = shard if shard is not None \
+            else ModelShard(model, 0)
+        return True
+
+    def snapshot(self, model: str) -> Optional[ModelShard]:
+        """The model's SSD snapshot, if one exists (payload or metadata)."""
+        return self.ssd.get(model)
+
+    def promote_from_ssd(self, model: str) -> Optional[ModelShard]:
+        """Take the snapshot out of the SSD tier for a restore.  The
+        caller streams it up through host memory (restore_plan prices the
+        pipeline) and admits it to the GPU tier.  Payload-less snapshots
+        return None (cold miss — restore from the registry instead) but
+        stay recorded so tier accounting still sees the park."""
+        shard = self.ssd.get(model)
+        if shard is None or not shard.buffers:
+            return None
+        del self.ssd[model]
+        return shard
+
     # ------------------------------------------- preempted-sequence park
     def park_seq(self, model: str, req_id: int, record: Any) -> None:
         """Park a preempted sequence's record in host memory (FIFO per
@@ -253,6 +330,12 @@ class ClusterState:
 
     def free_nodes(self) -> List[int]:
         return [n.node_id for n in self.nodes if n.gpu_free]
+
+    def ssd_nodes(self, model: str) -> List[int]:
+        """Nodes holding a local SSD snapshot of ``model`` with a free
+        GPU slot — the cheapest cold restore source."""
+        return [n.node_id for n in self.nodes
+                if model in n.ssd and n.gpu_free]
 
     # ---------------------- GPU occupancy accounting ----------------------
     def occupy(self, node_id: int, model: str, now: float) -> None:

@@ -58,6 +58,10 @@ class Request:
     # multi-tenant prefix sharing: requests of one tenant open with the
     # same prompt prefix (system prompt / RAG context) — None = no tenant
     tenant: Optional[int] = None
+    # health-check/probe traffic: served like any request when a replica
+    # exists, but NOT activity — a probe must never reset keep-alive or
+    # hold a model out of scale-to-zero (zepfu SCALE_TO_ZERO pattern)
+    probe: bool = False
 
     @property
     def deadline(self) -> float:
@@ -231,6 +235,60 @@ def shared_prefix_workload(rps: float, duration: float, *, model: str,
         vocab_size, prefix_len=prefix_len, kind=kind, n_docs=n_docs,
         seed=seed)
     return reqs, prompt_fn
+
+
+def probe_trace(model: str, *, period: float, duration: float,
+                start: float = 0.0, prompt_len: int = 1,
+                out_tokens: int = 1, req_id0: int = 10_000_000
+                ) -> List[Request]:
+    """Deterministic health-check stream: one tiny probe every ``period``
+    seconds.  Probes carry ``probe=True`` so the runtime answers them
+    without counting them as activity — the regression scenario for the
+    liveness/activity split is exactly this trace against an otherwise
+    idle model, which must still scale to zero."""
+    reqs = []
+    t, i = start, 0
+    while t < duration:
+        reqs.append(Request(req_id0 + i, model, float(t), prompt_len,
+                            out_tokens, probe=True))
+        i += 1
+        t += period
+    return reqs
+
+
+def diurnal_trace(n_models: int, duration: float, *, n_hot: int = 4,
+                  hot_rpm: float = 30.0, cold_rpm: float = 0.5,
+                  day: float = 0.0, seed: int = 0,
+                  prompt_len: int = 256, out_tokens: int = 16,
+                  slo: Optional[SLOClass] = None,
+                  slo_mix: Optional[Sequence[Tuple[SLOClass, float]]] = None
+                  ) -> List[Request]:
+    """Diurnal many-model registry trace (the scale-to-zero headline
+    scenario): ``n_models`` registered, only ``n_hot`` of them hot.  Hot
+    models arrive at ``hot_rpm``; the long tail at ``cold_rpm`` — most
+    tail models see a handful of requests separated by minutes of
+    silence, which is where keep-alive either burns GPU-seconds or
+    scale-to-zero eats a cold start.  ``day`` > 0 modulates both rates
+    sinusoidally with that period (trough = 20% of peak); 0 disables
+    the modulation (short benches).  Deterministic given the seed."""
+    rng = np.random.default_rng(seed)
+    shape = (lambda t: 0.6 + 0.4 * math.sin(2 * math.pi * t / day)) \
+        if day > 0 else (lambda t: 1.0)
+    reqs = []
+    rid = 0
+    for m in range(n_models):
+        rpm = hot_rpm if m < n_hot else cold_rpm
+        ts = _poisson_arrivals(lambda t: shape(t) * rpm / 60.0,
+                               duration, rng)
+        for t in ts:
+            reqs.append(Request(rid, f"model-{m:03d}", float(t),
+                                prompt_len, out_tokens, slo=slo))
+            rid += 1
+    reqs.sort(key=lambda r: r.t_arrive)
+    reqs = [dataclasses.replace(r, req_id=i) for i, r in enumerate(reqs)]
+    if slo_mix is not None:
+        reqs = assign_slo(reqs, slo_mix, seed=seed + 1)
+    return reqs
 
 
 def multi_model_trace(n_models: int, per_model_rpm: float, duration: float,

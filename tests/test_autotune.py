@@ -112,7 +112,16 @@ def test_cache_path_env_override(monkeypatch, tmp_path):
     monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "c.json"))
     assert cache_path() == str(tmp_path / "c.json")
     monkeypatch.delenv("REPRO_AUTOTUNE_CACHE")
-    assert cache_path().endswith("autotune.json")
+    # shared cache layout: the backend device kind is part of the
+    # filename, so tables from different device kinds never mix
+    from repro.kernels.compile_cache import backend_kind
+    assert cache_path().endswith(f"autotune_{backend_kind()}.json")
+
+
+def test_cache_path_respects_cache_dir(monkeypatch, tmp_path):
+    monkeypatch.delenv("REPRO_AUTOTUNE_CACHE", raising=False)
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    assert cache_path().startswith(str(tmp_path))
 
 
 def test_paged_geometry_auto_reads_cache(monkeypatch, tmp_path):

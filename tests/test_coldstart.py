@@ -1,0 +1,388 @@
+"""Cold-start fast path (scale-to-zero + pipelined multi-tier loading +
+persistent compile caches).
+
+Covers the PR's tentpole end to end: the chunked ``RestorePlan`` math
+(1-chunk pipelined == naive; pipelining strictly beats blocking on any
+multi-stage path), the three-tier ``ModelManager`` lifecycle
+(GPU→host→SSD park and back, bit-equal tokens after a
+park-to-snapshot→restore round trip), the ``CompileCache`` persistence
+semantics, the autoscaler's cold-start-SLO park-tier pick and true
+min_replicas=0 scale-down, and the liveness/activity split — the
+regression scenario being a model receiving ONLY health probes, which
+must still scale to zero and have its probes answered at the control
+plane afterwards."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.multicast import pipelined_restore
+from repro.kernels.compile_cache import (CompileCache, backend_kind,
+                                         cache_file, compile_key)
+from repro.models import init_params
+from repro.serving.autoscaler import (Autoscaler, AutoscalerConfig,
+                                      LoadSignals, ScaleDown)
+from repro.serving.cluster import LiveCluster
+from repro.serving.engine import InferenceEngine
+from repro.serving.metrics import MetricsLog, merge
+from repro.serving.scheduler import Scheduler, SeqState
+from repro.serving.tiers import ClusterState, HardwareProfile, ModelShard
+from repro.serving.workload import Request, diurnal_trace, probe_trace
+
+MAX_LEN = 48
+_CTX = {}
+
+
+def _ctx():
+    if not _CTX:
+        cfg = reduced(get_config("stablelm-1.6b"), d_model=64)
+        params = init_params(cfg, jax.random.PRNGKey(1))
+        _CTX["m"] = (cfg, params)
+        _CTX["ref"] = InferenceEngine(cfg, params, max_len=MAX_LEN)
+    return _CTX
+
+
+def _reference(prompt, n_tok):
+    toks = _ctx()["ref"].generate(
+        {"tokens": jnp.asarray(prompt, jnp.int32)[None]}, n_tok,
+        cache_len=MAX_LEN)
+    return list(map(int, toks[0]))
+
+
+# ------------------------------------------------------ restore-plan math
+def test_restore_plan_one_chunk_equals_naive():
+    for bws in [(5e9,), (5e9, 64e9), (1.25e9, 64e9, 64e9)]:
+        pipe = pipelined_restore(1e9, 1, bws, overhead=0.02)
+        naive = pipelined_restore(1e9, 1, bws, overhead=0.02,
+                                  pipelined=False)
+        assert pipe.t_total == pytest.approx(naive.t_total)
+        assert pipe.t_total == pytest.approx(
+            0.02 + sum(1e9 / b for b in bws))
+
+
+def test_restore_plan_pipelined_beats_naive_multistage():
+    """With >1 chunk and >1 stage, overlap strictly wins; total ==
+    one-chunk fill + (n-1) * bottleneck; t_first is the fill only."""
+    n, nb = 8, 1e9
+    bws = (5e9, 64e9)
+    pipe = pipelined_restore(nb, n, bws)
+    naive = pipelined_restore(nb, n, bws, pipelined=False)
+    chunk = nb / n
+    fill = sum(chunk / b for b in bws)
+    bottleneck = max(chunk / b for b in bws)
+    assert pipe.t_first == pytest.approx(fill)
+    assert pipe.t_total == pytest.approx(fill + (n - 1) * bottleneck)
+    assert pipe.t_total < naive.t_total
+    # execute-while-load hook: the first chunk lands a full stage-sum
+    # earlier than the naive blob
+    assert pipe.t_first < naive.t_total / 2
+    # chunk arrival times are monotone and end at t_total
+    times = [pipe.t_chunk(i) for i in range(n)]
+    assert times == sorted(times)
+    assert times[-1] == pytest.approx(pipe.t_total)
+
+
+def test_profile_restore_plan_matches_fetch_seconds_on_host():
+    """Single-stage host restore is bandwidth-bound with or without
+    pipelining — identical to the legacy ``fetch_seconds``; the SSD path
+    stages through host memory and adds the snapshot-open overhead."""
+    hw = HardwareProfile()
+    nb = 26e9
+    host = hw.restore_plan(nb, 8, "host")
+    assert host.t_total == pytest.approx(hw.fetch_seconds(nb, "host"))
+    ssd = hw.restore_plan(nb, 8, "ssd")
+    ssd_naive = hw.restore_plan(nb, 8, "ssd", pipelined=False)
+    assert ssd_naive.t_total == pytest.approx(
+        hw.snapshot_restore_s + nb / hw.ssd_bw + nb / hw.host_to_gpu_bw)
+    assert hw.snapshot_restore_s < ssd.t_total < ssd_naive.t_total
+
+
+# ------------------------------------------------------ three-tier manager
+def test_model_manager_three_tier_lifecycle():
+    """GPU → host (demote) → SSD (explicit park) → promote_from_ssd;
+    payload-less snapshots are recorded but never restorable."""
+    hw = HardwareProfile(host_mem_models=2)
+    cs = ClusterState(2, hw)
+    mm = cs.nodes[0]
+    shard = ModelShard("a", 2, buffers={0: b"x", 1: b"y"})
+    mm.admit("a", 2, 0.0, shard=shard)
+    assert cs.gpu_nodes("a") == [0] and cs.ssd_nodes("a") == []
+    mm.demote("a", 1.0)
+    assert "a" in mm.host_cache and mm.snapshot("a") is None
+    assert mm.demote_to_ssd("a", 2.0)
+    assert "a" not in mm.host_cache          # host LRU slot freed
+    assert cs.ssd_nodes("a") == [0]
+    assert mm.snapshot("a").buffers == {0: b"x", 1: b"y"}
+    got = mm.promote_from_ssd("a")
+    assert got is shard and mm.snapshot("a") is None
+    # payload-less park (simulator metadata): recorded, not restorable
+    mm2 = cs.nodes[1]
+    mm2.admit("b", 2, 0.0)
+    mm2.demote("b", 1.0)
+    assert mm2.demote_to_ssd("b", 2.0)
+    assert mm2.promote_from_ssd("b") is None
+    assert mm2.snapshot("b") is not None     # accounting still sees it
+    assert not mm.demote_to_ssd("zzz", 0.0)  # nothing held anywhere
+
+
+def test_host_lru_pressure_spills_payload_to_ssd():
+    """Host-LRU eviction of a payload-carrying shard lands in the SSD
+    tier (the spill hook) instead of vanishing; metadata-only entries
+    still evict silently."""
+    hw = HardwareProfile(host_mem_models=1)
+    cs = ClusterState(1, hw)
+    mm = cs.nodes[0]
+    mm.host_cache.touch("a", 0.0,
+                        payload=ModelShard("a", 1, buffers={0: b"x"}))
+    mm.host_cache.touch("b", 1.0)            # evicts a → spill
+    assert "a" not in mm.host_cache
+    assert mm.snapshot("a").buffers == {0: b"x"}
+    mm.host_cache.touch("c", 2.0)            # evicts payload-less b
+    assert mm.snapshot("b") is None
+
+
+# --------------------------------------------------------- compile cache
+def test_compile_cache_persistence_and_counters(tmp_path):
+    p = str(tmp_path / "compile_cpu.json")
+    cfg = _ctx()["m"][0]
+    key = compile_key(cfg, 2, MAX_LEN, "xla")
+    c1 = CompileCache(p)
+    assert not c1.check(key)                 # miss: pays, publishes
+    assert c1.check(key)                     # hit in-memory
+    assert (c1.hits, c1.misses) == (1, 1)
+    c2 = CompileCache(p)                     # replica death → reload
+    assert c2.check(key)                     # artifact survived on disk
+    assert (c2.hits, c2.misses) == (1, 0)
+    # key covers everything that changes the executable
+    assert key != compile_key(cfg, 4, MAX_LEN, "xla")
+    assert key != compile_key(cfg, 2, MAX_LEN, "pallas")
+    assert key != compile_key(cfg, 2, MAX_LEN, "xla", shared=True)
+    assert key != compile_key(cfg, 2, MAX_LEN, "xla", role="prefill")
+
+
+def test_compile_cache_schema_drop(tmp_path):
+    p = tmp_path / "compile_cpu.json"
+    p.write_text('{"schema": 0, "entries": {"stale": {"built": true}}}')
+    c = CompileCache(str(p))
+    assert "stale" not in c                  # wholesale drop on mismatch
+
+
+def test_shared_cache_layout_filenames(monkeypatch, tmp_path):
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    path = cache_file("compile")
+    assert path.startswith(str(tmp_path))
+    assert path.endswith(f"compile_{backend_kind()}.json")
+
+
+# ----------------------------------------------- autoscaler: park + zero
+def _sig(**kw):
+    base = dict(model="m", queue_depth=0, slots_total=2, slots_busy=0,
+                nodes_busy=1, slots_per_instance=2, n_replicas=1,
+                idle_nodes=[(0, 99.0)], model_nbytes=26e9,
+                model_blocks=8)
+    base.update(kw)
+    return LoadSignals(**base)
+
+
+def test_park_tier_picks_cheapest_within_budget():
+    hw = HardwareProfile()
+    nb = 26e9
+    ssd_t = hw.restore_plan(nb, 8, "ssd").t_total
+    host_t = hw.restore_plan(nb, 8, "host").t_total
+    assert host_t < ssd_t
+    mk = lambda slo: Autoscaler(AutoscalerConfig(coldstart_slo=slo),
+                                hw=hw)
+    assert mk(ssd_t + 1).park_tier(_sig()) == "ssd"
+    assert mk((host_t + ssd_t) / 2).park_tier(_sig()) == "host"
+    assert mk(host_t / 2).park_tier(_sig()) == "gpu"
+    # no budget / no hw / no size → legacy host parking
+    assert Autoscaler(hw=hw).park_tier(_sig()) == "host"
+    assert mk(ssd_t + 1).park_tier(_sig(model_nbytes=0.0)) == "host"
+    assert Autoscaler(AutoscalerConfig(coldstart_slo=1.0)) \
+        .park_tier(_sig()) == "host"
+
+
+def test_scale_down_parks_per_budget_and_floors_at_gpu():
+    """ScaleDown carries the park tier; an impossible budget degenerates
+    to an effective min_replicas floor of 1 (no tier fits → replica
+    stays resident)."""
+    hw = HardwareProfile()
+    asc = Autoscaler(AutoscalerConfig(keepalive=1.0, coldstart_slo=1e4),
+                     hw=hw)
+    acts = asc.decide(10.0, [_sig()])
+    assert len(acts) == 1 and isinstance(acts[0], ScaleDown)
+    assert acts[0].park == "ssd" and acts[0].nodes == (0,)
+    tight = Autoscaler(AutoscalerConfig(keepalive=1.0, coldstart_slo=1e-6),
+                       hw=hw)
+    assert tight.decide(10.0, [_sig()]) == []    # floor of 1: stays up
+    # legacy config: min_replicas=0 still releases, parking to host
+    legacy = Autoscaler(AutoscalerConfig(keepalive=1.0))
+    acts = legacy.decide(10.0, [_sig()])
+    assert len(acts) == 1 and acts[0].park == "host"
+
+
+def test_forecast_prewarm_from_zero_bypasses_cooldown():
+    """A forecast-driven pre-warm of a scaled-to-zero model must not be
+    paced away by the up-cooldown — its whole point is to be ready
+    before the burst."""
+    asc = Autoscaler(AutoscalerConfig(forecast=True, forecast_alpha=1.0,
+                                      forecast_horizon=2.0,
+                                      cooldown_up=1e9))
+    zero = dict(slots_total=0, nodes_busy=0, n_replicas=0, idle_nodes=[])
+    asc.decide(0.0, [_sig(recent_arrivals=0, **zero)])
+    acts = asc.decide(1.0, [_sig(recent_arrivals=8, **zero)])
+    assert acts and "forecast" in acts[0].reason
+
+
+# ------------------------------------------- liveness/activity split
+def test_scheduler_has_active_ignores_probes():
+    s = Scheduler(n_slots=2)
+    assert not s.has_active
+    s.submit(SeqState(1, [1, 2], 2, probe=True))
+    assert s.pending == 1 and not s.has_active   # live but not active
+    s.submit(SeqState(2, [1, 2], 2))
+    assert s.has_active
+
+
+def test_probe_only_model_scales_to_zero():
+    """THE regression scenario for the liveness/activity split: a model
+    receiving only health probes must still scale to zero, with later
+    probes answered at the control plane without waking it."""
+    ctx = _ctx()
+    lc = LiveCluster(n_nodes=2, n_slots=2, max_len=MAX_LEN)
+    lc.register("m", *ctx["m"], n_blocks=2, hot_nodes=[0])
+    asc = Autoscaler(AutoscalerConfig(keepalive=0.05))
+    trace = probe_trace("m", period=0.02, duration=0.5)
+    log = lc.replay(trace, autoscaler=asc, tick_seconds=0.002,
+                    tail_seconds=0.3)
+    assert log.requests == {}                # probes are not demand
+    assert log.scale_ups() == []             # and never woke the model
+    assert len(log.scale_downs()) == 1       # scaled to zero anyway
+    assert not lc.serving["m"].locals_
+    assert lc.probe_answers["m"] > 0         # control-plane liveness
+    # the replica's blocks fell back to a warm tier, not nothing
+    assert lc.state.warm_nodes("m") or lc.state.ssd_nodes("m")
+
+
+# --------------------------------------- live cold path + snapshot trip
+def test_pipelined_cold_scale_beats_naive_on_live_clock():
+    ctx = _ctx()
+    reports = {}
+    for name, pipelined in (("pipelined", True), ("naive", False)):
+        lc = LiveCluster(n_nodes=3, max_len=MAX_LEN,
+                         pipelined_loading=pipelined)
+        lc.register("m", *ctx["m"], n_blocks=4)       # cold everywhere
+        reports[name] = lc.scale("m", 1)
+    pipe, naive = reports["pipelined"], reports["naive"]
+    assert pipe.source_tier == naive.source_tier == "ssd"
+    assert pipe.fetch_seconds < naive.fetch_seconds
+    # multicast (execute-while-load) starts at the FIRST chunk, not
+    # after the whole blob: t_source_ready is the overlap hook
+    assert pipe.t_source_ready < naive.t_source_ready
+    assert pipe.t_complete < naive.t_complete
+
+
+def test_snapshot_round_trip_bit_equal_tokens():
+    """Park-to-snapshot → restore must be a storage move only: greedy
+    tokens from the restored replica are bit-equal to the reference
+    (and to the pre-park replica)."""
+    ctx = _ctx()
+    lc = LiveCluster(n_nodes=2, n_slots=2, max_len=MAX_LEN)
+    lc.register("m", *ctx["m"], n_blocks=2, hot_nodes=[0])
+    rng = np.random.default_rng(5)
+    prompt = list(map(int, rng.integers(0, ctx["m"][0].vocab_size, 6)))
+    ref = _reference(prompt, 4)
+
+    r1 = lc.submit("m", prompt, 4)
+    lc.drain_serving()
+    # park the only replica straight to the SSD snapshot tier
+    lc.scale_down("m", [0], park="ssd")
+    assert lc.state.ssd_nodes("m") == [0]
+    assert not lc.serving["m"].locals_
+    rep = lc.scale("m", 0)                   # cold restore from snapshot
+    assert rep.source_tier == "ssd"
+    assert lc.coldstart_log and lc.coldstart_log[0][2] == "ssd"
+    lc.run_to_completion()
+    r2 = lc.submit("m", prompt, 4)
+    lc.drain_serving()
+    out = lc.results("m")
+    assert out[r1] == ref                    # pre-park (archived) tokens
+    assert out[r2] == ref                    # snapshot-restored tokens
+    # the snapshot was consumed by the restore
+    assert lc.state.ssd_nodes("m") == []
+
+
+def test_compile_cache_absorbs_restart_compile(tmp_path):
+    """With jit compilation modelled, only the FIRST cold replica of a
+    geometry pays it — across cluster (replica) restarts through the
+    on-disk cache."""
+    ctx = _ctx()
+    hw = HardwareProfile(jit_compile_s=0.5)
+    t = []
+    for _ in range(2):                       # two cluster lifetimes
+        lc = LiveCluster(n_nodes=2, max_len=MAX_LEN, hw=hw,
+                         compile_cache=CompileCache(
+                             str(tmp_path / "compile_cpu.json")))
+        lc.register("m", *ctx["m"], n_blocks=2)
+        t.append(lc.scale("m", 0).compile_seconds)
+    assert t == [0.5, 0.0]
+    # without a cache every cold start repays it
+    lc = LiveCluster(n_nodes=2, max_len=MAX_LEN, hw=hw)
+    lc.register("m", *ctx["m"], n_blocks=2)
+    assert lc.scale("m", 0).compile_seconds == 0.5
+
+
+# ------------------------------------------------------------- metrics
+def test_metrics_cold_start_breakdown_nan_gated():
+    log = MetricsLog()
+    assert "cold_starts" not in log.summary()        # gated off
+    log.on_arrival(1, "m", 0.0, 4)
+    log.on_first_token(1, 2.5)
+    log.on_finish(1, 3.0, 2)
+    log.on_cold_start(0.0, "m", "ssd", 1.5, 0.5, 2.0, slo_budget=3.0)
+    s = log.summary()
+    assert s["cold_starts"] == 1.0
+    assert s["cold_fetch_seconds_mean"] == pytest.approx(1.5)
+    assert s["cold_compile_seconds_mean"] == pytest.approx(0.5)
+    assert s["cold_first_token_gap_p50"] == pytest.approx(2.5)
+    assert s["cold_start_slo_miss"] == 0.0            # 2.0 <= 3.0
+    log.on_cold_start(5.0, "m", "ssd", 4.0, 0.0, 9.5, slo_budget=3.0)
+    assert log.summary()["cold_start_slo_miss"] == 1.0
+    # unbudgeted events never emit the miss counter
+    log2 = MetricsLog()
+    log2.on_cold_start(0.0, "m", "host", 0.4, 0.0, 0.4)
+    s2 = log2.summary()
+    assert "cold_start_slo_miss" not in s2
+    assert "cold_first_token_gap_p50" not in s2       # no tokens seen
+    # merge concatenates and re-sorts cold starts
+    merged = merge([log, log2])
+    assert [e.t for e in merged.cold_starts] == [0.0, 0.0, 5.0]
+
+
+# ------------------------------------------------------------ workload
+def test_diurnal_trace_shape():
+    reqs = diurnal_trace(20, 120.0, n_hot=2, hot_rpm=30.0, cold_rpm=0.5,
+                        day=120.0, seed=3)
+    assert [r.req_id for r in reqs] == list(range(len(reqs)))
+    assert all(reqs[i].t_arrive <= reqs[i + 1].t_arrive
+               for i in range(len(reqs) - 1))
+    per = {}
+    for r in reqs:
+        per[r.model] = per.get(r.model, 0) + 1
+    hot = sum(per.get(f"model-{m:03d}", 0) for m in range(2))
+    cold = len(reqs) - hot
+    assert hot > 5 * max(cold, 1) / 18 * 2      # hot models dominate
+    assert len(per) > 2                          # tail still shows up
+    assert reqs == diurnal_trace(20, 120.0, n_hot=2, hot_rpm=30.0,
+                                 cold_rpm=0.5, day=120.0, seed=3)
+
+
+def test_probe_trace_marks_probes():
+    reqs = probe_trace("m", period=0.5, duration=2.0)
+    assert len(reqs) == 4
+    assert all(r.probe for r in reqs)
+    assert all(reqs[i].req_id != reqs[j].req_id
+               for i in range(len(reqs)) for j in range(i))

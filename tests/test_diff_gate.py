@@ -92,7 +92,9 @@ def test_floor_fails_below_and_passes_at_floor(tmp_path):
                               "relative_ttft": 1.0,
                               "relative_itl_p99": 1.0,
                               "relative_interactive_p99": 1.0,
-                              "goodput_interactive": 0.9}
+                              "goodput_interactive": 0.9,
+                              "relative_cold_p99_ttft": 1.0,
+                              "gpu_seconds_saved_frac": 0.2}
     assert "relative_throughput" not in DEFAULT_WATCH_UP
     base, cand = _dirs(tmp_path, {"paged/relative_throughput": 0.9},
                        {"paged/relative_throughput": 0.97})
@@ -153,6 +155,42 @@ def test_overload_floors_gate_survival_stack(tmp_path):
                           1.5, ("p99",))
     assert regs == []
     assert any("floor" in n for n in notes)
+
+
+def test_coldstart_floors_gate_fast_path(tmp_path):
+    """The PR-10 pair: pipelined loading + compile cache may never lose
+    to the naive blocking fetch on cold p99 TTFT
+    (relative_cold_p99_ttft >= 1) and scale-to-zero must keep saving
+    >=20% of always-on GPU-seconds (gpu_seconds_saved_frac >= 0.2) —
+    candidate-side absolute, enforced with no committed baseline."""
+    base, cand = tmp_path / "base", tmp_path / "cand"
+    base.mkdir(), cand.mkdir()
+    _write(str(cand), "coldstart",
+           {"coldstart/relative_cold_p99_ttft": 0.95,
+            "coldstart/gpu_seconds_saved_frac": 0.1})
+    regs, _ = compare(str(base), str(cand), 1.5, ("p99",))
+    assert sorted((r[1], r[2], r[3]) for r in regs) == \
+        [("coldstart/gpu_seconds_saved_frac", 0.2, 0.1),
+         ("coldstart/relative_cold_p99_ttft", 1.0, 0.95)]
+
+
+def test_floored_metric_exempt_from_watch(tmp_path):
+    """relative_cold_p99_ttft contains the lower-is-better watch
+    substring "p99" and gpu_seconds_saved_frac contains "gpu_seconds" —
+    but both are higher-is-better ratios with absolute floors.  An
+    IMPROVEMENT beyond the threshold must not be flagged as a
+    regression; the floor alone gates them."""
+    base, cand = _dirs(tmp_path,
+                       {"coldstart/relative_cold_p99_ttft": 1.1,
+                        "coldstart/gpu_seconds_saved_frac": 0.3,
+                        "coldstart/naive/cold_ttft_p99": 1.0},
+                       {"coldstart/relative_cold_p99_ttft": 2.5,
+                        "coldstart/gpu_seconds_saved_frac": 0.9,
+                        "coldstart/naive/cold_ttft_p99": 2.0})
+    regs, _ = compare(base, cand, 1.5, ("p99", "gpu_seconds"))
+    # the un-floored p99 is still watched (2.0x growth beyond 1.5x);
+    # the floored improvements pass
+    assert [(r[1]) for r in regs] == ["coldstart/naive/cold_ttft_p99"]
 
 
 def test_custom_floor_overrides_default(tmp_path):
